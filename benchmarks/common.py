@@ -1,0 +1,26 @@
+"""Shared benchmark helpers.  Output convention (benchmarks.run):
+``name,us_per_call,derived`` CSV lines."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_iters(fn, n_warmup=1, n_iters=3) -> float:
+    """Median wall time of fn() in microseconds."""
+    for _ in range(n_warmup):
+        fn()
+    times = []
+    for _ in range(n_iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))

@@ -1,0 +1,45 @@
+"""Figure 5 analog: matrix density vs {horizontal, vertical, selective,
+hybrid} — running time and communicated data (physical + logical elements).
+
+Paper claims reproduced here (asserted in test_benchmarks.py):
+- vertical beats horizontal on sparse graphs; horizontal wins when dense;
+- selective always matches the winner (Eq. 5);
+- hybrid communicates the least logical data everywhere."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import PMVEngine, pagerank
+from repro.graph import rmat
+
+N_LOG2 = 10
+DENSITIES = [4_000, 16_000, 64_000, 200_000]   # edges at n=1024
+ITERS = 5
+B = 8
+
+
+def run(return_rows=False):
+    rows = {}
+    for m_target in DENSITIES:
+        n = 1 << N_LOG2
+        edges = rmat(N_LOG2, m_target, seed=3)
+        m = len(edges)
+        density = m / n**2
+        spec = pagerank(n)
+        for strategy in ["horizontal", "vertical", "selective", "hybrid"]:
+            eng = PMVEngine(edges, n, b=B, strategy=strategy, theta="auto")
+            res = eng.run(spec, max_iters=ITERS, tol=0.0)
+            per_iter = np.median([r["wall_s"] for r in res.per_iter[1:]]) * 1e6
+            phys = res.physical_elems_per_iter
+            io = res.per_iter[-1]["io_elems"]          # paper's I/O metric
+            rows[(m_target, strategy)] = dict(
+                time_us=per_iter, physical=phys, io=io,
+                resolved=res.strategy, density=density)
+            emit(f"fig5/{strategy}/density={density:.1e}", per_iter,
+                 f"io_elems={io:.0f};physical={phys:.0f};resolved={res.strategy}")
+    return rows if return_rows else None
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Figure 6 analog: effect of θ on PMV_hybrid running time and I/O.
+
+θ=0 degenerates to horizontal, θ=inf to vertical; the paper's Twitter curve
+is U-shaped with the best I/O near θ≈100-200.  We sweep θ on a skewed RMAT
+graph, report measured physical/logical exchange, and compare the measured
+argmin against the Lemma-3.3 θ*."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import PMVEngine, cost_model, pagerank
+from repro.graph import rmat
+from repro.graph.stats import compute_stats
+
+N_LOG2 = 14
+EDGES = 80_000
+ITERS = 5
+B = 16
+THETAS = [0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 64.0, 256.0, np.inf]
+
+
+def run(return_rows=False):
+    n = 1 << N_LOG2
+    edges = rmat(N_LOG2, EDGES, seed=5)
+    spec = pagerank(n)
+    stats = compute_stats(edges, n)
+    theta_star, pred_cost = cost_model.theta_star(B, n, stats)
+
+    rows = {}
+    for theta in THETAS:
+        eng = PMVEngine(edges, n, b=B, strategy="hybrid", theta=theta)
+        res = eng.run(spec, max_iters=ITERS, tol=0.0)
+        per_iter = np.median([r["wall_s"] for r in res.per_iter[1:]]) * 1e6
+        io = res.per_iter[-1]["io_elems"]
+        model = cost_model.hybrid_cost(B, n, stats, theta)
+        rows[theta] = dict(time_us=per_iter, io=io, model=model)
+        emit(f"fig6/theta={theta}", per_iter, f"io_elems={io:.0f};model={model:.0f}")
+    emit("fig6/theta_star", 0.0, f"theta_star={theta_star};model_cost={pred_cost:.0f}")
+    return (rows, theta_star) if return_rows else None
+
+
+if __name__ == "__main__":
+    run()

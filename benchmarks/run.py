@@ -1,0 +1,21 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import fig1_scalability, fig5_density, fig6_theta, fig7_machines, fig8_engine, table2_algorithms
+
+    print("name,us_per_call,derived")
+    for mod in (table2_algorithms, fig1_scalability, fig5_density,
+                fig6_theta, fig7_machines, fig8_engine):
+        t0 = time.time()
+        mod.run()
+        print(f"# {mod.__name__} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Table 2 demonstration: the four GIM-V algorithms on one graph, each just
+a (combine2, combineAll, assign) triple over the same engine."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import PMVEngine, connected_components, pagerank, random_walk_with_restart, rwr_context, sssp
+from repro.graph import rmat
+
+N_LOG2 = 11
+EDGES = 40_000
+
+
+def run():
+    n = 1 << N_LOG2
+    edges = rmat(N_LOG2, EDGES, seed=13)
+    cases = [
+        ("pagerank", pagerank(n), None, dict(max_iters=80, tol=1e-6), {}),
+        ("rwr", random_walk_with_restart(n, 3), rwr_context(n, 3), dict(max_iters=80, tol=1e-6), {}),
+        ("sssp", sssp(0), None, dict(max_iters=n, tol=0.5), {}),
+        ("cc", connected_components(), None, dict(max_iters=n, tol=0.5), dict(symmetrize=True)),
+    ]
+    for name, spec, ctx, run_kw, eng_kw in cases:
+        eng = PMVEngine(edges, n, b=8, strategy="hybrid", theta="auto", **eng_kw)
+        res = eng.run(spec, ctx, **run_kw)
+        per_iter = np.mean([r["wall_s"] for r in res.per_iter]) * 1e6
+        emit(f"table2/{name}", per_iter,
+             f"iters={res.iterations};converged={res.converged};theta={res.theta}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,15 @@
+"""Batched serving example: greedy decode on three different architecture
+families (dense GQA, SSM, MoE) through the same serve_step API.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import subprocess
+import sys
+
+for arch in ["qwen3_1_7b", "mamba2_130m", "mixtral_8x22b"]:
+    print(f"=== {arch} ===")
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", arch, "--smoke",
+         "--batch", "4", "--prompt-len", "12", "--gen", "16"],
+        check=True,
+    )

@@ -1,0 +1,28 @@
+"""PMV core: the paper's contribution as a composable JAX module."""
+from repro.core.algorithms import (
+    connected_components,
+    pagerank,
+    random_walk_with_restart,
+    rwr_context,
+    sssp,
+)
+from repro.core.engine import PMVEngine, PMVResult, StepConfig, make_step
+from repro.core.gimv import GimvSpec
+from repro.core.partition import Partition, partition_graph
+from repro.core import cost_model
+
+__all__ = [
+    "GimvSpec",
+    "PMVEngine",
+    "PMVResult",
+    "StepConfig",
+    "make_step",
+    "Partition",
+    "partition_graph",
+    "pagerank",
+    "random_walk_with_restart",
+    "rwr_context",
+    "sssp",
+    "connected_components",
+    "cost_model",
+]

@@ -1,0 +1,153 @@
+"""Graph algorithms expressed on GIM-V (paper Table 2).
+
+Each factory returns a :class:`GimvSpec`.  Conventions:
+
+- PageRank / RWR use the *normalized* formulation (v sums to 1, assign uses
+  (1-d)/n resp. (1-c)*restart).  Table 2 writes the unnormalized constants
+  (0.15 + 0.85 r) which correspond to vectors scaled by n; the normalized form
+  is numerically safer at |v| ~ 6e9 and identical up to that scale factor.
+- PageRank matrix is column-stochastic: m_{i,j} = 1/out(j) for each edge
+  j -> i (computed from out-degrees at partition time via ``edge_weight``).
+  Dangling vertices (out-degree 0) leak mass, exactly as PEGASUS does; the
+  pure-numpy oracle in tests uses the same convention so results match
+  bit-for-bit semantics.
+- SSSP/CC use min-combine; unreached vertices carry +inf / their own id.
+- CC requires symmetric edges for undirected components (engine option
+  ``symmetrize=True``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gimv import GimvSpec
+
+__all__ = ["pagerank", "random_walk_with_restart", "sssp", "connected_components"]
+
+_F32_INF = np.float32(np.inf)
+
+
+def pagerank(n: int, damping: float = 0.85) -> GimvSpec:
+    """combine2 = m*v, combineAll = sum, assign = (1-d)/n + d*r."""
+    base = np.float32((1.0 - damping) / n)
+
+    def assign(v, r, ctx):
+        del v, ctx
+        return base + jnp.float32(damping) * r
+
+    def init(ids, ctx):
+        del ctx
+        return np.full(ids.shape, 1.0 / n, dtype=np.float32)
+
+    def edge_weight(out_deg_src, base_w):
+        del base_w
+        return (1.0 / np.maximum(out_deg_src, 1)).astype(np.float32)
+
+    return GimvSpec(
+        name="pagerank",
+        combine2="mul",
+        combine_all="sum",
+        dtype=np.float32,
+        assign=assign,
+        init=init,
+        edge_weight=edge_weight,
+    )
+
+
+def random_walk_with_restart(n: int, source: int, c: float = 0.85) -> GimvSpec:
+    """RWR: assign = (1-c)*1[i==source] + c*r (normalized Table-2 form).
+
+    ctx must contain 'restart': the local shard of the one-hot source vector
+    (the engine builds it from ``ctx_global['restart']``).
+    """
+
+    def assign(v, r, ctx):
+        del v
+        return jnp.float32(1.0 - c) * ctx["restart"] + jnp.float32(c) * r
+
+    def init(ids, ctx):
+        del ctx
+        return (ids == source).astype(np.float32)
+
+    def edge_weight(out_deg_src, base_w):
+        del base_w
+        return (1.0 / np.maximum(out_deg_src, 1)).astype(np.float32)
+
+    spec = GimvSpec(
+        name="rwr",
+        combine2="mul",
+        combine_all="sum",
+        dtype=np.float32,
+        assign=assign,
+        init=init,
+        edge_weight=edge_weight,
+    )
+    return spec
+
+
+def rwr_context(n: int, source: int) -> dict:
+    """Global ctx arrays for RWR (engine shards them alongside v)."""
+    restart = np.zeros(n, dtype=np.float32)
+    restart[source] = 1.0
+    return {"restart": restart}
+
+
+def sssp(source: int, default_weight: float = 1.0) -> GimvSpec:
+    """Single-source shortest path: combine2 = m+v, combineAll = min,
+    assign = min(v, r)."""
+
+    def assign(v, r, ctx):
+        del ctx
+        return jnp.minimum(v, r)
+
+    def init(ids, ctx):
+        del ctx
+        return np.where(ids == source, np.float32(0.0), _F32_INF)
+
+    def edge_weight(out_deg_src, base_w):
+        del out_deg_src
+        if base_w is None:
+            return None  # engine fills default
+        return base_w.astype(np.float32)
+
+    def delta(v, v_new):
+        return jnp.sum((v_new != v).astype(jnp.float32))
+
+    return GimvSpec(
+        name="sssp",
+        combine2="add",
+        combine_all="min",
+        dtype=np.float32,
+        assign=assign,
+        init=init,
+        edge_weight=edge_weight,
+        delta=delta,
+    )
+
+
+def connected_components() -> GimvSpec:
+    """Min-label propagation: combine2 = v_j, combineAll = min,
+    assign = min(v, r).  int32 labels = vertex ids."""
+
+    def assign(v, r, ctx):
+        del ctx
+        return jnp.minimum(v, r)
+
+    def init(ids, ctx):
+        del ctx
+        return ids.astype(np.int32)
+
+    def delta(v, v_new):
+        return jnp.sum((v_new != v).astype(jnp.float32))
+
+    return GimvSpec(
+        name="cc",
+        combine2="src",
+        combine_all="min",
+        dtype=np.int32,
+        assign=assign,
+        init=init,
+        edge_weight=None,
+        delta=delta,
+        needs_weights=False,
+    )

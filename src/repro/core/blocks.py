@@ -1,0 +1,177 @@
+"""Static-shape block-matrix layouts for pre-partitioned GIM-V.
+
+The paper partitions M into b x b sub-matrices M^(i,j).  On TPU we need
+static shapes, so a *stripe* (the b blocks co-located on one worker) is stored
+as arrays of shape [b, E_cap] padded to the max per-block edge count:
+
+- ``seg_local``: the *segment* (combineAll target) local vertex index — the
+  destination p_local.
+- ``gat_local``: the *gather* (combine2 input) local vertex index — the source
+  q_local (or, for hybrid dense regions, the slot into the compacted dense
+  vector).
+- ``w``: matrix values m_{p,q} (None when the spec never reads them, e.g. CC).
+- ``count``: per-block edge counts (mask = arange(E_cap) < count[k]).
+
+The same structure serves both placements; only the meaning of the leading
+block axis differs:
+
+- vertical stripe on worker j: leading axis = destination block i; gat_local
+  indexes the *local* sub-vector v^(j).
+- horizontal stripe on worker i: leading axis = source block jj; gat_local
+  indexes v^(jj) out of the all-gathered vector.
+
+All indices are int32 (local indices stay < n_local ~ |v|/b even at
+ClueWeb12 scale: 6.2e9 / 512 = 12.2M), which is why the layout is blocked
+rather than flat: flat global ids would overflow int32 at |v| > 2^31.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["BlockEdges", "build_stripes", "DenseRegion"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockEdges:
+    """One worker's stripe of b edge blocks, padded to a common capacity.
+
+    Arrays may be numpy (host, right after partitioning) or jnp (on device).
+    When used under shard_map, arrays carry an extra leading worker axis
+    [b_workers, b, E_cap] that shard_map splits.
+    """
+
+    seg_local: Any   # [b, E_cap] int32
+    gat_local: Any   # [b, E_cap] int32
+    w: Any | None    # [b, E_cap] f32, or None
+    count: Any       # [b] int32
+
+    @property
+    def e_cap(self) -> int:
+        return self.seg_local.shape[-1]
+
+    def astuple(self):
+        return (self.seg_local, self.gat_local, self.w, self.count)
+
+
+jax.tree_util.register_dataclass(
+    BlockEdges,
+    data_fields=["seg_local", "gat_local", "w", "count"],
+    meta_fields=[],
+)
+
+
+def _pad_to(arr: np.ndarray, length: int, fill) -> np.ndarray:
+    out = np.full((length,), fill, dtype=arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+def build_stripes(
+    seg_block: np.ndarray,
+    seg_local: np.ndarray,
+    gat_block: np.ndarray,
+    gat_local: np.ndarray,
+    w: np.ndarray | None,
+    b: int,
+    *,
+    stripe_axis: str,
+) -> tuple[list[BlockEdges], np.ndarray]:
+    """Group edges into per-worker stripes of per-block padded arrays.
+
+    stripe_axis='gat': vertical placement — worker owns all edges whose
+      *source* (gather side) lives in its block; the inner block axis is the
+      segment (destination) block.
+    stripe_axis='seg': horizontal placement — worker owns all edges whose
+      *destination* (segment side) lives in its block; the inner block axis is
+      the gather (source) block.
+
+    Returns (stripes[worker], block_nnz[b_inner, b_worker-ish]) where
+    block_nnz[i, j] = edges in sub-matrix M^(i,j) (i = seg block, j = gat
+    block) — the input of capacity sizing and cost-model validation.
+    """
+    assert stripe_axis in ("gat", "seg")
+    owner = gat_block if stripe_axis == "gat" else seg_block
+    inner = seg_block if stripe_axis == "gat" else gat_block
+
+    # Per-(owner, inner) counts -> E_cap.
+    pair = owner.astype(np.int64) * b + inner.astype(np.int64)
+    counts2d = np.bincount(pair, minlength=b * b).reshape(b, b)  # [owner, inner]
+    e_cap = max(int(counts2d.max()), 1)
+
+    # Sort edges by (owner, inner, seg_local) so segment ids are sorted
+    # within each block (enables indices_are_sorted=True downstream).
+    order = np.lexsort((seg_local, inner, owner))
+    seg_local = seg_local[order]
+    gat_local = gat_local[order]
+    ww = None if w is None else w[order]
+    owner_s = owner[order]
+    inner_s = inner[order]
+
+    # Split points per (owner, inner) in the sorted order.
+    boundaries = np.searchsorted(owner_s * b + inner_s, np.arange(b * b + 1))
+
+    stripes: list[BlockEdges] = []
+    for j in range(b):
+        seg_blocks = np.zeros((b, e_cap), dtype=np.int32)
+        gat_blocks = np.zeros((b, e_cap), dtype=np.int32)
+        w_blocks = None if w is None else np.zeros((b, e_cap), dtype=w.dtype)
+        cnt = np.zeros((b,), dtype=np.int32)
+        for i in range(b):
+            lo, hi = boundaries[j * b + i], boundaries[j * b + i + 1]
+            m = hi - lo
+            cnt[i] = m
+            if m:
+                seg_blocks[i, :m] = seg_local[lo:hi]
+                gat_blocks[i, :m] = gat_local[lo:hi]
+                if w_blocks is not None:
+                    w_blocks[i, :m] = ww[lo:hi]
+        stripes.append(BlockEdges(seg_blocks, gat_blocks, w_blocks, cnt))
+
+    if stripe_axis == "gat":
+        block_nnz = counts2d.T  # -> [seg block i, gat block j]
+    else:
+        block_nnz = counts2d   # already [seg i, gat jj]... owner==seg here
+    return stripes, block_nnz
+
+
+def structural_partial_nnz(
+    seg_block: np.ndarray, seg_local: np.ndarray, gat_block: np.ndarray, b: int
+) -> np.ndarray:
+    """nnz_struct[i, j] = |{distinct p_local : (p, q) in M^(i,j)}|.
+
+    This is the exact structural size of the partial result vector v^(i,j) in
+    PMV_vertical (paper Eq. 4 estimates its expectation); it sizes the static
+    capacity of the sparse exchange so overflow can never occur.
+    """
+    key = (seg_block.astype(np.int64) * b + gat_block.astype(np.int64)) * (
+        int(seg_local.max(initial=0)) + 1
+    ) + seg_local.astype(np.int64)
+    uniq = np.unique(key)
+    pair = uniq // (int(seg_local.max(initial=0)) + 1)
+    counts = np.bincount(pair, minlength=b * b)
+    return counts.reshape(b, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseRegion:
+    """Compacted high-out-degree ("dense", paper §3.5) vector region.
+
+    dense vertices of block k occupy slots [0, d_count[k]) of row k; the
+    global compact index of vertex q is psi(q) * d_cap + slot(q).
+    """
+
+    gather_idx: Any   # [b, d_cap] int32 — local index of each dense vertex
+    d_count: Any      # [b] int32
+    d_cap: int
+    theta: float
+
+
+jax.tree_util.register_dataclass(
+    DenseRegion,
+    data_fields=["gather_idx", "d_count"],
+    meta_fields=["d_cap", "theta"],
+)

@@ -1,0 +1,353 @@
+"""PMVEngine: pre-partition once, iterate M (x) v to convergence (paper §3.1).
+
+Two execution modes share the same placement code (placement.py):
+
+- emulation (mesh=None): all b workers' shards live on one device with an
+  explicit leading worker axis; collectives are jnp reshapes.  This is what
+  CPU tests and the paper-figure benchmarks run.
+- SPMD (mesh given): `shard_map` over the 'workers' axis; collectives are
+  real `jax.lax` ops.  The dry-run lowers this mode for the production mesh.
+
+Per-iteration the engine reports both *physical* communicated elements (the
+static buffers that actually cross ICI) and *logical* elements (value-level
+non-identity entries — the paper's I/O metric), so the benchmark figures can
+be compared against the paper's Figures 5/6 directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import cost_model, placement
+from repro.core.blocks import BlockEdges, DenseRegion
+from repro.core.gimv import GimvSpec
+from repro.core.partition import HybridMatrix, Partition, PartitionedMatrix, partition_graph
+from repro.graph.generators import symmetrize_edges
+
+__all__ = ["PMVEngine", "PMVResult", "StepConfig", "make_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    strategy: str            # 'horizontal' | 'vertical' | 'hybrid'
+    n_local: int
+    exchange: str = "sparse"  # vertical transport: 'sparse' | 'dense' | 'hier'
+    capacity: int | None = None
+    payload_dtype: str | None = None  # e.g. 'bfloat16' wire values (§Perf)
+
+
+def _stack_stripes(stripes: list[BlockEdges]) -> BlockEdges:
+    """b per-worker stripes -> arrays with a leading worker axis."""
+    return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *stripes)
+
+
+def _squeeze0(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def make_step(spec: GimvSpec, cfg: StepConfig, mesh: Mesh | None = None, axis_name: str = "workers"):
+    """Build step(matrix, v, ctx, mask) -> (v_new, delta, stats).
+
+    matrix: dict pytree of stripe / dense-region arrays, leading worker axis.
+    v/ctx/mask: blocked [b, n_local] arrays.  In SPMD mode everything is
+    sharded on the worker axis and the function is shard_map'ped; delta and
+    stats come out replicated.
+    """
+    n_local = cfg.n_local
+
+    def _placement_call(matrix, v, ctx, mask, axis):
+        if cfg.strategy == "horizontal":
+            return placement.horizontal_step(
+                spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis)
+        if cfg.strategy == "vertical":
+            import jax.numpy as _jnp
+            pd = _jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
+            return placement.vertical_step(
+                spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis,
+                exchange=cfg.exchange, capacity=cfg.capacity, payload_dtype=pd)
+        if cfg.strategy == "hybrid":
+            return placement.hybrid_step(
+                spec, matrix["sparse_stripe"], matrix["dense_stripe"], matrix["dense_region"],
+                v, ctx, mask, n_local=n_local, axis_name=axis, capacity=cfg.capacity)
+        raise ValueError(cfg.strategy)
+
+    if mesh is None:
+        def step(matrix, v, ctx, mask):
+            v_new, _r, stats = _placement_call(matrix, v, ctx, mask, None)
+            delta = spec.default_delta(v, v_new)
+            return v_new, delta, stats
+        return step
+
+    def body(matrix, v, ctx, mask):
+        matrix, v, ctx, mask = (_squeeze0(t) for t in (matrix, v, ctx, mask))
+        v_new, _r, stats = _placement_call(matrix, v, ctx, mask, axis_name)
+        delta = jax.lax.psum(spec.default_delta(v, v_new), axis_name)
+        stats = {k: (s if s.ndim == 0 else s) for k, s in stats.items()}
+        return v_new[None], delta, stats
+
+    from jax.experimental.shard_map import shard_map
+
+    sharded = P(axis_name)
+    repl = P()
+    step = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(sharded, sharded, sharded, sharded),
+        out_specs=(sharded, repl, repl),
+        check_rep=False,
+    )
+    return step
+
+
+@dataclasses.dataclass
+class PMVResult:
+    v: np.ndarray
+    iterations: int
+    converged: bool
+    strategy: str
+    theta: float | None
+    capacity: int | None
+    per_iter: list[dict]
+    totals: dict
+
+    @property
+    def physical_elems_per_iter(self) -> float:
+        if not self.per_iter:
+            return 0.0
+        last = self.per_iter[-1]
+        return float(last.get("gathered_elems", 0.0) + last.get("exchanged_elems", 0.0))
+
+
+class PMVEngine:
+    """Scalable GIM-V engine with pre-partitioning + placement selection.
+
+    strategy: 'horizontal' | 'vertical' | 'selective' (Eq. 5 auto-pick
+      between the two basics) | 'hybrid' (θ-split, the paper's best).
+    theta: float or 'auto' (= θ* argmin of Lemma 3.3).
+    exchange: 'sparse' (compacted, paper-faithful) | 'dense' (all_to_all the
+      full partial vectors — the strawman dense-collective schedule).
+    capacity: 'structural' (exact max partial nnz — overflow-free) |
+      'model' (Eq. 4/8 x slack — tighter, may overflow -> engine retries
+      with the dense exchange for that run).
+    """
+
+    def __init__(
+        self,
+        edges: np.ndarray,
+        n: int,
+        *,
+        b: int,
+        strategy: str = "selective",
+        theta: float | str = "auto",
+        psi: str = "cyclic",
+        exchange: str = "sparse",
+        capacity: str = "structural",
+        slack: float = 1.5,
+        symmetrize: bool = False,
+        base_weights: np.ndarray | None = None,
+        mesh: Mesh | None = None,
+        axis_name: str = "workers",
+    ):
+        if symmetrize:
+            edges = symmetrize_edges(edges)
+        self.edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        self.n = int(n)
+        self.b = int(b)
+        self.strategy = strategy
+        self.theta = theta
+        self.psi = psi
+        self.exchange = exchange
+        self.capacity_mode = capacity
+        self.slack = slack
+        self.base_weights = base_weights
+        self.mesh = mesh
+        self.axis_name = axis_name
+
+    # ------------------------------------------------------------------
+    def resolve_strategy(self) -> tuple[str, float | None]:
+        m = self.edges.shape[0]
+        if self.strategy in ("horizontal", "vertical"):
+            return self.strategy, None
+        if self.strategy in ("auto", "selective"):
+            return cost_model.select_strategy(self.b, self.n, m), None
+        if self.strategy == "hybrid":
+            if self.theta == "auto":
+                from repro.graph.stats import compute_stats
+                stats = compute_stats(self.edges, self.n)
+                theta, _ = cost_model.theta_star(self.b, self.n, stats)
+            else:
+                theta = float(self.theta)
+            return "hybrid", theta
+        raise ValueError(self.strategy)
+
+    def prepare(self, spec: GimvSpec, ctx: dict | None = None):
+        """Pre-partitioning (runs once; paper §3.1.1): builds device-resident
+        matrix stripes, the blocked initial vector, and the jitted step."""
+        strategy, theta = self.resolve_strategy()
+        pm, hm = partition_graph(
+            self.edges, self.n, self.b, spec,
+            psi=self.psi, base_weights=self.base_weights,
+            theta=theta if strategy == "hybrid" else None,
+        )
+        part = pm.part
+
+        if strategy == "horizontal":
+            matrix = {"stripe": _stack_stripes(pm.horizontal)}
+            capacity = None
+        elif strategy == "vertical":
+            matrix = {"stripe": _stack_stripes(pm.vertical)}
+            capacity = self._capacity(pm, None)
+        else:
+            assert hm is not None
+            matrix = {
+                "sparse_stripe": _stack_stripes(hm.sparse_vertical),
+                "dense_stripe": _stack_stripes(hm.dense_horizontal),
+                "dense_region": DenseRegion(
+                    gather_idx=hm.dense.gather_idx,
+                    d_count=hm.dense.d_count,
+                    d_cap=hm.dense.d_cap,
+                    theta=hm.dense.theta,
+                ),
+            }
+            capacity = self._capacity(pm, hm)
+
+        ids = part.global_ids_grid()            # [b, n_local]
+        real_mask = ids < self.n
+        ctx = ctx or {}
+        v0 = spec.init(ids.reshape(-1), ctx).reshape(ids.shape).astype(spec.dtype)
+        ctx_blocked = {k: part.to_blocked(np.asarray(x)) for k, x in ctx.items()}
+
+        cfg = StepConfig(strategy=strategy, n_local=part.n_local,
+                         exchange=self.exchange, capacity=capacity)
+        step = make_step(spec, cfg, self.mesh, self.axis_name)
+        donate = (1,)
+        step_jit = jax.jit(step, donate_argnums=donate)
+
+        if self.mesh is not None:
+            shard = NamedSharding(self.mesh, P(self.axis_name))
+            matrix = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), shard), matrix)
+            v0 = jax.device_put(jnp.asarray(v0), shard)
+            ctx_blocked = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), shard), ctx_blocked)
+            real_mask_dev = jax.device_put(jnp.asarray(real_mask), shard)
+        else:
+            matrix = jax.tree.map(jnp.asarray, matrix)
+            v0 = jnp.asarray(v0)
+            ctx_blocked = jax.tree.map(jnp.asarray, ctx_blocked)
+            real_mask_dev = jnp.asarray(real_mask)
+
+        meta = {
+            "strategy": strategy, "theta": theta, "capacity": capacity,
+            "part": part, "pm": pm, "hm": hm,
+            "n_dense": int(hm.dense.d_count.sum()) if hm is not None else 0,
+        }
+        return step_jit, matrix, v0, ctx_blocked, real_mask_dev, meta
+
+    def _capacity(self, pm: PartitionedMatrix, hm: HybridMatrix | None) -> int:
+        if self.capacity_mode == "structural":
+            return hm.sparse_partial_cap if hm is not None else pm.partial_cap
+        m = self.edges.shape[0]
+        return cost_model.capacity_from_cost_model(
+            self.b, self.n, m,
+            stats=pm.stats, theta=hm.theta if hm is not None else None,
+            slack=self.slack,
+        )
+
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        spec: GimvSpec,
+        ctx: dict | None = None,
+        *,
+        max_iters: int = 100,
+        tol: float = 1e-6,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 0,
+        resume: bool = False,
+    ) -> PMVResult:
+        step, matrix, v, ctx_b, mask, meta = self.prepare(spec, ctx)
+        part: Partition = meta["part"]
+
+        start_iter = 0
+        if resume and checkpoint_dir and os.path.exists(_ckpt_path(checkpoint_dir)):
+            v_np, start_iter = _ckpt_load(checkpoint_dir)
+            v = jnp.asarray(v_np) if self.mesh is None else jax.device_put(
+                jnp.asarray(v_np), NamedSharding(self.mesh, P(self.axis_name)))
+
+        per_iter: list[dict] = []
+        converged = False
+        it = start_iter
+        for it in range(start_iter, max_iters):
+            t0 = time.perf_counter()
+            v_new, delta, stats = step(matrix, v, ctx_b, mask)
+            delta = float(delta)
+            wall = time.perf_counter() - t0
+            rec = {k: float(np.asarray(x)) for k, x in stats.items()}
+            rec.update(delta=delta, wall_s=wall, iteration=it)
+            rec["io_elems"] = self._paper_io(meta, rec)
+            per_iter.append(rec)
+            v = v_new
+            if rec.get("overflow", 0.0) > 0:
+                raise RuntimeError(
+                    "sparse exchange overflow: capacity "
+                    f"{meta['capacity']} too small — rerun with capacity='structural' "
+                    "or exchange='dense'")
+            if checkpoint_dir and checkpoint_every and (it + 1) % checkpoint_every == 0:
+                _ckpt_save(checkpoint_dir, np.asarray(v), it + 1)
+            if delta < tol:
+                converged = True
+                it += 1
+                break
+        else:
+            it = max_iters
+
+        v_np = part.from_blocked(np.asarray(v))
+        totals = {
+            "physical_elems": sum(r.get("gathered_elems", 0.0) + r.get("exchanged_elems", 0.0) for r in per_iter),
+            "logical_elems": sum(r.get("logical_elems", 0.0) for r in per_iter),
+            "wall_s": sum(r["wall_s"] for r in per_iter),
+        }
+        return PMVResult(
+            v=v_np, iterations=it, converged=converged,
+            strategy=meta["strategy"], theta=meta["theta"], capacity=meta["capacity"],
+            per_iter=per_iter, totals=totals,
+        )
+
+
+    def _paper_io(self, meta, rec) -> float:
+        """Per-iteration I/O in vector elements, the paper's metric:
+        horizontal: (b+1)|v| (Lemma 3.1);
+        vertical:   2|v| + 2 Σ|v^(i,j)|_nonzero (Lemma 3.2, measured);
+        hybrid:     |v|P_out + b|v_d| + |v| + 2 Σ|v_s^(i,j)| (Lemma 3.3)."""
+        n, b = self.n, self.b
+        strategy = meta["strategy"]
+        logical = rec.get("logical_elems", 0.0)
+        if strategy == "horizontal":
+            return (b + 1.0) * n
+        if strategy == "vertical":
+            return 2.0 * n + 2.0 * logical
+        n_dense = meta["n_dense"]
+        p_out = 1.0 - n_dense / n
+        return n * p_out + b * n_dense + n + 2.0 * logical
+
+
+# ---------------------------------------------------------------------------
+def _ckpt_path(d: str) -> str:
+    return os.path.join(d, "pmv_state.npz")
+
+
+def _ckpt_save(d: str, v: np.ndarray, it: int) -> None:
+    os.makedirs(d, exist_ok=True)
+    tmp = os.path.join(d, "pmv_state.tmp.npz")
+    np.savez(tmp, v=v, it=it)
+    os.replace(tmp, _ckpt_path(d))  # atomic commit
+
+
+def _ckpt_load(d: str) -> tuple[np.ndarray, int]:
+    with np.load(_ckpt_path(d)) as z:
+        return z["v"], int(z["it"])

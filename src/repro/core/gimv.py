@@ -1,0 +1,153 @@
+"""GIM-V: the generalized matrix-vector multiplication primitive (paper §2.3).
+
+A graph algorithm is three operations over matrix elements m_{i,j} (edge
+j -> i) and vector elements v_j:
+
+    combine2(m_ij, v_j)       -> x_ij        (edge map)
+    combineAll({x_ij}_j)      -> r_i         (per-row reduce)
+    assign(v_i, r_i)          -> v'_i        (state update)
+
+``combineAll`` must be commutative + associative (the paper relies on this to
+stream partial results, Algorithm 2 line 8); we restrict it to {sum, min, max}
+which covers Table 2 and lowers to ``jax.ops.segment_*`` / scatter-combine on
+TPU.  ``combine2`` is one of {mul, add, src} (src: return v_j -- connected
+components).  ``assign`` and the convergence metric are free-form jnp
+callables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GimvSpec", "combine2", "segment_combine", "scatter_combine", "identity_of"]
+
+_COMBINE2 = ("mul", "add", "src")
+_COMBINE_ALL = ("sum", "min", "max")
+
+
+def identity_of(combine_all: str, dtype) -> Any:
+    """Identity element of the combineAll monoid."""
+    if combine_all == "sum":
+        return dtype_zero(dtype)
+    if combine_all == "min":
+        return dtype_max(dtype)
+    if combine_all == "max":
+        return dtype_min(dtype)
+    raise ValueError(combine_all)
+
+
+def dtype_zero(dtype):
+    return np.zeros((), dtype=dtype).item()
+
+
+def dtype_max(dtype):
+    dtype = np.dtype(dtype)
+    if np.issubdtype(dtype, np.floating):
+        return np.inf
+    return np.iinfo(dtype).max
+
+
+def dtype_min(dtype):
+    dtype = np.dtype(dtype)
+    if np.issubdtype(dtype, np.floating):
+        return -np.inf
+    return np.iinfo(dtype).min
+
+
+@dataclasses.dataclass(frozen=True)
+class GimvSpec:
+    """User-defined generalized matrix-vector multiplication M (x) v.
+
+    Attributes:
+      name: algorithm name (for logs / benchmark CSV).
+      combine2: 'mul' | 'add' | 'src'.
+      combine_all: 'sum' | 'min' | 'max'.
+      dtype: vector dtype (np.float32 for PR/RWR/SSSP, np.int32 for CC).
+      assign: (v_local, r_local, ctx_local) -> v'_local, elementwise jnp.
+      init: (global_ids [m], ctx) -> v0 values [m]; global_ids may include
+        padding ids >= n (their value must be a fixed point of assign under
+        identity input -- engine masks them out of convergence metrics anyway).
+      edge_weight: (out_deg_src [E], base_w [E]) -> matrix values [E] (numpy,
+        host-side at partition time). None => use base_w as-is.
+      delta: (v_local, v'_local) -> scalar convergence contribution, summed
+        across devices; engine stops when total < tol.
+      needs_weights: False for CC (weights never read -- lets the engine skip
+        storing them).
+    """
+
+    name: str
+    combine2: str
+    combine_all: str
+    dtype: Any
+    assign: Callable[[jnp.ndarray, jnp.ndarray, dict], jnp.ndarray]
+    init: Callable[[np.ndarray, dict], np.ndarray]
+    edge_weight: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None
+    delta: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray] | None = None
+    needs_weights: bool = True
+
+    def __post_init__(self):
+        assert self.combine2 in _COMBINE2, self.combine2
+        assert self.combine_all in _COMBINE_ALL, self.combine_all
+
+    @property
+    def identity(self):
+        return identity_of(self.combine_all, self.dtype)
+
+    def default_delta(self, v, v_new):
+        if self.delta is not None:
+            return self.delta(v, v_new)
+        if np.issubdtype(np.dtype(self.dtype), np.floating):
+            return jnp.sum(jnp.abs(v_new - v))
+        return jnp.sum((v_new != v).astype(jnp.float32))
+
+
+def combine2(spec: GimvSpec, m: jnp.ndarray, v_j: jnp.ndarray) -> jnp.ndarray:
+    """x_ij = combine2(m_ij, v_j), vectorized over edges."""
+    if spec.combine2 == "mul":
+        return m * v_j
+    if spec.combine2 == "add":
+        return m + v_j
+    if spec.combine2 == "src":
+        return v_j
+    raise ValueError(spec.combine2)
+
+
+def segment_combine(spec: GimvSpec, x: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+    """combineAll over segments: r_i = combineAll({x_e : seg(e) == i}).
+
+    Empty segments yield the monoid identity (paper: combineAll over the empty
+    set contributes nothing; assign sees the identity and keeps/merges v_i).
+    """
+    if spec.combine_all == "sum":
+        return jax.ops.segment_sum(x, seg_ids, num_segments=num_segments)
+    if spec.combine_all == "min":
+        return jax.ops.segment_min(x, seg_ids, num_segments=num_segments)
+    if spec.combine_all == "max":
+        return jax.ops.segment_max(x, seg_ids, num_segments=num_segments)
+    raise ValueError(spec.combine_all)
+
+
+def scatter_combine(spec: GimvSpec, base: jnp.ndarray, idx: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """base[idx] = combineAll(base[idx], val); out-of-range idx dropped."""
+    if spec.combine_all == "sum":
+        return base.at[idx].add(val, mode="drop")
+    if spec.combine_all == "min":
+        return base.at[idx].min(val, mode="drop")
+    if spec.combine_all == "max":
+        return base.at[idx].max(val, mode="drop")
+    raise ValueError(spec.combine_all)
+
+
+def combine_elementwise(spec: GimvSpec, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """combineAll applied elementwise to two partial vectors."""
+    if spec.combine_all == "sum":
+        return a + b
+    if spec.combine_all == "min":
+        return jnp.minimum(a, b)
+    if spec.combine_all == "max":
+        return jnp.maximum(a, b)
+    raise ValueError(spec.combine_all)

@@ -1,0 +1,383 @@
+"""PMV placement strategies (paper §3.2-3.5) as JAX SPMD programs.
+
+Each placement is written as a *per-worker* function; communication goes
+through the tiny helpers below that lower to `jax.lax` collectives when an
+``axis_name`` is given (inside shard_map), and to pure jnp reshapes over an
+explicit leading worker axis when it is None ("emulation mode": single-device
+execution of all b workers, used by CPU tests/benchmarks — bitwise the same
+math as the SPMD path).
+
+Mapping to the paper:
+- PMV_horizontal (Alg. 1): ``all_gather(v)`` replaces "each worker loads all
+  vector blocks from distributed storage"; the output sub-vector is written
+  once (stays sharded).
+- PMV_vertical   (Alg. 2): local column-stripe sub-multiplications produce
+  partial vectors v^(i,j); the HDFS store/load of partials becomes an
+  ``all_to_all``, either dense ([b, n_local]) or *compacted sparse*
+  (indices+values up to the structural capacity — the TPU analog of shuffling
+  only non-empty entries, see sparse_exchange.py).
+- PMV_hybrid     (Alg. 4): sparse region runs vertical with the compact
+  exchange; the dense region's sub-vector v_d is small by construction
+  (high-out-degree vertices only), so it is all-gathered (horizontal).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import sparse_exchange
+from repro.core.blocks import BlockEdges, DenseRegion
+from repro.core.gimv import GimvSpec, combine2, combine_elementwise, segment_combine
+
+__all__ = [
+    "horizontal_step",
+    "vertical_step",
+    "hybrid_step",
+    "block_gimv_partials",
+    "gathered_gimv",
+]
+
+
+# --------------------------------------------------------------------------
+# Communication helpers: axis_name=None => emulation over leading worker axis.
+# --------------------------------------------------------------------------
+
+def _all_gather(x, axis_name):
+    """Per-worker [.] -> [b, .] (tiled on every worker)."""
+    if axis_name is None:
+        b = x.shape[0]
+        return jnp.broadcast_to(x[None], (b,) + x.shape)  # [b_worker, b, ...]
+    return lax.all_gather(x, axis_name)
+
+
+def _all_to_all(x, axis_name):
+    """Per-worker [b, .] -> [b, .] transposed across workers."""
+    if axis_name is None:
+        return jnp.swapaxes(x, 0, 1)  # [b_worker, b_slice, ...] transpose
+    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=False)
+
+
+# --------------------------------------------------------------------------
+# Per-worker block compute (shared by every placement).
+# --------------------------------------------------------------------------
+
+def _edges_x(spec: GimvSpec, stripe: BlockEdges, v_gathered_rows: jnp.ndarray) -> jnp.ndarray:
+    """combine2 over all edges of a stripe.
+
+    v_gathered_rows: [b, m] — row k is the vector the k-th inner block's
+    gat_local indexes into (v^(j) broadcast for vertical; v_all for
+    horizontal).  Returns x: [b, E_cap] with padding set to the identity.
+    """
+    b, e_cap = stripe.seg_local.shape
+    vj = jnp.take_along_axis(v_gathered_rows, stripe.gat_local, axis=1)
+    if spec.needs_weights:
+        x = combine2(spec, stripe.w, vj)
+    else:
+        x = combine2(spec, None, vj)
+    mask = jnp.arange(e_cap, dtype=jnp.int32)[None, :] < stripe.count[:, None]
+    return jnp.where(mask, x, jnp.asarray(spec.identity, x.dtype))
+
+
+def block_gimv_partials(spec: GimvSpec, stripe: BlockEdges, v_local: jnp.ndarray, n_local: int) -> jnp.ndarray:
+    """Vertical sub-multiplications: v^(i,j) = M^(i,j) (x) v^(j) for all i.
+
+    Returns partials [b, n_local] (identity where structurally empty).
+    """
+    b = stripe.seg_local.shape[0]
+    v_rows = jnp.broadcast_to(v_local[None], (b, v_local.shape[0]))
+    x = _edges_x(spec, stripe, v_rows)
+    seg = stripe.seg_local + (jnp.arange(b, dtype=jnp.int32) * n_local)[:, None]
+    flat = segment_combine(spec, x.reshape(-1), seg.reshape(-1), b * n_local)
+    return flat.reshape(b, n_local)
+
+
+def block_gimv_partials_compact(
+    spec: GimvSpec, stripe: BlockEdges, v_local: jnp.ndarray, n_local: int, capacity: int
+):
+    """Streamed vertical sub-multiplications with immediate compaction.
+
+    The paper's Alg. 2 stores each v^(i,j) to distributed storage as it is
+    produced (never holding all b partials); the TPU analog scans over
+    destination blocks i, compacting each [n_local] partial to (idx, val)
+    pairs of static `capacity` before moving on.  Peak live memory is
+    O(n_local + b*capacity) instead of O(b * n_local) — the difference
+    between fitting and OOM at ClueWeb12 scale (b * n_local = |v| = 25 GB).
+
+    Returns (idx [b, cap], val [b, cap], overflow_rows, logical_elems).
+    """
+    ident = jnp.asarray(spec.identity, spec.dtype)
+
+    def body(_, blk):
+        seg, gat, w, cnt = blk
+        e_cap = seg.shape[0]
+        vj = v_local[gat]
+        if spec.needs_weights:
+            x = combine2(spec, w, vj)
+        else:
+            x = combine2(spec, None, vj)
+        mask = jnp.arange(e_cap, dtype=jnp.int32) < cnt
+        x = jnp.where(mask, x, ident)
+        partial = segment_combine(spec, x, seg, n_local)
+        idx, val, over, logical = sparse_exchange.compact_partials(spec, partial, capacity, None)
+        return None, (idx, val, over, logical)
+
+    xs = (stripe.seg_local, stripe.gat_local,
+          stripe.w if stripe.w is not None else jnp.zeros_like(stripe.seg_local),
+          stripe.count)
+    _, (idx, val, over, logical) = jax.lax.scan(body, None, xs)
+    return idx, val, jnp.sum(over), jnp.sum(logical)
+
+
+def gathered_gimv(spec: GimvSpec, stripe: BlockEdges, v_all: jnp.ndarray, n_local: int) -> jnp.ndarray:
+    """Horizontal compute: r^(i) = combineAll_j M^(i,j) (x) v^(j) with the
+    whole vector v_all [b, n_local] available locally."""
+    b = stripe.seg_local.shape[0]
+    x = _edges_x(spec, stripe, v_all)
+    seg = stripe.seg_local + (jnp.arange(b, dtype=jnp.int32) * n_local)[:, None]
+    flat = segment_combine(spec, x.reshape(-1), seg.reshape(-1), b * n_local)
+    contribs = flat.reshape(b, n_local)
+    # combineAll across source blocks.
+    if spec.combine_all == "sum":
+        return jnp.sum(contribs, axis=0)
+    if spec.combine_all == "min":
+        return jnp.min(contribs, axis=0)
+    return jnp.max(contribs, axis=0)
+
+
+def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name):
+    """Two-hop topology-aware exchange (beyond-paper, DESIGN §6 / §Perf).
+
+    axis_name = (pod_axis, *intra_axes).  Partial rows are ordered by global
+    destination worker g = p*W + w (shard_map row-major axis order).
+
+    hop 1 (fast intra-pod links): all_to_all over the intra axes so worker w
+    collects its pod's W partials for every destination pod, then combineAll
+    folds them into ONE [P, n_local] tensor — deduplicating overlapping
+    destinations before the slow hop.
+    hop 2 (slow inter-pod links): all_to_all of the combined [P, n_local]
+    rows over the pod axis, then the final combine.
+
+    Inter-pod volume drops from W*cap*(idx+val) to n_local values: ~12x at
+    ClueWeb12 scale (see EXPERIMENTS §Perf).  Returns (r [n_local], stats).
+    """
+    pod_axis, inner = axis_name[0], tuple(axis_name[1:])
+    n_pods = lax.psum(1, pod_axis)
+    w_size = lax.psum(1, inner)
+    cap = idx.shape[-1]
+    idx3 = idx.reshape(n_pods, w_size, cap)
+    val3 = val.reshape(n_pods, w_size, cap)
+    # hop 1: split the intra-pod destination axis, gather per-source rows
+    idx_r = lax.all_to_all(idx3, inner, split_axis=1, concat_axis=1, tiled=True)
+    val_r = lax.all_to_all(val3, inner, split_axis=1, concat_axis=1, tiled=True)
+    # combine the W intra-pod partials per destination pod
+    per_pod = jax.vmap(lambda i, v: sparse_exchange.scatter_partials(
+        spec, i, v.astype(spec.dtype), n_local))(idx_r, val_r)   # [P, n_local]
+    # hop 2: cross-pod exchange of the combined dense rows
+    received = lax.all_to_all(per_pod, pod_axis, split_axis=0, concat_axis=0)
+    if spec.combine_all == "sum":
+        r = jnp.sum(received, axis=0)
+    elif spec.combine_all == "min":
+        r = jnp.min(received, axis=0)
+    else:
+        r = jnp.max(received, axis=0)
+    stats = {  # GLOBAL elements per iteration
+        "intra_pod_elems": jnp.asarray(
+            float(n_pods) ** 2 * w_size * (w_size - 1) * cap * 2, jnp.float32),
+        "inter_pod_elems": jnp.asarray(
+            float(n_pods) * (n_pods - 1) * w_size * n_local, jnp.float32),
+    }
+    return r, stats
+
+
+# --------------------------------------------------------------------------
+# Placement steps.  All take/return the worker-local vector shard v_local
+# [n_local] (emulation: [b, n_local]) and return (v_new_local, r_local, stats).
+# --------------------------------------------------------------------------
+
+def _apply_assign(spec, v_local, r_local, ctx_local, real_mask):
+    v_new = spec.assign(v_local, r_local, ctx_local)
+    return jnp.where(real_mask, v_new, v_local)  # padding ids frozen
+
+
+def horizontal_step(spec: GimvSpec, stripe: BlockEdges, v_local, ctx_local, real_mask, *, n_local: int, axis_name):
+    """Alg. 1: gather the whole vector, compute row stripe locally."""
+    v_all = _all_gather(v_local, axis_name)  # [b, n_local]
+
+    def compute(stripe_, v_all_, v_local_, ctx_, mask_):
+        r = gathered_gimv(spec, stripe_, v_all_, n_local)
+        return _apply_assign(spec, v_local_, r, ctx_, mask_), r
+
+    fn = compute if axis_name is not None else jax.vmap(compute)
+    v_new, r = fn(stripe, v_all, v_local, ctx_local, real_mask)
+    b = v_all.shape[-2]
+    stats = {  # GLOBAL elements per iteration (all workers)
+        "gathered_elems": jnp.asarray(b * (b - 1) * n_local, jnp.float32),
+        "exchanged_elems": jnp.asarray(0.0, jnp.float32),
+    }
+    return v_new, r, stats
+
+
+def vertical_step(
+    spec: GimvSpec,
+    stripe: BlockEdges,
+    v_local,
+    ctx_local,
+    real_mask,
+    *,
+    n_local: int,
+    axis_name,
+    exchange: str = "sparse",
+    capacity: int | None = None,
+    payload_dtype=None,
+):
+    """Alg. 2: local column-stripe partials, exchange, combine at the owner.
+
+    exchange='dense': all_to_all the full [b, n_local] partials (what dense
+    collectives would do).  exchange='sparse': compact to (idx, val) pairs of
+    static ``capacity`` first — the paper's "only non-empty v^(i,j) entries
+    hit the distributed storage".  exchange='hier': sparse hop within the
+    pod + combined dense hop across pods (needs a tuple axis_name whose
+    first element is the pod axis; SPMD only).
+    """
+    if exchange == "hier":
+        assert axis_name is not None and isinstance(axis_name, tuple) and len(axis_name) >= 2
+        assert capacity is not None
+        compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
+        idx, val, overflow, logical = compact(stripe, v_local)
+        if payload_dtype is not None:
+            val = val.astype(payload_dtype)
+        overflow = lax.psum(overflow, axis_name)
+        logical = lax.psum(logical, axis_name)
+        r, hstats = hierarchical_exchange(spec, idx, val, n_local, axis_name)
+        v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
+        stats = {
+            "gathered_elems": jnp.asarray(0.0, jnp.float32),
+            "exchanged_elems": hstats["intra_pod_elems"] + hstats["inter_pod_elems"],
+            **hstats,
+            "logical_elems": logical,
+            "overflow": overflow,
+        }
+        return v_new, r, stats
+    if exchange == "dense":
+        compute = partial(block_gimv_partials, spec, n_local=n_local)
+        fn = compute if axis_name is not None else jax.vmap(lambda s, v: compute(s, v))
+        partials = fn(stripe, v_local)  # [b, n_local] per worker
+        received = _all_to_all(partials, axis_name)  # [b, n_local]
+        reduce_axis = -2
+
+        def combine_fn(rcv):
+            if spec.combine_all == "sum":
+                return jnp.sum(rcv, axis=reduce_axis)
+            if spec.combine_all == "min":
+                return jnp.min(rcv, axis=reduce_axis)
+            return jnp.max(rcv, axis=reduce_axis)
+
+        r = combine_fn(received)
+        logical = sparse_exchange.count_non_identity(spec, partials)
+        b = partials.shape[-2]
+        stats = {  # GLOBAL elements per iteration
+            "gathered_elems": jnp.asarray(0.0, jnp.float32),
+            "exchanged_elems": jnp.asarray(b * (b - 1) * n_local, jnp.float32),
+            "logical_elems": logical,
+        }
+    else:
+        assert capacity is not None, "sparse exchange needs a static capacity"
+        compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
+        fn_c = compact if axis_name is not None else jax.vmap(lambda s, v: compact(s, v))
+        idx, val, overflow, logical = fn_c(stripe, v_local)
+        if payload_dtype is not None:
+            val = val.astype(payload_dtype)  # wire format (§Perf); f32 accumulate
+        if axis_name is not None:
+            overflow = lax.psum(overflow, axis_name)
+            logical = lax.psum(logical, axis_name)
+        else:
+            overflow, logical = jnp.sum(overflow), jnp.sum(logical)
+        idx_x = _all_to_all(idx, axis_name)
+        val_x = _all_to_all(val, axis_name)
+
+        def combine_fn(i_, v_):
+            return sparse_exchange.scatter_partials(spec, i_.astype(jnp.int32),
+                                                    v_.astype(spec.dtype), n_local)
+
+        fn2 = combine_fn if axis_name is not None else jax.vmap(combine_fn)
+        r = fn2(idx_x, val_x)
+        b = idx.shape[-2]
+        stats = {  # GLOBAL elements; x2 = idx+val words
+            "gathered_elems": jnp.asarray(0.0, jnp.float32),
+            "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * 2, jnp.float32),
+            "logical_elems": logical,
+            "overflow": overflow,
+        }
+
+    if axis_name is not None:
+        v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
+    else:
+        v_new = jax.vmap(partial(_apply_assign, spec))(v_local, r, ctx_local, real_mask)
+    return v_new, r, stats
+
+
+def hybrid_step(
+    spec: GimvSpec,
+    sparse_stripe: BlockEdges,
+    dense_stripe: BlockEdges,
+    dense_region: DenseRegion,
+    v_local,
+    ctx_local,
+    real_mask,
+    *,
+    n_local: int,
+    axis_name,
+    capacity: int,
+):
+    """Alg. 4: vertical over the sparse region + horizontal over the dense
+    region, combined at the owner, then assign.
+
+    The dense sub-vector v_d is the compacted gather of high-out-degree
+    entries: [d_cap] per worker -> all_gather -> [b, d_cap]; its edges index
+    it with (block, slot) pairs.
+    """
+    # -- dense region: extract + all_gather the (small) dense sub-vector.
+    # gather_idx is per-worker in SPMD ([d_cap]) / [b, d_cap] in emulation.
+    if axis_name is not None:
+        v_d = v_local[dense_region.gather_idx]  # [d_cap]
+    else:
+        v_d = jnp.take_along_axis(v_local, dense_region.gather_idx, axis=1)
+    v_d_all = _all_gather(v_d, axis_name)  # [b, d_cap]
+
+    # -- sparse region: streamed vertical partials + compact exchange.
+    compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
+    fn_c = compact if axis_name is not None else jax.vmap(lambda s, v: compact(s, v))
+    idx, val, overflow, logical = fn_c(sparse_stripe, v_local)
+    if axis_name is not None:
+        overflow = lax.psum(overflow, axis_name)
+        logical = lax.psum(logical, axis_name)
+    else:
+        overflow, logical = jnp.sum(overflow), jnp.sum(logical)
+    idx_x = _all_to_all(idx, axis_name)
+    val_x = _all_to_all(val, axis_name)
+
+    def owner_combine(idx_r, val_r, dense_stripe_, v_d_all_, v_local_, ctx_, mask_):
+        r_sparse = sparse_exchange.scatter_partials(spec, idx_r, val_r, n_local)
+        r_dense = gathered_gimv(spec, dense_stripe_, v_d_all_, n_local)
+        r = combine_elementwise(spec, r_sparse, r_dense)
+        v_new = _apply_assign(spec, v_local_, r, ctx_, mask_)
+        return v_new, r
+
+    if axis_name is not None:
+        v_new, r = owner_combine(idx_x, val_x, dense_stripe, v_d_all, v_local, ctx_local, real_mask)
+    else:
+        v_new, r = jax.vmap(owner_combine)(idx_x, val_x, dense_stripe, v_d_all, v_local, ctx_local, real_mask)
+
+    b = idx.shape[-2]
+    d_cap = dense_region.d_cap
+    stats = {  # GLOBAL elements per iteration
+        "gathered_elems": jnp.asarray(b * (b - 1) * d_cap, jnp.float32),
+        "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * 2, jnp.float32),
+        "logical_elems": logical,
+        "overflow": overflow,
+    }
+    return v_new, r, stats

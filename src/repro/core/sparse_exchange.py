@@ -1,0 +1,70 @@
+"""Compacted sparse all_to_all transport for PMV_vertical / PMV_hybrid.
+
+The paper's vertical placement ships only the non-empty entries of each
+partial result v^(i,j) through distributed storage (that is where its I/O win
+over horizontal comes from, Lemma 3.2).  XLA collectives need static shapes,
+so we compact each partial row [n_local] into (idx, val) pairs of a static
+``capacity``:
+
+- capacity = max structural nnz over all (i,j) partials, computed exactly at
+  pre-partitioning time (blocks.structural_partial_nnz) — value-level nnz is
+  always <= structural nnz, so with that capacity overflow is impossible;
+- the engine may also use the *cost-model* capacity (paper Eq. 4/8 expected
+  size x slack) for tighter buffers; an overflow counter is returned so the
+  caller can detect truncation and fall back to the dense exchange (optimistic
+  execution, like MoE capacity-factor dispatch).
+
+Compaction = top_k on a "first-valid" score: O(n log k) per row, fully
+batched; the inverse (scatter_partials) is a segment-combine with a drop
+bucket at index n_local.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.gimv import GimvSpec, segment_combine
+
+__all__ = ["compact_partials", "scatter_partials", "count_non_identity"]
+
+
+def _reduce_sum(x, axis_name):
+    return lax.psum(x, axis_name) if axis_name is not None else x
+
+
+def count_non_identity(spec: GimvSpec, partials: jnp.ndarray) -> jnp.ndarray:
+    """Number of logically transferred elements (paper's I/O accounting)."""
+    ident = jnp.asarray(spec.identity, partials.dtype)
+    return jnp.sum((partials != ident).astype(jnp.float32))
+
+
+def compact_partials(spec: GimvSpec, partials: jnp.ndarray, capacity: int, axis_name):
+    """[..., b, n_local] -> idx [..., b, cap] int32, val [..., b, cap].
+
+    idx == n_local marks padding.  Entries equal to the combineAll identity
+    are dropped (they are no-ops under combineAll, so value-based compaction
+    is semantically lossless).  Returns (idx, val, overflow_rows, logical_elems)
+    with the two counters globally reduced when ``axis_name`` is given.
+    """
+    n_local = partials.shape[-1]
+    capacity = min(capacity, n_local)
+    ident = jnp.asarray(spec.identity, partials.dtype)
+    valid = partials != ident
+    arange = jnp.arange(n_local, dtype=jnp.int32)
+    # Score so that valid entries (in ascending index order) win top_k.
+    score = jnp.where(valid, n_local - arange, 0)
+    top_score, top_idx = lax.top_k(score, capacity)
+    taken = top_score > 0
+    idx = jnp.where(taken, top_idx.astype(jnp.int32), jnp.int32(n_local))
+    val = jnp.where(taken, jnp.take_along_axis(partials, top_idx, axis=-1), ident)
+    counts = valid.sum(axis=-1)
+    overflow = _reduce_sum(jnp.sum((counts > capacity).astype(jnp.float32)), axis_name)
+    logical = _reduce_sum(jnp.sum(counts.astype(jnp.float32)), axis_name)
+    return idx, val, overflow, logical
+
+
+def scatter_partials(spec: GimvSpec, idx: jnp.ndarray, val: jnp.ndarray, n_local: int) -> jnp.ndarray:
+    """combineAll of received compact partials: [b, cap] x2 -> r [n_local]."""
+    r = segment_combine(spec, val.reshape(-1), idx.reshape(-1), n_local + 1)
+    return r[:n_local]

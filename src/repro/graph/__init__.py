@@ -1,0 +1,20 @@
+from repro.graph.generators import (
+    rmat,
+    erdos_renyi,
+    chain_graph,
+    star_graph,
+    complete_graph,
+    paper_example_graph,
+)
+from repro.graph.stats import GraphStats, compute_stats
+
+__all__ = [
+    "rmat",
+    "erdos_renyi",
+    "chain_graph",
+    "star_graph",
+    "complete_graph",
+    "paper_example_graph",
+    "GraphStats",
+    "compute_stats",
+]

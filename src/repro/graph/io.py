@@ -1,0 +1,29 @@
+"""Edge-list I/O: tsv (paper's input format) and npy (fast path)."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+__all__ = ["load_edges", "save_edges", "infer_n"]
+
+
+def load_edges(path: str) -> np.ndarray:
+    if path.endswith(".npy"):
+        edges = np.load(path)
+    else:
+        edges = np.loadtxt(path, dtype=np.int64, comments="#")
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    return edges
+
+
+def save_edges(path: str, edges: np.ndarray) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    if path.endswith(".npy"):
+        np.save(path, np.asarray(edges, dtype=np.int64))
+    else:
+        np.savetxt(path, edges, fmt="%d", delimiter="\t")
+
+
+def infer_n(edges: np.ndarray) -> int:
+    return int(edges.max()) + 1 if edges.size else 0

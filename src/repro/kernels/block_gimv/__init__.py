@@ -1,0 +1,4 @@
+from repro.kernels.block_gimv.ops import dense_gimv, semiring_of
+from repro.kernels.block_gimv.ref import dense_gimv_ref
+
+__all__ = ["dense_gimv", "dense_gimv_ref", "semiring_of"]

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: dense-region block GIM-V (the paper's M_d (x) v_d).
+
+PMV_hybrid executes the dense region (columns of high-out-degree vertices)
+horizontally: every worker holds the gathered dense sub-vector v_d and its
+dense row stripe.  When that stripe is materialized as an actual dense
+matrix (rows = local vertices, cols = compacted dense slots), the semiring
+"matvec" is a classic MXU/VPU tiling problem:
+
+- (x, +)  [PageRank / RWR]: real matmul -> `jnp.dot` on the MXU.
+- (+, min) [SSSP]:          broadcast-add + row-min on the VPU.
+- (src, min) [CC]:          presence-masked select + row-min on the VPU.
+
+Grid = (row_tiles, col_tiles); the output row tile is revisited along the
+col grid axis and accumulated in place with the semiring's combineAll —
+the standard TPU reduction pattern (output VMEM block as accumulator).
+Tiles are MXU/VPU aligned: TM rows x TK cols, both multiples of 128 (8 is
+the sublane minimum for f32; we use 128 to keep the MXU fed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SEMIRINGS = ("plus_times", "min_plus", "min_src", "max_plus")
+
+
+def _combine_all(semiring: str, a, b):
+    if semiring == "plus_times":
+        return a + b
+    if semiring in ("min_plus", "min_src"):
+        return jnp.minimum(a, b)
+    return jnp.maximum(a, b)
+
+
+def _identity(semiring: str, dtype):
+    if semiring == "plus_times":
+        return jnp.zeros((), dtype)
+    if semiring in ("min_plus", "min_src"):
+        return jnp.array(jnp.inf if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).max, dtype)
+    return jnp.array(-jnp.inf if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).min, dtype)
+
+
+def _dense_gimv_kernel(m_ref, v_ref, o_ref, *, semiring: str):
+    """One (TM, TK) tile: partial combineAll over the TK columns."""
+    k = pl.program_id(1)
+    m = m_ref[...]                      # (TM, TK) matrix values
+    v = v_ref[...]                      # (1, TK) vector tile
+
+    if semiring == "plus_times":
+        part = jax.lax.dot_general(
+            m, v,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=o_ref.dtype,
+        )                               # (TM, 1) — MXU
+    elif semiring == "min_plus":
+        part = jnp.min(m + v, axis=1, keepdims=True)
+    elif semiring == "max_plus":
+        part = jnp.max(m + v, axis=1, keepdims=True)
+    else:  # min_src: m is a presence indicator; absent -> identity
+        ident = _identity(semiring, o_ref.dtype)
+        x = jnp.where(m > 0, v.astype(o_ref.dtype), ident)
+        part = jnp.min(x, axis=1, keepdims=True)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] = _combine_all(semiring, o_ref[...], part.astype(o_ref.dtype))
+
+
+def dense_gimv_pallas(
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    semiring: str,
+    out_dtype=None,
+    tile_m: int = 128,
+    tile_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """r = combineAll_j combine2(m[:, j], v[j]) over a dense block.
+
+    m: [M, K] (values; for min_src a presence matrix), v: [K].
+    M, K must be multiples of the tile sizes (ops.py pads).
+    Returns r: [M].
+    """
+    assert semiring in SEMIRINGS, semiring
+    M, K = m.shape
+    assert v.shape == (K,), (m.shape, v.shape)
+    assert M % tile_m == 0 and K % tile_k == 0, (M, K, tile_m, tile_k)
+    out_dtype = out_dtype or v.dtype
+
+    grid = (M // tile_m, K // tile_k)
+    out = pl.pallas_call(
+        functools.partial(_dense_gimv_kernel, semiring=semiring),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, k: (i, k)),
+            pl.BlockSpec((1, tile_k), lambda i, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, 1), out_dtype),
+        interpret=interpret,
+    )(m, v[None, :])
+    return out[:, 0]

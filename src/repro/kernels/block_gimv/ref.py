@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the dense-region block GIM-V kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dense_gimv_ref(m: jnp.ndarray, v: jnp.ndarray, *, semiring: str, out_dtype=None) -> jnp.ndarray:
+    out_dtype = out_dtype or v.dtype
+    if semiring == "plus_times":
+        return (m @ v.astype(m.dtype)).astype(out_dtype)
+    if semiring == "min_plus":
+        return jnp.min(m + v[None, :], axis=1).astype(out_dtype)
+    if semiring == "max_plus":
+        return jnp.max(m + v[None, :], axis=1).astype(out_dtype)
+    if semiring == "min_src":
+        ident = jnp.inf if jnp.issubdtype(jnp.dtype(out_dtype), jnp.floating) else jnp.iinfo(out_dtype).max
+        x = jnp.where(m > 0, v[None, :].astype(out_dtype), jnp.array(ident, out_dtype))
+        return jnp.min(x, axis=1)
+    raise ValueError(semiring)

@@ -1,0 +1,4 @@
+from repro.kernels.ell_spmv.ops import ell_gimv, ell_from_edges
+from repro.kernels.ell_spmv.ref import ell_gimv_ref
+
+__all__ = ["ell_gimv", "ell_gimv_ref", "ell_from_edges"]

@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...).lower(*abstract_inputs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis());  print(compiled.cost_analysis())
+
+plus collective-bytes extraction from the post-SPMD HLO — the §Roofline input.
+Results are written incrementally to benchmarks/dryrun_results/<cell>.json so
+the sweep is restartable (the same fault-tolerance contract as training).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3_1_7b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--force]          # every cell, both meshes
+    python -m repro.launch.dryrun --pmv-cell twitter@pagerank@hybrid --mesh multi
+"""
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as configs_lib
+from repro.launch import flops as flops_lib
+from repro.launch.hlo_analysis import collective_totals
+from repro.launch.mesh import make_production_mesh, worker_axes
+from repro.models import sharding as sh
+from repro.models.model import build_model
+from repro.training.optimizer import OptConfig
+from repro.training.train_step import TrainConfig, init_train_state, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "dryrun_results")
+
+# train_4k microbatching (memory knob; §Perf iterates):
+GRAD_ACCUM = {
+    "qwen3_1_7b": 1, "qwen3_14b": 2, "stablelm_12b": 2, "phi3_medium_14b": 2,
+    "mamba2_130m": 1, "recurrentgemma_9b": 2, "whisper_medium": 1,
+    "deepseek_v2_lite_16b": 2, "mixtral_8x22b": 8, "llama_3_2_vision_90b": 16,
+}
+WHISPER_DECODE_ENC_LEN = 1500  # real whisper-medium encoder output length
+
+# §Perf hillclimb variants: cell name arch@shape@<variant>
+VARIANTS = {
+    "sp": {"seq_parallel": True},                       # sequence parallelism
+    "spskip": {"seq_parallel": True, "flash_skip": True},  # SP + triangle sched
+    "skip": {"flash_skip": True},
+    "sp_ga4": {"seq_parallel": True, "grad_accum": 4},  # SP + fewer microbatches
+    "ga4": {"grad_accum": 4},
+    "ga8": {"grad_accum": 8},
+    "noremat": {"remat": "none"},
+    "sp_noremat": {"seq_parallel": True, "remat": "none"},
+}
+
+
+# ---------------------------------------------------------------------------
+def _abstract(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _scalar_sharding(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+def build_lm_cell(arch: str, shape_name: str, mesh, overrides: dict | None = None):
+    """Returns (jitted_fn, list_of_abstract_args_with_shardings, meta).
+
+    overrides: ModelConfig field overrides for §Perf variants, e.g.
+    {"seq_parallel": True} — applied via dataclasses.replace."""
+    import dataclasses as _dc
+
+    cfg = configs_lib.config_for(arch)
+    if overrides:
+        from repro.launch.mesh import data_axes
+        cfg = _dc.replace(cfg, dp_axes=data_axes(mesh), **overrides)
+    seq, batch, mode = dict(
+        (n, (s, b, m)) for n, (s, b, m) in configs_lib.SHAPES.items())[shape_name]
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+
+    params_sds = jax.eval_shape(model.init_params, key)
+    p_sh = sh.param_shardings(params_sds, mesh)
+    params_in = sh.sds_with(params_sds, p_sh)
+
+    def batch_struct():
+        b = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        if cfg.family == "vlm":
+            b["vis_emb"] = jax.ShapeDtypeStruct((batch, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            b["enc_emb"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+        return b
+
+    if mode == "train":
+        ga = cfg.grad_accum if cfg.grad_accum > 1 else GRAD_ACCUM.get(arch, 1)
+        tcfg = TrainConfig(opt=OptConfig(), grad_accum=ga)
+        state_sds = jax.eval_shape(lambda p: init_train_state(model, p, tcfg), params_sds)
+        s_sh = sh.param_shardings(state_sds, mesh)  # moments mirror params; scalars replicate
+        state_in = sh.sds_with(state_sds, s_sh)
+        b_sds = batch_struct()
+        b_sh = sh.batch_shardings(b_sds, mesh)
+        batch_in = sh.sds_with(b_sds, b_sh)
+        step = make_train_step(model, tcfg)
+        fn = jax.jit(step, in_shardings=(p_sh, s_sh, b_sh),
+                     out_shardings=(p_sh, s_sh, None), donate_argnums=(0, 1))
+        return fn, (params_in, state_in, batch_in), {"cfg": cfg, "mode": mode, "grad_accum": ga}
+
+    if mode == "prefill":
+        b_sds = batch_struct()
+        b_sh = sh.batch_shardings(b_sds, mesh)
+        batch_in = sh.sds_with(b_sds, b_sh)
+        fn = jax.jit(lambda p, b: model.forward(p, b)[0], in_shardings=(p_sh, b_sh))
+        return fn, (params_in, batch_in), {"cfg": cfg, "mode": mode}
+
+    # decode: one token against a seq-long cache
+    enc_len = WHISPER_DECODE_ENC_LEN if cfg.family == "encdec" else 0
+    cache_sds = jax.eval_shape(lambda: model.init_cache(batch, seq, enc_len=enc_len))
+    c_sh = sh.cache_shardings(cache_sds, mesh, cfg)
+    cache_in = sh.sds_with(cache_sds, c_sh)
+    tok_sds = {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    t_sh = sh.batch_shardings(tok_sds, mesh)
+    tok_in = sh.sds_with(tok_sds, t_sh)["tokens"]
+    pos_in = jax.ShapeDtypeStruct((), jnp.int32, sharding=_scalar_sharding(mesh))
+    fn = jax.jit(model.serve_step,
+                 in_shardings=(p_sh, c_sh, t_sh["tokens"], _scalar_sharding(mesh)),
+                 out_shardings=(None, c_sh), donate_argnums=(1,))
+    return fn, (params_in, cache_in, tok_in, pos_in), {"cfg": cfg, "mode": mode, "enc_len": enc_len}
+
+
+# ---------------------------------------------------------------------------
+# PMV graph-engine cells: the paper's own workload at production scale.
+PMV_GRAPHS = {
+    # name: (n_vertices, n_edges, skew factor for block padding)
+    "twitter": (41_652_230, 1_468_365_182, 2.0),
+    "clueweb12": (6_231_126_594, 71_746_553_402, 2.0),
+}
+PMV_CELLS = [
+    # (graph, algorithm, strategy) — horizontal only at twitter scale: it
+    # needs the whole |v| per worker (paper Lemma 3.1), which for ClueWeb12
+    # exceeds HBM by design; selective/Eq.5 picks vertical there (Fig. 1).
+    ("twitter", "pagerank", "horizontal"),
+    ("twitter", "pagerank", "vertical"),
+    ("twitter", "pagerank", "hybrid"),
+    ("twitter", "sssp", "hybrid"),
+    ("clueweb12", "pagerank", "vertical"),
+    ("clueweb12", "pagerank", "hybrid"),
+    ("clueweb12", "cc", "hybrid"),
+    # beyond-paper: topology-aware two-hop exchange (multi-pod §Perf cell)
+    ("clueweb12", "pagerank", "vertical_hier"),
+]
+
+
+def build_pmv_cell(graph: str, algo: str, strategy: str, mesh):
+    from repro.core import algorithms, cost_model
+    from repro.core.blocks import BlockEdges, DenseRegion
+    from repro.core.engine import StepConfig, make_step
+
+    exchange = "sparse"
+    if strategy.endswith("_hier"):
+        strategy = strategy[: -len("_hier")]
+        exchange = "hier"
+    n, m, skew = PMV_GRAPHS[graph]
+    b = int(np.prod(list(mesh.shape.values())))
+    axis = worker_axes(mesh)
+    n_local = -(-n // b)
+    e_blk = int(m / (b * b) * skew) + 1            # padded per-block edge capacity
+    exp_partial = cost_model.expected_partial_nnz(b, n, m)
+    capacity = min(n_local, int(exp_partial * 2.0) + 1)
+
+    if algo == "pagerank":
+        spec = algorithms.pagerank(n)
+    elif algo == "sssp":
+        spec = algorithms.sssp(0)
+    else:
+        spec = algorithms.connected_components()
+
+    dt = np.dtype(spec.dtype)
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def stripe_sds(e_cap):
+        return BlockEdges(
+            seg_local=jax.ShapeDtypeStruct((b, b, e_cap), i32),
+            gat_local=jax.ShapeDtypeStruct((b, b, e_cap), i32),
+            w=jax.ShapeDtypeStruct((b, b, e_cap), f32) if spec.needs_weights else None,
+            count=jax.ShapeDtypeStruct((b, b), i32),
+        )
+
+    if strategy in ("horizontal", "vertical"):
+        matrix = {"stripe": stripe_sds(e_blk)}
+    else:
+        d_frac = 0.01  # ~P(out-degree >= theta*) for power-law web graphs
+        d_cap = max(int(n_local * d_frac * skew), 1)
+        matrix = {
+            "sparse_stripe": stripe_sds(int(e_blk * 0.7) + 1),
+            "dense_stripe": stripe_sds(int(e_blk * 0.3) + 1),
+            "dense_region": DenseRegion(
+                gather_idx=jax.ShapeDtypeStruct((b, d_cap), i32),
+                d_count=jax.ShapeDtypeStruct((b,), i32),
+                d_cap=d_cap, theta=200.0),
+        }
+    v = jax.ShapeDtypeStruct((b, n_local), jnp.dtype(spec.dtype))
+    mask = jax.ShapeDtypeStruct((b, n_local), jnp.bool_)
+    ctx = {}
+
+    cfg = StepConfig(strategy=strategy, n_local=n_local, exchange=exchange, capacity=capacity)
+    step = make_step(spec, cfg, mesh, axis)
+
+    shard = NamedSharding(mesh, P(axis))
+    repl = NamedSharding(mesh, P())
+    mat_sh = jax.tree.map(lambda _: shard, matrix)
+    fn = jax.jit(step, in_shardings=(mat_sh, shard, {}, shard),
+                 out_shardings=(shard, repl, None), donate_argnums=(1,))
+    args = (sh.sds_with(matrix, mat_sh),
+            jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=shard), ctx,
+            jax.ShapeDtypeStruct(mask.shape, mask.dtype, sharding=shard))
+    meta = {"n": n, "m": m, "b": b, "n_local": n_local, "e_blk": e_blk,
+            "capacity": capacity, "algo": algo, "strategy": strategy,
+            "exchange": exchange}
+    return fn, args, meta
+
+
+# ---------------------------------------------------------------------------
+def run_cell(kind: str, name: str, mesh_name: str, *, force=False) -> dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, f"{mesh_name}__{kind}__{name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    rec = {"kind": kind, "cell": name, "mesh": mesh_name,
+           "mesh_shape": dict(mesh.shape), "ok": False}
+    t0 = time.time()
+    try:
+        with mesh:
+            if kind == "lm":
+                parts = name.split("@")
+                arch, shape_name = parts[0], parts[1]
+                overrides = VARIANTS[parts[2]] if len(parts) > 2 else None
+                fn, args, meta = build_lm_cell(arch, shape_name, mesh, overrides)
+            else:
+                graph, algo, strategy = name.split("@")
+                fn, args, meta = build_pmv_cell(graph, algo, strategy, mesh)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            mem_d = {}
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes", "peak_memory_in_bytes"):
+                if hasattr(mem, attr):
+                    mem_d[attr] = int(getattr(mem, attr))
+            cost = compiled.cost_analysis() or {}
+            cost_d = {k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float)) and k in
+                      ("flops", "bytes accessed", "transcendentals", "utilization operand")}
+            hlo_text = compiled.as_text()
+            coll = collective_totals(hlo_text)
+            # persist the post-SPMD HLO so collective analysis is re-runnable
+            # offline (no recompilation) when the parser evolves
+            hlo_dir = os.path.join(RESULTS_DIR, "hlo")
+            os.makedirs(hlo_dir, exist_ok=True)
+            hlo_path = os.path.join(hlo_dir, f"{mesh_name}__{kind}__{name}.txt.gz")
+            with gzip.open(hlo_path, "wt") as hf:
+                hf.write(hlo_text)
+            rec["hlo"] = os.path.relpath(hlo_path, RESULTS_DIR)
+
+            analytic = None
+            if kind == "lm":
+                arch, shape_name = name.split("@")[:2]
+                seq, batch, mode = configs_lib.SHAPES[shape_name]
+                cfg = meta["cfg"]
+                analytic = flops_lib.cell_cost(
+                    cfg, mode, seq, batch,
+                    grad_accum=meta.get("grad_accum", 1),
+                    enc_len=(seq if mode != "decode" else meta.get("enc_len", 0)) if cfg.family == "encdec" else 0,
+                    vis_tokens=cfg.n_vision_tokens,
+                ).as_dict()
+
+            rec.update(
+                ok=True, lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                memory=mem_d, cost=cost_d, collectives=coll, analytic=analytic,
+                meta={k: v for k, v in (meta or {}).items() if not hasattr(v, "dtype") and k != "cfg"},
+            )
+            print(f"[dryrun] {mesh_name} {kind} {name}: OK "
+                  f"flops={cost_d.get('flops', 0):.3e} "
+                  f"coll={coll['bytes']['total']:.3e}B "
+                  f"temp={mem_d.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    except Exception as e:  # noqa: BLE001 — failures are data, not crashes
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {mesh_name} {kind} {name}: FAIL {type(e).__name__}: {e}")
+
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def all_cells():
+    cells = []
+    for arch in configs_lib.ARCHS:
+        for shape_name, *_ in configs_lib.cells(arch):
+            cells.append(("lm", f"{arch}@{shape_name}"))
+    for graph, algo, strategy in PMV_CELLS:
+        cells.append(("pmv", f"{graph}@{algo}@{strategy}"))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant", default=None, choices=list(VARIANTS))
+    ap.add_argument("--pmv-cell", help="graph@algo@strategy")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = []
+    if args.all:
+        for mesh_name in meshes:
+            for kind, name in all_cells():
+                results.append(run_cell(kind, name, mesh_name, force=args.force))
+    elif args.pmv_cell:
+        for mesh_name in meshes:
+            results.append(run_cell("pmv", args.pmv_cell, mesh_name, force=args.force))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all / --pmv-cell)"
+        cell = f"{args.arch}@{args.shape}" + (f"@{args.variant}" if args.variant else "")
+        for mesh_name in meshes:
+            results.append(run_cell("lm", cell, mesh_name, force=args.force))
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes", "model_axis", "worker_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def worker_axes(mesh) -> tuple:
+    """All axes flattened into the PMV engine's 1-D worker axis (paper model:
+    b = number of workers)."""
+    return tuple(mesh.axis_names)

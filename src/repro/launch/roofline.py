@@ -1,0 +1,119 @@
+"""Roofline table generation from dry-run results + the analytic cost model.
+
+Terms per (cell, mesh), all in seconds-per-step:
+
+    compute    = FLOPs_global        / (chips x 197e12 bf16 FLOP/s)
+    memory     = HBM_bytes_global    / (chips x 819e9 B/s)
+    collective = wire_bytes_per_chip / (4 ICI links x 50e9 B/s)
+
+FLOPs/HBM come from the analytic model (flops.py) because XLA's cost
+analysis does not multiply while-loop trip counts; collective bytes come
+from the compiled post-SPMD HLO with trip-count adjustment (hlo_analysis).
+Cross-pod collectives are charged at the same link rate (ICI-optimistic;
+inter-pod DCI is slower — flagged per cell when the pod axis participates).
+
+MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D for inference; the ratio
+MODEL_FLOPS/FLOPs flags remat/masking/padding waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.core.cost_model import HW
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "dryrun_results")
+
+# PMV per-edge cost: combine2 (1 mul) + combineAll (1 add/min) per edge.
+PMV_EDGE_FLOPS = 2.0
+PMV_EDGE_BYTES = 12.0   # seg,gat int32 + w f32 read per edge
+
+
+def load_cells(mesh: str | None = None, *, reanalyze: bool = True):
+    """Load dry-run records; when the gzipped HLO is stored, recompute the
+    collective totals with the current parser (no recompilation needed)."""
+    import gzip
+
+    from repro.launch.hlo_analysis import collective_totals
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        r = json.load(open(f))
+        if mesh and r["mesh"] != mesh:
+            continue
+        hlo_rel = r.get("hlo")
+        if reanalyze and hlo_rel:
+            path = os.path.join(RESULTS_DIR, hlo_rel)
+            if os.path.exists(path):
+                with gzip.open(path, "rt") as hf:
+                    r["collectives"] = collective_totals(hf.read())
+        rows.append(r)
+    return rows
+
+
+def _chips(rec) -> int:
+    return int(np.prod(list(rec["mesh_shape"].values())))
+
+
+def roofline_row(rec) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    chips = _chips(rec)
+    coll_bytes_per_chip = rec["collectives"]["bytes"]["total"]
+    t_coll = coll_bytes_per_chip / (HW.ici_links * HW.ici_link_bw)
+
+    if rec["kind"] == "lm":
+        ana = rec.get("analytic") or {}
+        flops, hbm, model_flops = ana.get("flops", 0), ana.get("hbm_bytes", 0), ana.get("model_flops", 0)
+    else:
+        meta = rec.get("meta", {})
+        m = meta.get("m", 0)
+        n = meta.get("n", 0)
+        flops = m * PMV_EDGE_FLOPS
+        hbm = m * PMV_EDGE_BYTES + 3 * n * 4
+        model_flops = flops
+
+    t_comp = flops / (chips * HW.peak_flops_bf16)
+    t_mem = hbm / (chips * HW.hbm_bw)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    useful_frac = (model_flops / (chips * HW.peak_flops_bf16)) / total if total > 0 else 0.0
+    return {
+        "cell": rec["cell"], "mesh": rec["mesh"], "chips": chips, "kind": rec["kind"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "flops": flops, "model_flops": model_flops,
+        "useful_ratio": model_flops / flops if flops else 0.0,
+        "roofline_frac": useful_frac,   # model-flops-time / bottleneck-time
+        "coll_bytes_per_chip": coll_bytes_per_chip,
+        "arg_bytes_per_chip": rec["memory"].get("argument_size_in_bytes", 0),
+    }
+
+
+def table(mesh="single") -> list[dict]:
+    rows = [roofline_row(r) for r in load_cells(mesh)]
+    return [r for r in rows if r]
+
+
+def markdown(mesh="single") -> str:
+    rows = table(mesh)
+    hdr = ("| cell | chips | compute (ms) | memory (ms) | collective (ms) | dominant "
+           "| MODEL/HLO flops | roofline frac | resident GiB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(rows, key=lambda x: (x["kind"], x["cell"])):
+        lines.append(
+            f"| {r['cell']} | {r['chips']} | {r['t_compute_s']*1e3:.2f} | "
+            f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.3f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.2%} | "
+            f"{r['arg_bytes_per_chip']/2**30:.2f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+if __name__ == "__main__":
+    import sys
+    print(markdown(sys.argv[1] if len(sys.argv) > 1 else "single"))

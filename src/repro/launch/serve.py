@@ -1,0 +1,75 @@
+"""Batched serving driver: prefill + decode loop against the KV/state caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2_130m --smoke \
+        --batch 4 --prompt-len 16 --gen 32
+
+Greedy decoding over synthetic prompts; reports decode tokens/s and checks
+finiteness — the serving-side end-to-end driver (the paper's engine is the
+training-free analog: examples/graph_mining.py)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as configs_lib
+from repro.models.model import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs_lib.ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = configs_lib.smoke_config(args.arch) if args.smoke else configs_lib.config_for(args.arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_seq = P + G
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["vis_emb"] = jax.random.normal(key, (B, cfg.n_vision_tokens, cfg.d_model)) * 0.1
+    if cfg.family == "encdec":
+        batch["enc_emb"] = jax.random.normal(key, (B, P, cfg.d_model)) * 0.1
+
+    cache = model.init_cache(B, max_seq, enc_len=P if cfg.family == "encdec" else 0)
+    cache = model.prefill_cache(params, cache, batch)
+
+    step = jax.jit(model.serve_step, donate_argnums=(1,))
+
+    # prompt ingestion token by token (a fused prefill path is the §Perf
+    # chunked-prefill item)
+    logits = None
+    for t in range(P):
+        logits, cache = step(params, cache, prompts[:, t : t + 1], t)
+
+    out_tokens = []
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    for t in range(P, P + G):
+        out_tokens.append(np.asarray(tok))
+        logits, cache = step(params, cache, tok, t)
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print(f"[serve] {cfg.name}: generated {gen.shape} tokens, "
+          f"{B * G / dt:.1f} tok/s decode")
+    print(f"[serve] sample: {gen[0][:16].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Shared transformer building blocks (pure functional JAX, dict params).
+
+Conventions:
+- activations bf16 (cfg.dtype), reductions (softmax / norms) in f32;
+- GQA everywhere: q [B,S,KVH,G,dh] against k/v [B,S,KVH,dh];
+- two attention paths: dense einsum (short seq) and flash (nested q/kv-chunk
+  scan with online softmax) for long sequences — selected by
+  cfg.flash_threshold;
+- decode path: single-token query against a (possibly sequence-sharded) KV
+  cache, one-hot cache write (auto-partitions under GSPMD without gathers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm", "rope", "swiglu", "attention", "flash_attention",
+    "decode_attention", "cache_write", "init_dense", "init_attn", "init_mlp",
+]
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- init utils
+def init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_attn(key, cfg):
+    """GQA attention params: q/k/v/o projections (+ optional qk norms)."""
+    dh, H, KVH, D = cfg.d_head, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": init_dense(ks[0], D, H * dh, dt),
+        "wk": init_dense(ks[1], D, KVH * dh, dt),
+        "wv": init_dense(ks[2], D, KVH * dh, dt),
+        "wo": init_dense(ks[3], H * dh, D, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(dtype)
+    return {
+        "w_gate": init_dense(ks[0], d_model, d_ff, dt),
+        "w_up": init_dense(ks[1], d_model, d_ff, dt),
+        "w_down": init_dense(ks[2], d_ff, d_model, dt),
+    }
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+# -------------------------------------------------------------------- RoPE
+def rope(x, positions, theta=1e4):
+    """x: [..., S, H, dh]; positions: [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLP
+def swiglu(p, x):
+    g = jax.nn.silu(x @ p["w_gate"])
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+# --------------------------------------------------------------- attention
+def _gqa_scores(q, k):
+    """q [B,Sq,KVH,G,dh] x k [B,Sk,KVH,dh] -> [B,KVH,G,Sq,Sk] (f32)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def _mask_bias(q_pos, k_pos, *, causal, window):
+    """[Sq, Sk] additive bias from absolute positions."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Dense-softmax GQA attention.  q [B,Sq,H,dh], k/v [B,Sk,KVH,dh(v)].
+
+    q/k head dim may differ from v head dim (MLA concatenates rope dims onto
+    q/k only); output uses v's head dim.
+    """
+    B, Sq, H, dh = q.shape
+    KVH, dv = k.shape[2], v.shape[-1]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, dh) * (dh ** -0.5)
+    scores = _gqa_scores(qg, k)
+    bias = _mask_bias(
+        jnp.arange(Sq) + q_offset, jnp.arange(k.shape[1]), causal=causal, window=window
+    )
+    probs = jax.nn.softmax(scores + bias[None, None, None], axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, dv)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_chunk=1024, k_chunk=1024,
+                    q_offset=0, skip_masked=False):
+    """Online-softmax attention: O(S * chunk) memory, never materializes SxS.
+
+    Nested lax.scan: outer over query chunks, inner over kv chunks.
+    skip_masked=True (§Perf "triangle scheduling"): fully-masked kv chunks
+    are skipped with lax.cond — ~2x fewer attention FLOPs for causal, ~S/w
+    for sliding-window — at the cost of a branch per inner step.
+    """
+    B, Sq, H, dh = q.shape
+    Sk, KVH, dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // KVH
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+
+    qg = (q.reshape(B, nq, q_chunk, KVH, G, dh) * (dh ** -0.5)).swapaxes(0, 1)
+    ks = k.reshape(B, nk, k_chunk, KVH, dh).swapaxes(0, 1)
+    vs = v.reshape(B, nk, k_chunk, KVH, dv).swapaxes(0, 1)
+
+    def q_step(_, iq_qc):
+        iq, qc = iq_qc  # qc [B, q_chunk, KVH, G, dh]
+        q_pos = iq * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_step(carry, ik_kv):
+            ik, kc, vc = ik_kv
+            k_pos = ik * k_chunk + jnp.arange(k_chunk)
+
+            def compute(carry):
+                m, l, acc = carry
+                s = _gqa_scores(qc, kc)  # [B,KVH,G,qc,kc]
+                s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window)[None, None, None]
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                m_safe = jnp.maximum(m_new, _NEG_INF)
+                p = jnp.exp(s - m_safe[..., None])
+                corr = jnp.exp(jnp.maximum(m, _NEG_INF) - m_safe)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+                acc_new = acc * corr[..., None] + pv
+                return (m_new, l_new, acc_new)
+
+            if not skip_masked:
+                return compute(carry), None
+            needed = jnp.asarray(True)
+            if causal:
+                needed &= k_pos[0] <= q_pos[-1]          # chunk not in the future
+            if window:
+                needed &= k_pos[-1] > q_pos[0] - window  # chunk inside the window
+            return jax.lax.cond(needed, compute, lambda c: c, carry), None
+
+        shape = (B, KVH, G, q_chunk)
+        init = (
+            jnp.full(shape, -jnp.inf, jnp.float32),
+            jnp.zeros(shape, jnp.float32),
+            jnp.zeros(shape + (dv,), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]          # [B,KVH,G,qc,dh]
+        return None, out.astype(v.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))  # [nq,B,KVH,G,qc,dv]
+    out = jnp.moveaxis(outs, 0, 1)  # [B,nq,KVH,G,qc,dv]
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sq, H, dv)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+    """Single-token attention against the cache.  q [B,1,H,dh];
+    k/v_cache [B,S,KVH,dh]; pos: scalar int (tokens already in cache,
+    including the one just written at index pos)."""
+    B, _, H, dh = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, dh) * (dh ** -0.5)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache, preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(S)
+    ok = k_pos <= pos
+    if window:
+        ok &= k_pos > pos - window
+    s = jnp.where(ok[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, dh)
+
+
+def cache_write(cache, new, pos):
+    """One-hot write of new [B,1,...] at time index pos into cache [B,S,...].
+
+    Elementwise over the (possibly sharded) S axis — no gathers under GSPMD.
+    """
+    S = cache.shape[1]
+    onehot = (jnp.arange(S) == pos).astype(cache.dtype)
+    shape = (1, S) + (1,) * (cache.ndim - 2)
+    return cache * (1 - onehot.reshape(shape)) + new.astype(cache.dtype) * onehot.reshape(shape)

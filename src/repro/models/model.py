@@ -1,0 +1,258 @@
+"""Public model API: init_params / forward / loss_fn / init_cache / serve_step.
+
+Batch dicts:
+  decoder-only:  {"tokens": [B,S] i32}
+  vlm:           {"tokens": [B,S] i32, "vis_emb": [B,Nv,D] bf16}   (stub frontend)
+  encdec:        {"enc_emb": [B,Se,D] bf16, "tokens": [B,Sd] i32}  (stub frontend)
+
+serve_step(params, cache, tokens [B,1], pos) -> (logits [B,1,V], cache') —
+one decode step against the KV/state caches; modality caches (cross K/V,
+encoder output projections) are filled once by ``prefill_cache``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense, rms_norm
+from repro.models.transformer import (
+    _sp_constraint,
+    apply_block,
+    decode_block,
+    init_block,
+    init_block_cache,
+)
+
+__all__ = ["Model", "build_model", "sinusoid_positions"]
+
+AUX_LOSS_COEF = 0.01
+
+
+def sinusoid_positions(seq: int, d: int, offset=0):
+    pos = (jnp.arange(seq) + offset)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle)).at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def init_params(self, key):
+        cfg = self.cfg
+        plan = cfg.scan_plan()
+        dt = jnp.dtype(cfg.dtype)
+        k_emb, k_head, k_sb, k_tail, k_lm, k_enc = jax.random.split(key, 6)
+        params = {
+            "wte": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+            "ln_f": jnp.ones((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_dense(k_lm, cfg.d_model, cfg.vocab, dt)
+
+        def init_sb(k, pattern):
+            ks = jax.random.split(k, len(pattern))
+            return {f"l{i}": init_block(ks[i], cfg, kind) for i, kind in enumerate(pattern)}
+
+        if cfg.family == "encdec":
+            params["enc_blocks"] = jax.vmap(partial(init_sb, pattern=("enc",)))(
+                jax.random.split(k_enc, cfg.n_layers))
+            params["ln_enc"] = jnp.ones((cfg.d_model,), dt)
+            params["dec_blocks"] = jax.vmap(partial(init_sb, pattern=("dec",)))(
+                jax.random.split(k_sb, cfg.n_layers))
+            return params
+
+        params["head"] = [init_block(k, cfg, kind) for k, kind in
+                          zip(jax.random.split(k_head, max(len(plan["head"]), 1)), plan["head"])]
+        params["blocks"] = jax.vmap(partial(init_sb, pattern=plan["pattern"]))(
+            jax.random.split(k_sb, plan["n_sb"]))
+        params["tail"] = [init_block(k, cfg, kind) for k, kind in
+                          zip(jax.random.split(k_tail, max(len(plan["tail"]), 1)), plan["tail"])]
+        return params
+
+    # ------------------------------------------------------------ forward
+    def _run_stack(self, params, x, aux, pattern, blocks_key):
+        cfg = self.cfg
+
+        def sb_fn(carry, p_sb):
+            x, al = carry
+            for i, kind in enumerate(pattern):
+                x, a = apply_block(kind, p_sb[f"l{i}"], x, cfg, aux)
+                x = _sp_constraint(x, cfg)  # anchor the residual stream (SP)
+                al = al + a
+            return (x, al), None
+
+        body = jax.checkpoint(sb_fn) if cfg.remat == "block" else sb_fn
+        (x, aux_loss), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params[blocks_key])
+        return x, aux_loss
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.family == "encdec":
+            return self._forward_encdec(params, batch)
+
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = _sp_constraint(params["wte"][tokens].astype(dt), cfg)
+        aux = {"positions": jnp.arange(S)[None, :], "ctx": batch.get("vis_emb")}
+
+        plan = cfg.scan_plan()
+        aux_total = jnp.zeros((), jnp.float32)
+        for p, kind in zip(params["head"], plan["head"]):
+            x, a = apply_block(kind, p, x, cfg, aux)
+            aux_total += a
+        x, a = self._run_stack(params, x, aux, plan["pattern"], "blocks")
+        aux_total += a
+        for p, kind in zip(params["tail"], plan["tail"]):
+            x, a = apply_block(kind, p, x, cfg, aux)
+            aux_total += a
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = x @ (params["wte"].T.astype(dt) if cfg.tie_embeddings else params["lm_head"])
+        return logits, aux_total
+
+    def _forward_encdec(self, params, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        enc = batch["enc_emb"].astype(dt)
+        Se = enc.shape[1]
+        enc = enc + sinusoid_positions(Se, cfg.d_model).astype(dt)[None]
+        aux_e = {"positions": jnp.arange(Se)[None, :], "ctx": None}
+        enc, _ = self._run_stack(params, enc, aux_e, ("enc",), "enc_blocks")
+        enc = rms_norm(enc, params["ln_enc"], cfg.norm_eps)
+
+        tokens = batch["tokens"]
+        Sd = tokens.shape[1]
+        y = params["wte"][tokens].astype(dt)
+        y = y + sinusoid_positions(Sd, cfg.d_model).astype(dt)[None]
+        aux_d = {"positions": jnp.arange(Sd)[None, :], "ctx": enc}
+        y, _ = self._run_stack(params, y, aux_d, ("dec",), "dec_blocks")
+        y = rms_norm(y, params["ln_f"], cfg.norm_eps)
+        logits = y @ params["wte"].T.astype(dt)  # whisper ties
+        return logits, jnp.zeros((), jnp.float32)
+
+    # --------------------------------------------------------------- loss
+    def loss_fn(self, params, batch):
+        """Next-token cross entropy (mean over B*(S-1) tokens)."""
+        logits, aux_loss = self.forward(params, batch)
+        tokens = batch["tokens"]
+        lg = logits[:, :-1].astype(jnp.float32)
+        tgt = tokens[:, 1:]
+        logz = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+        loss = ce + AUX_LOSS_COEF * aux_loss
+        return loss, {"ce": ce, "aux_loss": aux_loss}
+
+    # -------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_seq: int, enc_len: int = 0, dtype=None):
+        cfg = self.cfg
+        dt = jnp.dtype(dtype or cfg.dtype)
+        mk = lambda kind: init_block_cache(cfg, kind, batch, max_seq, dt, enc_len=enc_len)
+        if cfg.family == "encdec":
+            return {"dec_blocks": _stack_caches(
+                [{"l0": mk("dec")} for _ in range(cfg.n_layers)])}
+        plan = cfg.scan_plan()
+        return {
+            "head": [mk(k) for k in plan["head"]],
+            "blocks": _stack_caches([
+                {f"l{i}": mk(kind) for i, kind in enumerate(plan["pattern"])}
+                for _ in range(plan["n_sb"])]),
+            "tail": [mk(k) for k in plan["tail"]],
+        }
+
+    # --------------------------------------------------------- serve step
+    def serve_step(self, params, cache, tokens, pos):
+        """tokens [B,1] -> (logits [B,1,V], cache')."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["wte"][tokens].astype(dt)
+        if cfg.family == "encdec":
+            x = x + sinusoid_positions(1, cfg.d_model, offset=pos).astype(dt)[None]
+            def sb_dec(x, pc):
+                p_sb, c_sb = pc
+                x, c = decode_block("dec", p_sb["l0"], x, cfg, c_sb["l0"], pos)
+                return x, {"l0": c}
+            x, new_cache = jax.lax.scan(sb_dec, x, (params["dec_blocks"], cache["dec_blocks"]))
+            x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+            return x @ params["wte"].T.astype(dt), {"dec_blocks": new_cache}
+
+        plan = cfg.scan_plan()
+        new_head = []
+        for p, kind, c in zip(params["head"], plan["head"], cache["head"]):
+            x, c2 = decode_block(kind, p, x, cfg, c, pos)
+            new_head.append(c2)
+
+        def sb_dec(x, pc):
+            p_sb, c_sb = pc
+            new_c = {}
+            for i, kind in enumerate(plan["pattern"]):
+                x, new_c[f"l{i}"] = decode_block(kind, p_sb[f"l{i}"], x, cfg, c_sb[f"l{i}"], pos)
+            return x, new_c
+
+        x, new_blocks = jax.lax.scan(sb_dec, x, (params["blocks"], cache["blocks"]))
+
+        new_tail = []
+        for p, kind, c in zip(params["tail"], plan["tail"], cache["tail"]):
+            x, c2 = decode_block(kind, p, x, cfg, c, pos)
+            new_tail.append(c2)
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = x @ (params["wte"].T.astype(dt) if cfg.tie_embeddings else params["lm_head"])
+        return logits, {"head": new_head, "blocks": new_blocks, "tail": new_tail}
+
+    # ------------------------------------------------------------ prefill
+    def prefill_cache(self, params, cache, batch):
+        """Fill the static modality caches (cross K/V) from stub embeddings."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        KVH, dh = cfg.n_kv_heads, cfg.d_head
+
+        def proj_kv(p, ctx):
+            k = (ctx @ p["wk"]).reshape(ctx.shape[0], ctx.shape[1], KVH, dh)
+            v = (ctx @ p["wv"]).reshape(ctx.shape[0], ctx.shape[1], KVH, dh)
+            return k, v
+
+        if cfg.family == "vlm":
+            ctx = batch["vis_emb"].astype(dt)
+            def fill(p_sb, c_sb):
+                k, v = proj_kv(p_sb["l0"]["xattn"], ctx)
+                c_sb["l0"] = dict(c_sb["l0"], xk=k, xv=v)
+                return c_sb
+            cache = dict(cache)
+            cache["blocks"] = jax.vmap(
+                lambda p, c: fill(p, dict(c)))(params["blocks"], cache["blocks"])
+            return cache
+        if cfg.family == "encdec":
+            enc = batch["enc_emb"].astype(dt)
+            enc = enc + sinusoid_positions(enc.shape[1], cfg.d_model).astype(dt)[None]
+            aux_e = {"positions": jnp.arange(enc.shape[1])[None, :], "ctx": None}
+            enc, _ = self._run_stack(params, enc, aux_e, ("enc",), "enc_blocks")
+            enc = rms_norm(enc, params["ln_enc"], cfg.norm_eps)
+            def fill(p_sb, c_sb):
+                k, v = proj_kv(p_sb["l0"]["xattn"], enc)
+                return dict(c_sb, l0=dict(c_sb["l0"], xk=k, xv=v))
+            cache = dict(cache)
+            cache["dec_blocks"] = jax.vmap(fill)(params["dec_blocks"], cache["dec_blocks"])
+            return cache
+        return cache
+
+
+def _stack_caches(caches: list):
+    if not caches:
+        return {}
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *caches)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

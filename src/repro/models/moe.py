@@ -1,0 +1,105 @@
+"""Mixture-of-Experts FFN with capacity-factor dispatch (GShard-style).
+
+Dispatch is the PMV connection (DESIGN.md §5): token->expert routing is a
+sparse generalized matvec.  We reuse the same static-capacity compaction
+trick as core/sparse_exchange.py — per expert, take the first C assigned
+slots via top_k on a "first-valid" score — then gather/scatter, which GSPMD
+turns into the expert-parallel all_to_all-ish schedule.  Overflowing tokens
+are dropped (standard capacity-factor semantics, cf. the PMV cost-model
+capacity with slack = capacity_factor).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, cfg):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    scale_in, scale_out = D ** -0.5, F ** -0.5
+    p = {
+        "router": init_dense(ks[0], D, E, jnp.float32),  # router in f32
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * scale_in).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * scale_in).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32) * scale_out).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.moe_d_ff * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": init_dense(kss[0], D, Fs, dt),
+            "w_up": init_dense(kss[1], D, Fs, dt),
+            "w_down": init_dense(kss[2], Fs, D, dt),
+        }
+    return p
+
+
+def _dispatch_indices(expert_ids, n_experts, capacity):
+    """expert_ids [T, k] -> (token_slot [E, C] int32 into flat T*k, valid [E, C]).
+
+    First-come-first-served within each expert, matching GShard capacity
+    semantics; relies only on top_k + comparisons (no sort of the full table).
+    """
+    Tk = expert_ids.shape[0] * expert_ids.shape[1]
+    flat = expert_ids.reshape(-1)                      # [T*k]
+    arange = jnp.arange(Tk, dtype=jnp.int32)
+    # score[e, s] > 0 iff slot s routed to e; earlier slots score higher.
+    score = jnp.where(flat[None, :] == jnp.arange(n_experts)[:, None], Tk - arange[None, :], 0)
+    top_score, top_idx = jax.lax.top_k(score, capacity)  # [E, C]
+    valid = top_score > 0
+    return jnp.where(valid, top_idx.astype(jnp.int32), Tk), valid
+
+
+def moe_ffn(p, x, cfg, *, return_aux=False, no_drop=False):
+    """x [B, S, D] -> [B, S, D].  Routed top-k experts + optional shared.
+
+    no_drop=True (decode/inference): capacity = T*k, no token ever dropped.
+    Training uses the GShard capacity factor (drops on overflow).
+    """
+    B, S, D = x.shape
+    E, k, F = cfg.n_experts, cfg.top_k, cfg.moe_d_ff
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])    # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, k)                # [T, k]
+    gate = gate / jnp.clip(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)  # renorm
+
+    if no_drop:
+        capacity = T * k
+    else:
+        capacity = int(T * k / E * cfg.capacity_factor) or 1
+        capacity = min(capacity, T * k)
+    slot_tok, valid = _dispatch_indices(eid, E, capacity)   # [E, C] into T*k
+    tok_idx = jnp.clip(slot_tok // k, 0, T - 1)             # token of each slot
+    gate_ec = jnp.where(valid, gate.reshape(-1)[jnp.clip(slot_tok, 0, T * k - 1)], 0.0)
+
+    x_e = xt[tok_idx] * valid[..., None].astype(xt.dtype)   # [E, C, D]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_e, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", x_e, p["w_up"])
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])        # [E, C, D]
+    y_e = y_e * gate_ec[..., None].astype(y_e.dtype)
+
+    out = jnp.zeros((T, D), x.dtype).at[tok_idx.reshape(-1)].add(
+        y_e.reshape(-1, D), mode="drop")
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        g = jax.nn.silu(xt @ sp["w_gate"])
+        out = out + (g * (xt @ sp["w_up"])) @ sp["w_down"]
+
+    out = out.reshape(B, S, D)
+    if not return_aux:
+        return out
+    # GShard load-balancing aux loss.
+    density = jnp.mean(jax.nn.one_hot(eid[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * mean_prob) * E
+    return out, aux

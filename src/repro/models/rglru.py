@@ -1,0 +1,93 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence: r_t = σ(W_r x_t), i_t = σ(W_i x_t),
+            a_t = exp(-c · softplus(Λ) · r_t)          (c = 8)
+            h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+A first-order linear recurrence with input-dependent decay — computed with
+an associative scan over time for training, O(1) per-step for decode.
+The full recurrent block follows Griffin: dual branches (conv1d -> RG-LRU)
+x (linear -> GeLU), elementwise product, output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+__all__ = ["init_rglru_block", "rglru_block", "rglru_decode", "init_rglru_cache"]
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg):
+    D, W = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_x": init_dense(ks[0], D, W, dt),           # recurrent branch in
+        "w_gate_branch": init_dense(ks[1], D, W, dt),  # gelu branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, W), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((W,), dt),
+        "w_r": init_dense(ks[3], W, W, dt),
+        "w_i": init_dense(ks[4], W, W, dt),
+        # Λ init so that a in (0.9, 0.999) at r=1 (Griffin §2.4):
+        # softplus(Λ) = -ln(a)/c  =>  Λ = ln(expm1(-ln(a)/c))
+        "lam": jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, W)) / _C)).astype(jnp.float32),
+        "w_out": init_dense(ks[5], W, D, dt),
+    }
+
+
+def _rglru_gates(p, xw):
+    """xw [.., W] -> (log_a, gated_input) in f32."""
+    r = jax.nn.sigmoid((xw @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xw @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r               # <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9))
+    gated = beta * i * xw.astype(jnp.float32)
+    return a, gated
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def rglru_block(p, x, cfg):
+    """Full-sequence recurrent block.  x [B,S,D] -> [B,S,D]."""
+    xw = _causal_conv(x @ p["w_x"], p["conv_w"], p["conv_b"])
+    a, gated = _rglru_gates(p, xw)
+
+    def combine(e1, e2):
+        a1, h1 = e1
+        a2, h2 = e2
+        return a1 * a2, h1 * a2 + h2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    branch = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32))
+    y = (h * branch).astype(x.dtype)
+    return y @ p["w_out"]
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    W = cfg.lru_width
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, W), dtype),
+        "h": jnp.zeros((batch, W), jnp.float32),
+    }
+
+
+def rglru_decode(p, x, cfg, cache):
+    """One-step update.  x [B,1,D]."""
+    xw_in = x[:, 0] @ p["w_x"]                                 # [B,W]
+    window = jnp.concatenate([cache["conv"], xw_in[:, None]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    a, gated = _rglru_gates(p, conv_out)
+    h = cache["h"] * a + gated
+    branch = jax.nn.gelu((x[:, 0] @ p["w_gate_branch"]).astype(jnp.float32))
+    y = (h * branch).astype(x.dtype)[:, None]
+    return y @ p["w_out"], {"conv": window[:, 1:], "h": h}

@@ -1,0 +1,137 @@
+"""Sharding rules for params / batches / caches on the production mesh.
+
+Policy (baseline; §Perf iterates on it):
+- 2D weight sharding: every large matrix is sharded over BOTH mesh axes —
+  TP on the "parallel" dim ('model') and FSDP/ZeRO-3 on the other ('data').
+  Optimizer moments inherit the same specs.  Weights are replicated across
+  'pod' (pure cross-pod DP; cross-pod ZeRO is a config away but costs
+  inter-pod all-gathers every step).
+- Specs are right-aligned: a rule gives the spec of the *core* trailing dims
+  and any extra leading dims (scan-stack axis, expert axis) are replicated.
+- Batch dims shard over ('pod','data') when divisible, else replicate
+  (long_500k has global_batch=1).
+- Full-attention KV caches shard their sequence dim over 'model'
+  (flash-decode style split-KV); ring/window caches and SSM states are small
+  and shard over batch only.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings", "sds_with"]
+
+# rule: leaf name -> spec of trailing core dims
+_RULES = {
+    "wte": ("model", "data"),
+    "lm_head": ("data", "model"),
+    "wq": ("data", "model"), "wk": ("data", "model"), "wv": ("data", "model"),
+    "w_q": ("data", "model"), "w_dkv": ("data", "model"),
+    "w_in": ("data", "model"), "w_x": ("data", "model"),
+    "w_gate_branch": ("data", "model"), "w_r": ("data", "model"), "w_i": ("data", "model"),
+    "w_gate": ("data", "model"), "w_up": ("data", "model"),
+    "wo": ("model", "data"), "w_o": ("model", "data"),
+    "w_down": ("model", "data"), "w_out": ("model", "data"),
+    "w_uk": (None, "model"), "w_uv": (None, "model"),
+    "router": ("data", None),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+}
+
+_LEAF_NAME = re.compile(r"\['([^']+)'\]$|\.(\w+)$")
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    if hasattr(last, "key"):
+        return str(last.key)
+    if hasattr(last, "name"):
+        return str(last.name)
+    return str(last)
+
+
+def _spec_for(name: str, ndim: int, shape, mesh) -> P:
+    core = _RULES.get(name, ())
+    core = core[-ndim:] if ndim < len(core) else core
+    spec = (None,) * (ndim - len(core)) + tuple(core)
+    # drop axes that do not divide the dim (GSPMD allows uneven, but padding
+    # waste on weights is pointless; replicate instead)
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))])
+        fixed.append(ax if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_shardings(params_shapes, mesh):
+    """params_shapes: pytree of arrays or ShapeDtypeStructs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        spec = _spec_for(_leaf_name(path), len(leaf.shape), leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _batch_axes(mesh, batch_size: int):
+    dp = data_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in dp]))
+    return dp if batch_size % total == 0 else None
+
+
+def batch_shardings(batch_shapes, mesh):
+    def shard_one(leaf):
+        dp = _batch_axes(mesh, leaf.shape[0])
+        spec = (dp,) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(shard_one, batch_shapes)
+
+
+def cache_shardings(cache_shapes, mesh, cfg):
+    """Cache sharding.  Core cache layouts are [B, S|N, ...]; leaves under
+    the scanned superblock stack carry an extra leading [n_sb] axis, so the
+    rule is right-aligned on the *core* dims (like param rules):
+    - batch dim over ('pod','data') when divisible;
+    - a long sequence dim (full-attn KV, MLA latents) over 'model'
+      (split-KV flash-decode); ring/window caches and SSM states batch-only.
+    """
+    mdl = mesh.shape["model"]
+    core_ndim = {"k": 4, "v": 4, "xk": 4, "xv": 4, "c_kv": 3, "k_rope": 3,
+                 "conv": 3, "state": 4, "h": 2}
+
+    def shard_one(path, leaf):
+        shape = leaf.shape
+        name = _leaf_name(path)
+        nd = core_ndim.get(name, len(shape))
+        lead = len(shape) - nd          # 1 when stacked under the scan axis
+        assert lead in (0, 1), (name, shape)
+        b_dim, s_dim = lead, lead + 1
+        spec = [None] * len(shape)
+        spec[b_dim] = _batch_axes(mesh, shape[b_dim])
+        seq_shardable = (
+            name in ("k", "v", "c_kv", "k_rope", "xk", "xv")
+            and nd >= 2
+            and shape[s_dim] >= 4 * mdl
+            and shape[s_dim] % mdl == 0
+            and cfg.decode_seq_shard
+        )
+        if seq_shardable:
+            spec[s_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(treedef, [shard_one(p, l) for p, l in flat])
+
+
+def sds_with(tree, shardings):
+    """Attach shardings to a ShapeDtypeStruct pytree (for .lower)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), tree, shardings)

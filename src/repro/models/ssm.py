@@ -1,0 +1,165 @@
+"""Mamba-2 / SSD (state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: sequence split into chunks of length Q; within a chunk the
+recurrence is computed in its dual quadratic-attention form (MXU-friendly
+masked matmuls); chunk boundary states propagate through an associative
+scan.  Decode is the O(1) recurrent update — no KV cache, which is why
+mamba2 runs the long_500k cell.
+
+Shapes: x [B,S,HP] split into H heads of P dims; B_ssm/C [B,S,N] (single
+group); dt [B,S,H]; A [H] (negative reals).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, rms_norm
+
+__all__ = ["init_mamba", "mamba_block", "mamba_decode", "init_mamba_cache"]
+
+
+def init_mamba(key, cfg):
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    conv_ch = DI + 2 * N  # conv over (x, B, C) as in the reference impl
+    return {
+        # in_proj -> [z (DI), x (DI), B (N), C (N), dt (H)]
+        "w_in": init_dense(ks[0], D, 2 * DI + 2 * N + H, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((H,), jnp.float32),          # A = -exp(a_log)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.ones((DI,), dt),
+        "w_out": init_dense(ks[2], DI, D, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d.  x [B,S,C], w [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def ssd_chunked(x, dt, A, B_ssm, C, chunk: int):
+    """Chunked SSD scan.
+
+    x [B,S,H,P], dt [B,S,H] (>0), A [H] (<0), B_ssm/C [B,S,N].
+    Returns y [B,S,H,P] and the final state [B,H,P,N].
+    """
+    Bb, S, H, P = x.shape
+    N = B_ssm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = B_ssm.reshape(Bb, nc, Q, N)
+    Cc = C.reshape(Bb, nc, Q, N)
+
+    dA = dtc * A  # [B,nc,Q,H] (negative)
+    seg = jnp.cumsum(dA, axis=2)                      # within-chunk cumulative log-decay
+    total = seg[:, :, -1, :]                          # [B,nc,H]
+
+    # --- intra-chunk (dual quadratic form) --------------------------------
+    # L[q,s] = exp(seg[q] - seg[s]) for s <= q else 0
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # [B,nc,Q(q),Q(s),H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)                 # [B,nc,Q,Q]
+    scores = cb[..., None] * L                                  # [B,nc,Q,Q,H]
+    xdt = (xc * dtc[..., None].astype(x.dtype))                 # [B,nc,Q,H,P]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", scores.astype(x.dtype), xdt)
+
+    # --- chunk states + inter-chunk associative scan ----------------------
+    decay_to_end = jnp.exp(total[:, :, None, :] - seg)          # [B,nc,Q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, (dtc * decay_to_end).astype(x.dtype), xc)
+
+    gammas = jnp.exp(total)                                     # [B,nc,H]
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None].astype(s1.dtype) + s2
+
+    a_scan, s_scan = jax.lax.associative_scan(combine, (gammas, states), axis=1)
+    # state *entering* chunk c = scanned state of chunk c-1 (zero for c=0)
+    prev = jnp.concatenate([jnp.zeros_like(s_scan[:, :1]), s_scan[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum(
+        "bcqn,bchpn->bcqhp", (Cc * jnp.ones(1)).astype(x.dtype), prev
+    ) * jnp.exp(seg)[..., None].astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    final = s_scan[:, -1]                                       # [B,H,P,N]
+    return y, final
+
+
+def _split_in(p, x, cfg):
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :DI]
+    xbc = zxbcdt[..., DI : 2 * DI + 2 * N]
+    dt_raw = zxbcdt[..., 2 * DI + 2 * N :]
+    return z, xbc, dt_raw
+
+
+def mamba_block(p, x, cfg):
+    """Full-sequence Mamba-2 mixer.  x [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_in(p, x, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :DI].reshape(B, S, H, P)
+    B_ssm = xbc[..., DI : DI + N]
+    C = xbc[..., DI + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    A = -jnp.exp(p["a_log"])
+
+    y, _ = ssd_chunked(xs, dt, A, B_ssm, C, cfg.ssm_chunk)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, DI)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_ch = DI + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cfg, cache):
+    """One-token recurrent update.  x [B,1,D]."""
+    B = x.shape[0]
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_in(p, x, cfg)
+
+    # conv over (cached last K-1 inputs ++ current)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)      # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:]
+
+    xs = xbc1[..., :DI].reshape(B, H, P)
+    B_ssm = xbc1[:, 0, DI : DI + N]
+    C = xbc1[:, 0, DI + N :]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["a_log"])
+
+    gamma = jnp.exp(dt * A)                                     # [B,H]
+    upd = jnp.einsum("bn,bh,bhp->bhpn", B_ssm.astype(jnp.float32), dt, xs.astype(jnp.float32))
+    state = cache["state"] * gamma[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), state).astype(x.dtype)
+    y = y + xs * p["d_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, 1, DI)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"], {"conv": new_conv, "state": state}

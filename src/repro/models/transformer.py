@@ -1,0 +1,337 @@
+"""Model assembly: block kinds, superblock scan, train forward + decode.
+
+Every architecture is a stack of *superblocks* (cfg.scan_plan()) so that
+heterogeneous stacks (VLM cross-attn every 5th layer, Griffin's
+rec/rec/attn pattern, DeepSeek's first-dense layer) still lower to a single
+`lax.scan` over stacked parameters — keeping HLO size O(1) in depth, which
+is what makes 100-layer x 512-device dry-runs compile in reasonable time.
+
+Block kinds:
+  self   — [RMSNorm -> GQA attn (full/sliding, RoPE, qk_norm) -> RMSNorm -> SwiGLU]
+  moe    — attention (GQA or MLA per cfg.attn_kind) + MoE FFN
+  cross  — gated cross-attention to stub modality tokens + gated MLP (VLM)
+  rglru  — Griffin recurrent block + MLP
+  mamba  — Mamba-2 SSD mixer (no separate FFN)
+  enc    — bidirectional attention + MLP (whisper encoder)
+  dec    — causal self-attn + cross-attn(enc) + MLP (whisper decoder)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mla as mla_lib, moe as moe_lib, rglru as rglru_lib, ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    attention,
+    cache_write,
+    flash_attention,
+    init_attn,
+    init_dense,
+    init_mlp,
+    rms_norm,
+    rope,
+)
+
+__all__ = ["init_block", "apply_block", "decode_block", "init_block_cache"]
+
+
+# =========================================================================
+# attention wrappers (GQA path)
+# =========================================================================
+
+def _sp_constraint(x, cfg, seq_axis_pos=1):
+    """Sequence-parallel sharding constraint (cfg.seq_parallel): batch over
+    dp axes, the sequence dim over 'model', heads replicated."""
+    if not cfg.seq_parallel:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = [None] * x.ndim
+    spec[0] = cfg.dp_axes if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
+    spec[seq_axis_pos] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _replicated_constraint(x, cfg):
+    if not cfg.seq_parallel:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = [None] * x.ndim
+    spec[0] = cfg.dp_axes if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, KVH, dh)
+    v = (x @ p["wv"]).reshape(B, S, KVH, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if S > 1:  # decode keeps its own cache sharding
+        q = _sp_constraint(q, cfg)
+        k = _replicated_constraint(k, cfg)
+        v = _replicated_constraint(v, cfg)
+    return q, k, v
+
+
+def gqa_attention(p, x, cfg, positions, *, causal=True, window=0):
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    if S > cfg.flash_threshold:
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=cfg.attn_chunk_q, k_chunk=cfg.attn_chunk_k,
+                              skip_masked=cfg.flash_skip)
+    else:
+        out = attention(q, k, v, causal=causal, window=window)
+    return out.reshape(B, S, cfg.n_heads * cfg.d_head) @ p["wo"]
+
+
+def cross_attention(p, x, ctx, cfg):
+    """q from x [B,S,D], k/v from ctx [B,Sc,D] (no positions, no mask)."""
+    B, S, _ = x.shape
+    Sc = ctx.shape[1]
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (ctx @ p["wk"]).reshape(B, Sc, KVH, dh)
+    v = (ctx @ p["wv"]).reshape(B, Sc, KVH, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    out = attention(q, k, v, causal=False)
+    return out.reshape(B, S, H * dh) @ p["wo"]
+
+
+def _ring_mask(pos, W):
+    """Ring-buffer cache slot validity + nothing else needed: every live slot
+    is inside the window by construction; slot j holds absolute position
+    pos - ((pos - j) mod W)."""
+    j = jnp.arange(W)
+    p_j = pos - jnp.mod(pos - j, W)
+    return p_j >= 0
+
+
+def gqa_decode(p, x, cfg, cache, pos):
+    """One-token attention with KV cache.
+
+    Windowed attention (cfg.window > 0) uses a ring buffer of `window` slots
+    (RoPE applied at write time with absolute positions, so rotation is
+    transparent); full attention uses a full-length cache.
+    """
+    B = x.shape[0]
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    positions = jnp.full((B, 1), pos)
+    q, k, v = _qkv(p, x, cfg, positions)
+    W = cache["k"].shape[1]
+    ring = cfg.window != 0
+    slot = jnp.mod(pos, W) if ring else pos
+    kc = cache_write(cache["k"], k, slot)
+    vc = cache_write(cache["v"], v, slot)
+    if ring:
+        ok = _ring_mask(pos, W)
+    else:
+        ok = jnp.arange(W) <= pos
+    qg = q.reshape(B, KVH, H // KVH, dh) * (dh ** -0.5)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kc, preferred_element_type=jnp.float32)
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(vc.dtype), vc)
+    out = out.reshape(B, 1, H * dh) @ p["wo"]
+    return out, {"k": kc, "v": vc}
+
+
+def cfg_max_cache(cfg) -> int:
+    """Cache length policy: ring of `window` slots for windowed attention."""
+    return cfg.window if cfg.window else 1 << 62
+
+
+# =========================================================================
+# block init / apply / decode — dispatched on kind
+# =========================================================================
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    ln = lambda: jnp.ones((D,), dt)
+
+    if kind == "self":
+        return {"ln1": ln(), "attn": _init_attn_kind(k1, cfg), "ln2": ln(),
+                "mlp": init_mlp(k2, D, cfg.d_ff, dt)}
+    if kind == "moe":
+        return {"ln1": ln(), "attn": _init_attn_kind(k1, cfg), "ln2": ln(),
+                "moe": moe_lib.init_moe(k2, cfg)}
+    if kind == "dense_ffn":  # MoE model's first dense layer(s)
+        return {"ln1": ln(), "attn": _init_attn_kind(k1, cfg), "ln2": ln(),
+                "mlp": init_mlp(k2, D, cfg.d_ff, dt)}
+    if kind == "cross":
+        return {"ln1": ln(), "xattn": init_attn(k1, cfg), "gate_attn": jnp.zeros((), dt),
+                "ln2": ln(), "mlp": init_mlp(k2, D, cfg.d_ff, dt), "gate_mlp": jnp.zeros((), dt)}
+    if kind == "rglru":
+        return {"ln1": ln(), "rec": rglru_lib.init_rglru_block(k1, cfg), "ln2": ln(),
+                "mlp": init_mlp(k2, D, cfg.d_ff, dt)}
+    if kind == "attn_local":  # griffin local-attention layer
+        return {"ln1": ln(), "attn": init_attn(k1, cfg), "ln2": ln(),
+                "mlp": init_mlp(k2, D, cfg.d_ff, dt)}
+    if kind == "mamba":
+        return {"ln1": ln(), "mixer": ssm_lib.init_mamba(k1, cfg)}
+    if kind == "enc":
+        return {"ln1": ln(), "attn": init_attn(k1, cfg), "ln2": ln(),
+                "mlp": init_mlp(k2, D, cfg.d_ff, dt)}
+    if kind == "dec":
+        return {"ln1": ln(), "attn": init_attn(k1, cfg), "lnx": ln(),
+                "xattn": init_attn(k2, cfg), "ln2": ln(),
+                "mlp": init_mlp(k3, D, cfg.d_ff, dt)}
+    raise ValueError(kind)
+
+
+def _init_attn_kind(key, cfg):
+    if cfg.attn_kind == "mla":
+        return mla_lib.init_mla(key, cfg)
+    return init_attn(key, cfg)
+
+
+def _self_attn_apply(p, x, cfg, positions, *, window=None):
+    window = cfg.window if window is None else window
+    if cfg.attn_kind == "mla":
+        flash = x.shape[1] > cfg.flash_threshold
+        return mla_lib.mla_attention(p, x, cfg, positions, flash=flash,
+                                     q_chunk=cfg.attn_chunk_q, k_chunk=cfg.attn_chunk_k)
+    return gqa_attention(p, x, cfg, positions, causal=True, window=window)
+
+
+def apply_block(kind: str, p, x, cfg: ModelConfig, aux: dict):
+    """Full-sequence (train/prefill) block application.  x [B,S,D]."""
+    positions = aux["positions"]
+    if kind in ("self", "dense_ffn"):
+        x = x + _self_attn_apply(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+        x = x + layers.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, 0.0
+    if kind == "moe":
+        x = x + _self_attn_apply(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+        y, aux_loss = moe_lib.moe_ffn(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, return_aux=True)
+        return x + y, aux_loss
+    if kind == "cross":
+        ctx = aux["ctx"]
+        x = x + jnp.tanh(p["gate_attn"]) * cross_attention(
+            p["xattn"], rms_norm(x, p["ln1"], cfg.norm_eps), ctx, cfg)
+        x = x + jnp.tanh(p["gate_mlp"]) * layers.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, 0.0
+    if kind == "rglru":
+        x = x + rglru_lib.rglru_block(p["rec"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+        x = x + layers.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, 0.0
+    if kind == "attn_local":
+        x = x + gqa_attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                              positions, causal=True, window=cfg.window)
+        x = x + layers.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, 0.0
+    if kind == "mamba":
+        x = x + ssm_lib.mamba_block(p["mixer"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+        return x, 0.0
+    if kind == "enc":
+        x = x + gqa_attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                              positions, causal=False, window=0)
+        x = x + layers.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, 0.0
+    if kind == "dec":
+        x = x + gqa_attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                              positions, causal=True, window=0)
+        x = x + cross_attention(p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), aux["ctx"], cfg)
+        x = x + layers.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, 0.0
+    raise ValueError(kind)
+
+
+# =========================================================================
+# decode: per-block caches
+# =========================================================================
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int, dtype, enc_len: int = 0):
+    KVH, dh = cfg.n_kv_heads, cfg.d_head
+    if kind in ("self", "dense_ffn", "moe", "attn_local"):
+        if cfg.attn_kind == "mla" and kind in ("self", "dense_ffn", "moe"):
+            return {"c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype)}
+        W = min(max_seq, cfg_max_cache(cfg))
+        return {"k": jnp.zeros((batch, W, KVH, dh), dtype),
+                "v": jnp.zeros((batch, W, KVH, dh), dtype)}
+    if kind == "cross":
+        # static cross K/V over the modality tokens, filled at prefill
+        n = cfg.n_vision_tokens
+        return {"xk": jnp.zeros((batch, n, KVH, dh), dtype),
+                "xv": jnp.zeros((batch, n, KVH, dh), dtype)}
+    if kind == "rglru":
+        return rglru_lib.init_rglru_cache(cfg, batch, dtype)
+    if kind == "mamba":
+        return ssm_lib.init_mamba_cache(cfg, batch, dtype)
+    if kind == "dec":
+        return {"k": jnp.zeros((batch, max_seq, KVH, dh), dtype),
+                "v": jnp.zeros((batch, max_seq, KVH, dh), dtype),
+                "xk": jnp.zeros((batch, enc_len, KVH, dh), dtype),
+                "xv": jnp.zeros((batch, enc_len, KVH, dh), dtype)}
+    raise ValueError(kind)
+
+
+def _cross_decode(p, x, cfg, xk, xv):
+    B = x.shape[0]
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(B, 1, H, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    qg = q.reshape(B, KVH, H // KVH, dh) * (dh ** -0.5)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, xk, preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(xv.dtype), xv)
+    return out.reshape(B, 1, H * dh) @ p["wo"]
+
+
+def decode_block(kind: str, p, x, cfg: ModelConfig, cache, pos):
+    """One-token block step.  x [B,1,D] -> (x', cache')."""
+    if kind in ("self", "dense_ffn", "moe", "attn_local"):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cfg.attn_kind == "mla":
+            y, cache = mla_lib.mla_decode(p["attn"], h, cfg, cache, pos)
+        else:
+            y, cache = gqa_decode(p["attn"], h, cfg, cache, pos)
+        x = x + y
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            y2 = moe_lib.moe_ffn(p["moe"], h2, cfg, no_drop=True)  # inference: never drop
+        else:
+            y2 = layers.swiglu(p["mlp"], h2)
+        return x + y2, cache
+    if kind == "cross":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + jnp.tanh(p["gate_attn"]) * _cross_decode(p["xattn"], h, cfg, cache["xk"], cache["xv"])
+        x = x + jnp.tanh(p["gate_mlp"]) * layers.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, cache
+    if kind == "rglru":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, cache = rglru_lib.rglru_decode(p["rec"], h, cfg, cache)
+        x = x + y
+        x = x + layers.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, cache
+    if kind == "mamba":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, cache = ssm_lib.mamba_decode(p["mixer"], h, cfg, cache)
+        return x + y, cache
+    if kind == "dec":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, kv = gqa_decode(p["attn"], h, cfg, {"k": cache["k"], "v": cache["v"]}, pos)
+        cache = dict(cache, **kv)
+        x = x + y
+        x = x + _cross_decode(p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), cfg,
+                              cache["xk"], cache["xv"])
+        x = x + layers.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, cache
+    raise ValueError(kind)

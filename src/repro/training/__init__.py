@@ -1,0 +1,14 @@
+from repro.training.optimizer import adamw_init, adamw_update, OptConfig
+from repro.training.train_step import make_train_step, TrainConfig
+from repro.training.data import SyntheticTokenPipeline
+from repro.training import checkpoint
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "OptConfig",
+    "make_train_step",
+    "TrainConfig",
+    "SyntheticTokenPipeline",
+    "checkpoint",
+]

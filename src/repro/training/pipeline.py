@@ -1,0 +1,78 @@
+"""GPipe-style pipeline parallelism over the 'pod' axis (DESIGN.md §6).
+
+The multi-pod mesh's pod axis defaults to cross-pod DP; this module provides
+the alternative: each pod holds a contiguous stage of layers and
+microbatches flow through a `ppermute` ring — inter-pod traffic becomes one
+activation tensor per microbatch-step instead of gradient all-reduces, the
+right trade when layers/pod are deep and the DCI is thin.
+
+`pipeline_apply` is the schedule core (fwd-only shown; autodiff through it
+gives the standard GPipe backward with bubble 2(S-1)/(M+S-1)).  It is a
+shard_map manual over the pipeline axis with data/model axes left auto, so
+each stage's interior still uses the full TP/FSDP sharding.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pipeline_apply"]
+
+
+def pipeline_apply(stage_fn, stage_params, microbatches, mesh, *, axis: str = "pod"):
+    """Run `n_stages` sequential stages over M microbatches on a ring.
+
+    stage_fn: (params_one_stage, x) -> y (same shape as x).
+    stage_params: pytree stacked on a leading [n_stages] axis (sharded over
+        `axis` by shard_map).
+    microbatches: [M, ...] (replicated across the pipeline axis; the batch
+        interior may still be sharded over data axes).
+    Returns [M, ...] outputs of the final stage.
+    """
+    n_stages = mesh.shape[axis]
+    M = microbatches.shape[0]
+    steps = M + n_stages - 1
+
+    def body(params_local, micro):
+        # params_local: [1, ...] slice of the stacked stage params
+        p = jax.tree.map(lambda a: a[0], params_local)
+        stage = lax.axis_index(axis)
+        zero = jnp.zeros_like(micro[0])
+
+        def step(carry, t):
+            inflight, outputs = carry
+            # stage 0 injects microbatch t (while available); others use the
+            # activation received from the previous stage last step.
+            inject = lax.dynamic_index_in_dim(micro, jnp.minimum(t, M - 1), 0,
+                                              keepdims=False)
+            x = jnp.where(stage == 0, inject, inflight)
+            y = stage_fn(p, x)
+            # last stage records its result for microbatch t - (S-1)
+            out_slot = t - (n_stages - 1)
+            outputs = lax.cond(
+                (stage == n_stages - 1) & (out_slot >= 0),
+                lambda o: lax.dynamic_update_index_in_dim(o, y, jnp.maximum(out_slot, 0), 0),
+                lambda o: o,
+                outputs)
+            # ring-shift activations to the next stage
+            nxt = lax.ppermute(y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, outputs), None
+
+        init = (zero, jnp.zeros_like(micro))
+        (_, outputs), _ = lax.scan(step, init, jnp.arange(steps))
+        # only the last stage holds results (zeros elsewhere): psum
+        # broadcasts them so the output is replicated over the pipeline axis.
+        return lax.psum(outputs, axis)
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        axis_names={axis},
+        check_vma=False,
+    )(stage_params, microbatches)

@@ -1,0 +1,130 @@
+"""Train step factory: loss -> grad -> AdamW, with gradient accumulation and
+optional int8 error-feedback gradient compression on the cross-pod axis.
+
+Gradient accumulation (microbatch scan) is both a memory knob (activation
+live-set divides by `grad_accum`) and the compute/communication overlap
+surface: XLA schedules microbatch i+1's forward against microbatch i's grad
+reductions.
+
+Cross-pod compression (`compress_pod`): the pod axis crosses the slower
+inter-pod links, so its all-reduce is the one worth compressing.  We run the
+whole step inside shard_map manual over 'pod' (auto over data/model),
+quantize each gradient tensor to int8 with a psum-shared per-tensor scale,
+all-reduce the int8 payload (4x fewer wire bytes than f32), and keep the
+quantization residual in an error-feedback buffer so compression noise does
+not bias convergence (Seide et al., 1-bit SGD lineage).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+
+__all__ = ["TrainConfig", "make_train_step", "init_train_state", "quantize_psum"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    grad_accum: int = 1
+    compress_pod: bool = False
+    pod_axis: str = "pod"
+
+
+def init_train_state(model, params, tcfg: TrainConfig):
+    state = {"opt": adamw_init(params), "step": jnp.zeros((), jnp.int32)}
+    if tcfg.compress_pod:
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def quantize_psum(g, axis_name):
+    """int8 error-feedback all-reduce of one tensor; returns (mean_g, residual)."""
+    npods = jax.lax.psum(1, axis_name)
+    scale = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    wire = jax.lax.psum(q.astype(jnp.int32), axis_name)  # int payload on the wire
+    mean_g = wire.astype(jnp.float32) * scale / npods
+    residual = g - q.astype(jnp.float32) * scale
+    return mean_g, residual
+
+
+def _accum_grads(loss_fn, params, batch, grad_accum: int):
+    """Microbatch scan; grads accumulated in f32."""
+    if grad_accum == 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def split(x):
+        return x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, _metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.zeros(())), micro)
+    grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+    loss = loss_sum / grad_accum
+    return loss, {"ce": loss}, grads
+
+
+def make_train_step(model, tcfg: TrainConfig, mesh=None):
+    """Returns step(params, state, batch) -> (params', state', metrics).
+
+    Plain mode relies on pjit auto-sharding end to end.  compress_pod mode
+    wraps the step in shard_map manual over the pod axis (auto elsewhere).
+    """
+    loss_fn = model.loss_fn
+
+    def plain_step(params, state, batch):
+        loss, metrics, grads = _accum_grads(loss_fn, params, batch, tcfg.grad_accum)
+        new_params, new_opt, om = adamw_update(tcfg.opt, params, grads, state["opt"])
+        new_state = dict(state, opt=new_opt, step=state["step"] + 1)
+        return new_params, new_state, {"loss": loss, **metrics, **om}
+
+    if not tcfg.compress_pod:
+        return plain_step
+
+    assert mesh is not None and tcfg.pod_axis in mesh.axis_names
+    from jax.sharding import PartitionSpec as P
+
+    axis = tcfg.pod_axis
+
+    def pod_step(params, state, batch):
+        # local (per-pod) gradients; data/model axes still auto-sharded.
+        loss, metrics, grads = _accum_grads(loss_fn, params, batch, tcfg.grad_accum)
+        loss = jax.lax.pmean(loss, axis)
+
+        def combine(g, ef):
+            mean_g, residual = quantize_psum(g.astype(jnp.float32) + ef, axis)
+            return mean_g, residual
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_ef = tdef.flatten_up_to(state["ef"])
+        pairs = [combine(g, e) for g, e in zip(flat_g, flat_ef)]
+        grads = tdef.unflatten([p[0] for p in pairs])
+        new_ef = tdef.unflatten([p[1] for p in pairs])
+
+        new_params, new_opt, om = adamw_update(tcfg.opt, params, grads, state["opt"])
+        new_state = dict(state, opt=new_opt, ef=new_ef, step=state["step"] + 1)
+        return new_params, new_state, {"loss": loss, **metrics, **om}
+
+    # batch sharded over pod; params/state replicated over pod (sharded over
+    # data/model, which stay in auto mode: only the pod axis is manual).
+    return jax.shard_map(
+        pod_step,
+        mesh=mesh,
+        in_specs=(P(), P(), P(axis)),
+        out_specs=(P(), P(), P()),
+        axis_names={axis},
+        check_vma=False,
+    )

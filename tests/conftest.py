@@ -1,0 +1,59 @@
+"""Shared test fixtures/oracles.  NOTE: no XLA_FLAGS here — smoke tests and
+benches must see 1 device (the dry-run sets 512 in its own process)."""
+import numpy as np
+import pytest
+
+
+def pagerank_oracle(edges, n, iters=30, d=0.85):
+    """Dense power iteration with PMV's exact semantics (dangling mass leaks)."""
+    M = np.zeros((n, n))
+    out = np.bincount(edges[:, 0], minlength=n)
+    for s, t in edges:
+        M[t, s] = 1.0 / out[s]
+    v = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        v = (1 - d) / n + d * (M @ v)
+    return v
+
+
+def sssp_oracle(edges, n, src, w=None):
+    """Bellman-Ford."""
+    dist = np.full(n, np.inf)
+    dist[src] = 0.0
+    ws = np.ones(len(edges)) if w is None else w
+    for _ in range(n):
+        nd = dist.copy()
+        for (s, t), ww in zip(edges, ws):
+            if dist[s] + ww < nd[t]:
+                nd[t] = dist[s] + ww
+        if (nd == dist).all():
+            break
+        dist = nd
+    return dist
+
+
+def cc_oracle(edges, n):
+    """Union-find; labels = min vertex id per component."""
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for s, t in edges:
+        rs, rt = find(s), find(t)
+        if rs != rt:
+            parent[max(rs, rt)] = min(rs, rt)
+    comp_min = {}
+    for i in range(n):
+        r = find(i)
+        comp_min.setdefault(r, i)
+    return np.array([comp_min[find(i)] for i in range(n)], dtype=np.int32)
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph import erdos_renyi
+    return erdos_renyi(96, 420, seed=3), 96

@@ -1,0 +1,94 @@
+"""Cost-model validation (paper Lemmas 3.1-3.3, Eqs. 4-8) against
+Monte-Carlo measurements on random graphs."""
+import numpy as np
+import pytest
+
+from repro.core import cost_model, pagerank
+from repro.core.partition import partition_graph
+from repro.graph import erdos_renyi, rmat
+from repro.graph.stats import compute_stats
+
+
+def test_lemma31_horizontal_cost():
+    assert cost_model.horizontal_cost(8, 100) == 9 * 100
+
+
+def test_eq4_expected_partial_nnz_matches_measurement():
+    """E[|v^(i,j)|] (Eq. 4) vs measured structural partial sizes on ER graphs
+    (the uniform-edge model the lemma assumes)."""
+    n, b = 512, 4
+    rng_trials = []
+    for seed in range(5):
+        edges = erdos_renyi(n, 4000, seed=seed)
+        pm, _ = partition_graph(edges, n, b, pagerank(n))
+        rng_trials.append(pm.partial_nnz.mean())
+        m = len(edges)
+    expected = cost_model.expected_partial_nnz(b, n, m)
+    measured = np.mean(rng_trials)
+    assert abs(measured - expected) / expected < 0.1, (measured, expected)
+
+
+def test_eq5_selector_consistent_with_costs():
+    for n, m, b in [(1000, 2000, 8), (100, 5000, 8), (10_000, 20_000, 16)]:
+        pref_h = cost_model.prefer_horizontal(b, n, m)
+        ch = cost_model.horizontal_cost(b, n)
+        cv = cost_model.vertical_cost(b, n, m)
+        assert pref_h == (ch < cv)
+
+
+def test_selective_picks_vertical_for_sparse_horizontal_for_dense():
+    # paper §4.4: real web graphs (density < 1e-7) -> vertical
+    assert cost_model.select_strategy(16, 10**6, 10**7) == "vertical"
+    # dense synthetic (RMAT26-like density > 1e-7 at the paper's scale, here
+    # scaled down): complete-ish graph -> horizontal
+    assert cost_model.select_strategy(4, 100, 5000) == "horizontal"
+
+
+def test_lemma33_degenerate_endpoints():
+    """θ=0 => hybrid == horizontal cost; θ=inf => hybrid ~= vertical cost
+    (paper §3.5: 'If we set θ=0, PMV_hybrid is the same as PMV_horizontal...').
+
+    The θ=inf check uses an ER graph: Eq. 6 is degree-resolved while Lemma
+    3.2 assumes uniform edges, so they only coincide when degrees are near
+    uniform (on skewed RMAT they legitimately diverge — the paper notes the
+    hybrid cost 'includes data-dependent terms')."""
+    n = 1024
+    er = erdos_renyi(n, 6000, seed=1)
+    stats = compute_stats(er, n)
+    b, m = 8, len(er)
+    c0 = cost_model.hybrid_cost(b, n, stats, 0.0)
+    # θ=0: P_out=0 -> cost = n(b+1) = horizontal
+    assert abs(c0 - cost_model.horizontal_cost(b, n)) < 1e-6 * c0
+    cinf = cost_model.hybrid_cost(b, n, stats, np.inf)
+    cv = cost_model.vertical_cost(b, n, m)
+    assert abs(cinf - cv) / cv < 0.15
+
+
+def test_theta_star_never_worse_than_basics():
+    edges = rmat(10, 8000, seed=3, dedup=True)
+    n = 1024
+    stats = compute_stats(edges, n)
+    b = 8
+    theta, cost = cost_model.theta_star(b, n, stats)
+    assert cost <= cost_model.hybrid_cost(b, n, stats, 0.0) + 1e-9
+    assert cost <= cost_model.hybrid_cost(b, n, stats, np.inf) + 1e-9
+
+
+def test_capacity_from_cost_model_scales_with_slack():
+    c1 = cost_model.capacity_from_cost_model(8, 1000, 5000, slack=1.0)
+    c2 = cost_model.capacity_from_cost_model(8, 1000, 5000, slack=2.0)
+    assert c2 >= 2 * c1 - 1
+
+
+def test_measured_exchange_tracks_lemma32_on_er():
+    """Run the engine and compare measured logical exchange vs Eq. 2's
+    per-iteration transfer term 2 b(b-1) E[|v^(i,j)|]."""
+    from repro.core import PMVEngine
+    n, b = 512, 4
+    edges = erdos_renyi(n, 3000, seed=11)
+    m = len(edges)
+    eng = PMVEngine(edges, n, b=b, strategy="vertical")
+    res = eng.run(pagerank(n), max_iters=3, tol=0.0)
+    logical = res.per_iter[-1]["logical_elems"]       # counts all b*b partials
+    expected = b * b * cost_model.expected_partial_nnz(b, n, m)
+    assert abs(logical - expected) / expected < 0.15, (logical, expected)

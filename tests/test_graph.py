@@ -1,0 +1,68 @@
+"""Graph substrate: generators, stats, io."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import compute_stats, erdos_renyi, paper_example_graph, rmat, star_graph
+from repro.graph.generators import dedup_edges, symmetrize_edges
+from repro.graph.io import infer_n, load_edges, save_edges
+
+
+def test_rmat_shapes_and_range():
+    edges = rmat(10, 5000, seed=0)
+    assert edges.ndim == 2 and edges.shape[1] == 2
+    assert edges.min() >= 0 and edges.max() < 1024
+    assert (edges[:, 0] != edges[:, 1]).all()  # no self loops
+
+
+def test_rmat_is_skewed():
+    """a=0.57 RMAT must produce a heavy-tailed degree distribution (this is
+    what makes PMV_hybrid's θ split meaningful)."""
+    edges = rmat(12, 60000, seed=1)
+    stats = compute_stats(edges, 4096)
+    assert stats.out_deg.max() > 10 * max(stats.out_deg.mean(), 1)
+
+
+def test_stats_p_out_and_hist():
+    edges = star_graph(11)  # hub 0 with out-degree 10
+    stats = compute_stats(edges, 11)
+    assert stats.out_deg[0] == 10
+    assert stats.p_out_below(5) == 10 / 11
+    assert stats.p_out_below(np.inf) == 1.0
+    degs, p = stats.in_degree_hist()
+    assert np.isclose(p.sum(), 1.0)
+
+
+def test_symmetrize_and_dedup():
+    edges = np.array([[0, 1], [0, 1], [1, 2]])
+    d = dedup_edges(edges)
+    assert len(d) == 2
+    s = symmetrize_edges(edges)
+    pairs = set(map(tuple, s.tolist()))
+    assert (1, 0) in pairs and (2, 1) in pairs
+
+
+def test_paper_example_graph_figure2():
+    """Vertex 4 (1-indexed) receives from {1,3,6} and sends to {2,5}."""
+    edges = paper_example_graph()
+    incoming = sorted(edges[edges[:, 1] == 3][:, 0].tolist())
+    outgoing = sorted(edges[edges[:, 0] == 3][:, 1].tolist())
+    assert incoming == [0, 2, 5]
+    assert outgoing == [1, 4]
+
+
+def test_io_roundtrip(tmp_path):
+    edges = erdos_renyi(50, 200, seed=1)
+    for ext in ["npy", "tsv"]:
+        p = str(tmp_path / f"edges.{ext}")
+        save_edges(p, edges)
+        out = load_edges(p)
+        np.testing.assert_array_equal(out, edges)
+    assert infer_n(edges) == edges.max() + 1
+
+
+@given(st.integers(2, 2000), st.integers(0, 64))
+@settings(max_examples=20, deadline=None)
+def test_erdos_renyi_bounds(n, m):
+    edges = erdos_renyi(n, m, seed=0)
+    if edges.size:
+        assert edges.min() >= 0 and edges.max() < n

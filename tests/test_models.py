@@ -1,0 +1,159 @@
+"""Per-arch smoke tests (reduced same-family configs): one forward/train
+step on CPU asserting output shapes + no NaNs, plus decode==forward
+consistency on representative archs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, config_for, smoke_config
+from repro.models.model import build_model
+from repro.training import OptConfig, TrainConfig, make_train_step
+from repro.training.train_step import init_train_state
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["vis_emb"] = jax.random.normal(key, (B, cfg.n_vision_tokens, cfg.d_model)) * 0.1
+    if cfg.family == "encdec":
+        batch["enc_emb"] = jax.random.normal(key, (B, S, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    batch = _batch(cfg, key)
+
+    logits, aux = model.forward(params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    state = init_train_state(model, params, tcfg)
+    step = jax.jit(make_train_step(model, tcfg))
+    new_params, new_state, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0  # gradients actually flow
+    # params changed
+    changed = jax.tree.map(lambda a, b: not np.allclose(a, b), params, new_params)
+    assert any(jax.tree.leaves(changed))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exactness(arch):
+    """The full (assigned) config matches the spec numbers exactly."""
+    specs = {
+        "qwen3_1_7b": (28, 2048, 16, 8, 6144, 151936),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "stablelm_12b": (40, 5120, 32, 8, 13824, 100352),
+        "phi3_medium_14b": (40, 5120, 40, 10, 17920, 100352),
+        "mamba2_130m": (24, 768, 1, 1, 0, 50280),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "whisper_medium": (24, 1024, 16, 16, 4096, 51865),
+        "deepseek_v2_lite_16b": (27, 2048, 16, 16, 10944, 102400),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "llama_3_2_vision_90b": (100, 8192, 64, 8, 28672, 128256),
+    }
+    cfg = config_for(arch)
+    L, D, H, KVH, F, V = specs[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab) == (L, D, H, KVH, F, V)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "mamba2_130m", "recurrentgemma_9b",
+                                  "mixtral_8x22b", "whisper_medium"])
+def test_decode_matches_forward(arch):
+    """serve_step trajectory reproduces teacher-forced logits (cache, rope
+    offsets, ring buffers, SSD recurrence, MoE no-drop all exact)."""
+    cfg = smoke_config(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    B, S = 2, 12
+    batch = _batch(cfg, key, B, S)
+    full_logits, _ = model.forward(params, batch)
+    cache = model.init_cache(B, S, enc_len=S)
+    cache = model.prefill_cache(params, cache, batch)
+    for t in range(S):
+        lg, cache = model.serve_step(params, cache, batch["tokens"][:, t : t + 1], t)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32), np.asarray(full_logits[:, t], np.float32),
+            rtol=5e-2, atol=5e-4)
+
+
+def test_flash_attention_matches_dense():
+    from repro.models.layers import attention, flash_attention
+
+    rng = jax.random.PRNGKey(3)
+    B, S, H, KVH, dh = 2, 64, 8, 4, 16
+    q = jax.random.normal(rng, (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, S, KVH, dh))
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, S, KVH, dh))
+    for window in [0, 16]:
+        want = attention(q, k, v, causal=True, window=window)
+        got = flash_attention(q, k, v, causal=True, window=window, q_chunk=16, k_chunk=16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_chunked_matches_sequential():
+    """Chunked SSD (dual form + chunk scan) == naive recurrence."""
+    from repro.models.ssm import ssd_chunked
+
+    rng = np.random.default_rng(0)
+    B, S, H, P, N = 2, 32, 3, 4, 8
+    x = rng.normal(size=(B, S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.1, 0.9, size=(B, S, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 1.5, size=(H,)).astype(np.float32)
+    Bs = rng.normal(size=(B, S, N)).astype(np.float32)
+    C = rng.normal(size=(B, S, N)).astype(np.float32)
+
+    y, final = ssd_chunked(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+                           jnp.asarray(Bs), jnp.asarray(C), chunk=8)
+    # naive recurrence
+    h = np.zeros((B, H, P, N))
+    y_ref = np.zeros_like(x)
+    for t in range(S):
+        gamma = np.exp(dt[:, t] * A)  # [B,H]
+        upd = np.einsum("bn,bh,bhp->bhpn", Bs[:, t], dt[:, t], x[:, t])
+        h = h * gamma[..., None, None] + upd
+        y_ref[:, t] = np.einsum("bn,bhpn->bhp", C[:, t], h)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(final), h, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_routing_respects_topk_and_gates():
+    from repro.models.moe import moe_ffn
+    from repro.models import moe as moe_lib
+
+    cfg = smoke_config("mixtral_8x22b")
+    key = jax.random.PRNGKey(0)
+    p = moe_lib.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 8, cfg.d_model)) * 0.1
+    out, aux = moe_ffn(p, x, cfg, return_aux=True, no_drop=True)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0  # balanced-ish router still has positive aux loss
+
+
+def test_param_count_analytic_matches_actual():
+    """flops.py's closed-form param count == actual initialized params."""
+    from repro.launch.flops import param_count
+
+    for arch in ["qwen3_1_7b", "mamba2_130m", "mixtral_8x22b", "whisper_medium"]:
+        cfg = smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        # exclude small norm/scale vectors from the comparison tolerance
+        pred = param_count(cfg)
+        assert abs(actual - pred) / actual < 0.05, (arch, actual, pred)

@@ -1,0 +1,74 @@
+"""Paper-claim validation (EXPERIMENTS.md §Paper-validation):
+
+- Fig. 5: vertical wins I/O on sparse graphs, horizontal on dense; selective
+  follows Eq. 5; hybrid's I/O <= min(horizontal, vertical) everywhere.
+- Fig. 6: the θ sweep is U-shaped — some finite θ beats both endpoints.
+- §3.1: pre-partitioned per-iteration I/O is vector-scale, vs O(|M|+|v|)
+  for the re-shuffling baseline.
+"""
+import numpy as np
+import pytest
+
+from repro.core import PMVEngine, cost_model, pagerank
+from repro.graph import rmat
+from repro.graph.stats import compute_stats
+
+
+def _io(edges, n, b, strategy, theta="auto", iters=4):
+    eng = PMVEngine(edges, n, b=b, strategy=strategy, theta=theta)
+    res = eng.run(pagerank(n), max_iters=iters, tol=0.0)
+    return res.per_iter[-1]["io_elems"], res.strategy
+
+
+def test_fig5_sparse_vertical_wins_dense_horizontal_wins():
+    n, b = 1024, 8
+    sparse = rmat(10, 4000, seed=3)
+    io_h, _ = _io(sparse, n, b, "horizontal")
+    io_v, _ = _io(sparse, n, b, "vertical")
+    assert io_v < io_h, "vertical must win I/O on the sparse graph"
+
+    dense = rmat(10, 200_000, seed=3)
+    io_h2, _ = _io(dense, n, b, "horizontal")
+    io_v2, _ = _io(dense, n, b, "vertical")
+    assert io_h2 < io_v2, "horizontal must win I/O on the dense graph"
+
+
+def test_fig5_selective_follows_eq5():
+    n, b = 1024, 8
+    for m_edges in [4000, 200_000]:
+        edges = rmat(10, m_edges, seed=3)
+        _, resolved = _io(edges, n, b, "selective")
+        assert resolved == cost_model.select_strategy(b, n, len(edges))
+
+
+def test_fig5_hybrid_never_worse_than_basics():
+    n, b = 1024, 8
+    for m_edges in [4000, 16_000, 200_000]:
+        edges = rmat(10, m_edges, seed=3)
+        io_h, _ = _io(edges, n, b, "horizontal")
+        io_v, _ = _io(edges, n, b, "vertical")
+        io_hb, _ = _io(edges, n, b, "hybrid", theta="auto")
+        assert io_hb <= min(io_h, io_v) * 1.05, (io_hb, io_h, io_v)
+
+
+def test_fig6_theta_u_shape():
+    """Some finite θ strictly beats both θ=0 (horizontal) and θ=inf
+    (vertical) on a skewed sparse graph — the paper's headline hybrid win."""
+    n, b = 1 << 14, 16
+    edges = rmat(14, 80_000, seed=5)
+    ios = {}
+    for theta in [0.0, 8.0, 16.0, np.inf]:
+        ios[theta], _ = _io(edges, n, b, "hybrid", theta=theta, iters=3)
+    best_mid = min(ios[8.0], ios[16.0])
+    assert best_mid < ios[0.0]
+    assert best_mid < ios[np.inf]
+
+
+def test_pre_partitioning_shrinks_per_iteration_io():
+    """PMV per-iteration I/O excludes the matrix; a PEGASUS-like re-shuffle
+    moves O(|M|+|v|) per iteration (paper §3.1 idea 1)."""
+    n, b = 4096, 8
+    edges = rmat(12, 64_000, seed=7)
+    m = len(edges)
+    io, _ = _io(edges, n, b, "hybrid")
+    assert io < (m + n) / 2, f"vector-scale I/O expected, got {io} vs |M|+|v|={m + n}"

@@ -1,0 +1,97 @@
+"""Pre-partitioning invariants (paper §3.1.1), incl. hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gimv import GimvSpec
+from repro.core.partition import Partition, partition_graph
+from repro.core import pagerank
+from repro.graph import erdos_renyi
+
+
+def _edges(n, m, seed):
+    return erdos_renyi(n, m, seed=seed)
+
+
+@given(n=st.integers(5, 200), b=st.integers(1, 8),
+       psi=st.sampled_from(["cyclic", "range"]))
+@settings(max_examples=40, deadline=None)
+def test_partition_bijection(n, b, psi):
+    """ψ + local index is a bijection onto [0, n_pad)."""
+    part = Partition(n=n, b=b, psi=psi)
+    ids = np.arange(part.n_pad)
+    blk, loc = part.block_of(ids), part.local_of(ids)
+    assert (blk >= 0).all() and (blk < b).all()
+    assert (loc >= 0).all() and (loc < part.n_local).all()
+    back = part.global_of(blk, loc)
+    np.testing.assert_array_equal(back, ids)
+
+
+@given(n=st.integers(5, 100), b=st.integers(1, 6),
+       psi=st.sampled_from(["cyclic", "range"]))
+@settings(max_examples=30, deadline=None)
+def test_blocked_roundtrip(n, b, psi):
+    part = Partition(n=n, b=b, psi=psi)
+    x = np.random.default_rng(0).normal(size=n).astype(np.float32)
+    np.testing.assert_array_equal(part.from_blocked(part.to_blocked(x)), x)
+
+
+@pytest.mark.parametrize("psi", ["cyclic", "range"])
+@pytest.mark.parametrize("b", [1, 3, 8])
+def test_stripes_cover_all_edges_exactly_once(psi, b):
+    n = 120
+    edges = _edges(n, 600, seed=2)
+    spec = pagerank(n)
+    pm, hm = partition_graph(edges, n, b, spec, psi=psi, theta=4.0)
+    E = len(edges)
+    assert pm.block_nnz.sum() == E
+    assert sum(int(s.count.sum()) for s in pm.vertical) == E
+    assert sum(int(s.count.sum()) for s in pm.horizontal) == E
+    # hybrid: sparse + dense regions partition the edges
+    assert hm.sparse_nnz + hm.dense_nnz == E
+    assert sum(int(s.count.sum()) for s in hm.sparse_vertical) == hm.sparse_nnz
+    assert sum(int(s.count.sum()) for s in hm.dense_horizontal) == hm.dense_nnz
+
+
+def test_theta_split_matches_out_degree():
+    n, theta = 100, 3.0
+    edges = _edges(n, 500, seed=5)
+    spec = pagerank(n)
+    pm, hm = partition_graph(edges, n, 4, spec, theta=theta)
+    out_deg = pm.stats.out_deg
+    dense_edges = int((out_deg[edges[:, 0]] >= theta).sum())
+    assert hm.dense_nnz == dense_edges
+    assert int(hm.dense.d_count.sum()) == int((out_deg >= theta).sum())
+
+
+def test_structural_partial_nnz_bounds_value_nnz():
+    """Structural capacity (exchange sizing) always >= value-level nnz."""
+    n, b = 80, 4
+    edges = _edges(n, 400, seed=7)
+    spec = pagerank(n)
+    pm, _ = partition_graph(edges, n, b, spec)
+    part = pm.part
+    # count distinct (dst, src-block) pairs == sum of partial_nnz
+    db = part.block_of(edges[:, 1])
+    sb = part.block_of(edges[:, 0])
+    pairs = set(zip(edges[:, 1].tolist(), sb.tolist()))
+    assert pm.partial_nnz.sum() == len(pairs)
+    assert pm.partial_cap == pm.partial_nnz.max()
+
+
+def test_pagerank_weights_column_stochastic():
+    n = 60
+    edges = _edges(n, 300, seed=8)
+    spec = pagerank(n)
+    pm, _ = partition_graph(edges, n, 4, spec)
+    # sum of weights per source vertex == 1 for sources with out-edges
+    w_sum = np.zeros(n)
+    for j, stripe in enumerate(pm.vertical):
+        for i in range(pm.part.b):
+            cnt = int(stripe.count[i])
+            src_local = stripe.gat_local[i, :cnt]
+            w = stripe.w[i, :cnt]
+            src_global = pm.part.global_of(np.full(cnt, j), src_local)
+            np.add.at(w_sum, src_global, w)
+    has_out = pm.stats.out_deg > 0
+    np.testing.assert_allclose(w_sum[has_out], 1.0, rtol=1e-5)

@@ -1,0 +1,121 @@
+"""Training substrate: optimizer math, grad-accum equivalence, data
+determinism, checkpoint atomicity + restart, compression error feedback."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.model import build_model
+from repro.training import OptConfig, SyntheticTokenPipeline, TrainConfig, checkpoint, make_train_step
+from repro.training.optimizer import adamw_init, adamw_update, lr_at
+from repro.training.train_step import init_train_state
+
+
+def test_adamw_matches_reference_scalar():
+    """One AdamW step on a scalar against hand math."""
+    cfg = OptConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                    clip_norm=1e9, warmup_steps=0, total_steps=10, min_lr_ratio=1.0)
+    params = {"w": jnp.asarray(2.0)}
+    grads = {"w": jnp.asarray(0.5)}
+    state = adamw_init(params)
+    new_p, state, m = adamw_update(cfg, params, grads, state)
+    mu, nu = 0.1 * 0.5, 0.01 * 0.25
+    mhat, vhat = mu / 0.1, nu / 0.01
+    want = 2.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(float(new_p["w"]), want, rtol=1e-5)
+
+
+def test_grad_clipping():
+    cfg = OptConfig(lr=0.0, clip_norm=1.0, warmup_steps=0, total_steps=1)
+    params = {"w": jnp.zeros(4)}
+    grads = {"w": jnp.full(4, 100.0)}
+    state = adamw_init(params)
+    _, _, m = adamw_update(cfg, params, grads, state)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr_at(cfg, jnp.asarray(110))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_grad_accum_equivalent_to_full_batch():
+    """grad_accum=2 must produce the same update as one big batch (loss is a
+    per-token mean and microbatches are equal-sized)."""
+    cfg = smoke_config("qwen3_1_7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)}
+    outs = {}
+    for ga in [1, 2]:
+        tcfg = TrainConfig(opt=OptConfig(lr=1e-2, warmup_steps=0, total_steps=10), grad_accum=ga)
+        state = init_train_state(model, params, tcfg)
+        p2, _, m = jax.jit(make_train_step(model, tcfg))(params, state, batch)
+        outs[ga] = (p2, float(m["loss"]))
+    np.testing.assert_allclose(outs[1][1], outs[2][1], rtol=1e-5)
+    flat1 = jax.tree.leaves(outs[1][0])
+    flat2 = jax.tree.leaves(outs[2][0])
+    for a, b in zip(flat1, flat2):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-5)
+
+
+def test_data_pipeline_deterministic_and_restartable():
+    pipe = SyntheticTokenPipeline(vocab=100, global_batch=4, seq_len=8, seed=7)
+    a = pipe.batch_at(3)
+    b = pipe.batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = pipe.batch_at(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # host slicing is a view of the same global batch
+    d = pipe.batch_at(3, host_slice=slice(1, 3))
+    np.testing.assert_array_equal(d["tokens"], a["tokens"][1:3])
+
+
+def test_checkpoint_atomic_commit_and_retention(tmp_path):
+    state = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    for s in [1, 2, 3, 4, 5]:
+        checkpoint.save(str(tmp_path), s, state, keep=2)
+    assert checkpoint.all_steps(str(tmp_path)) == [4, 5]
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+    out = checkpoint.restore(str(tmp_path), 5, state)
+    np.testing.assert_array_equal(out["a"], state["a"])
+    # no stray .tmp dirs (atomicity)
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_checkpoint_elastic_reshard_roundtrip(tmp_path):
+    """Restore under a different sharding (single device here; the mesh-level
+    path is exercised by the dry-run)."""
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    checkpoint.save(str(tmp_path), 1, state)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = checkpoint.restore(str(tmp_path), 1, state, shardings={"w": sh})
+    np.testing.assert_array_equal(out["w"], state["w"])
+
+
+def test_quantize_psum_error_feedback_bounds():
+    """int8 quantization residual is bounded by scale/2 per element."""
+    from repro.training.train_step import quantize_psum
+
+    # single-"pod" axis via a size-1 vmap-free trick: use jax.make_mesh? On a
+    # 1-device CPU, shard_map with axis size 1 works.
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("pod",))
+    g = jnp.linspace(-3.0, 3.0, 64)
+
+    def f(g):
+        return quantize_psum(g, "pod")
+
+    mean_g, resid = jax.jit(shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                                      check_rep=False))(g)
+    scale = 3.0 / 127.0
+    assert float(jnp.max(jnp.abs(resid))) <= scale / 2 + 1e-6
+    np.testing.assert_allclose(np.asarray(mean_g + resid), np.asarray(g), atol=1e-6)
