@@ -1,0 +1,60 @@
+"""Query-serving example: 256 mixed RWR / SSSP queries against ONE
+pre-partitioned RMAT graph through the continuous-batching PMVServer.
+
+    PYTHONPATH=src python examples/serve_queries.py
+
+The server groups queries by algorithm family (they cannot share a semiring),
+packs each family into fixed Q-bucket batches, retires converged columns and
+admits waiting queries mid-loop.  The partition and the jitted batched step
+are built once per family and reused for every batch.
+"""
+import time
+
+import numpy as np
+
+from repro.graph import rmat
+from repro.serving import PMVServer, Query
+
+SCALE = 12
+N = 1 << SCALE          # 4096 vertices
+N_EDGES = 30_000
+N_QUERIES = 256
+
+
+def main():
+    edges = rmat(SCALE, N_EDGES, seed=23)
+    rng = np.random.default_rng(4)
+
+    queries = []
+    for i in range(N_QUERIES):
+        src = int(rng.integers(0, N))
+        if i % 2 == 0:
+            queries.append(Query("rwr", source=src, tol=1e-6))
+        else:
+            queries.append(Query("sssp", source=src, tol=0.5))
+
+    srv = PMVServer(edges, N, b=4, strategy="selective", buckets=(16, 32, 64),
+                    max_iters=500)
+    t0 = time.perf_counter()
+    results = srv.serve(queries)
+    dt = time.perf_counter() - t0
+
+    stats = srv.stats()
+    lat = np.array([r.latency_s for r in results])
+    iters = np.array([r.iterations for r in results])
+    conv = sum(r.converged for r in results)
+    print(f"[serve] {N_QUERIES} queries ({N_QUERIES // 2} rwr + {N_QUERIES // 2} sssp) "
+          f"on |V|={N} |E|={len(edges)}: {N_QUERIES / dt:.1f} queries/s")
+    print(f"[serve] converged {conv}/{N_QUERIES}; iterations p50={np.median(iters):.0f} "
+          f"max={iters.max()}; latency p50={np.median(lat) * 1e3:.0f}ms p99={np.quantile(lat, 0.99) * 1e3:.0f}ms")
+    print(f"[serve] {stats['batches']} batches, {stats['admitted_mid_batch']} mid-batch admissions, "
+          f"{stats['iterations']:.0f} batched GIM-V iterations total")
+
+    r = results[0]
+    top = np.argsort(r.vector)[::-1][:5]
+    print(f"[serve] sample rwr source={r.query.source}: top-5 vertices {top.tolist()}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,7 @@ from repro.core.gimv import GimvSpec
 from repro.core.partition import HybridMatrix, Partition, PartitionedMatrix, partition_graph
 from repro.graph.generators import symmetrize_edges
 
-__all__ = ["PMVEngine", "PMVResult", "StepConfig", "make_step"]
+__all__ = ["PMVEngine", "PMVResult", "StepConfig", "make_step", "placement_call"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +51,29 @@ def _squeeze0(tree):
     return jax.tree.map(lambda a: a[0], tree)
 
 
+def placement_call(spec: GimvSpec, cfg: StepConfig, matrix, v, ctx, mask, axis):
+    """Dispatch one placement step for ``cfg.strategy``.
+
+    Shared by the engine's scalar step and repro.serving's multi-query step
+    (v/ctx may carry a trailing query axis; placements are polymorphic)."""
+    n_local = cfg.n_local
+    if cfg.strategy == "horizontal":
+        return placement.horizontal_step(
+            spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis)
+    if cfg.strategy == "vertical":
+        pd = jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
+        return placement.vertical_step(
+            spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis,
+            exchange=cfg.exchange, capacity=cfg.capacity, payload_dtype=pd)
+    if cfg.strategy == "hybrid":
+        pd = jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
+        return placement.hybrid_step(
+            spec, matrix["sparse_stripe"], matrix["dense_stripe"], matrix["dense_region"],
+            v, ctx, mask, n_local=n_local, axis_name=axis, capacity=cfg.capacity,
+            payload_dtype=pd)
+    raise ValueError(cfg.strategy)
+
+
 def make_step(spec: GimvSpec, cfg: StepConfig, mesh: Mesh | None = None, axis_name: str = "workers"):
     """Build step(matrix, v, ctx, mask) -> (v_new, delta, stats).
 
@@ -59,23 +82,9 @@ def make_step(spec: GimvSpec, cfg: StepConfig, mesh: Mesh | None = None, axis_na
     sharded on the worker axis and the function is shard_map'ped; delta and
     stats come out replicated.
     """
-    n_local = cfg.n_local
 
     def _placement_call(matrix, v, ctx, mask, axis):
-        if cfg.strategy == "horizontal":
-            return placement.horizontal_step(
-                spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis)
-        if cfg.strategy == "vertical":
-            import jax.numpy as _jnp
-            pd = _jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
-            return placement.vertical_step(
-                spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis,
-                exchange=cfg.exchange, capacity=cfg.capacity, payload_dtype=pd)
-        if cfg.strategy == "hybrid":
-            return placement.hybrid_step(
-                spec, matrix["sparse_stripe"], matrix["dense_stripe"], matrix["dense_region"],
-                v, ctx, mask, n_local=n_local, axis_name=axis, capacity=cfg.capacity)
-        raise ValueError(cfg.strategy)
+        return placement_call(spec, cfg, matrix, v, ctx, mask, axis)
 
     if mesh is None:
         def step(matrix, v, ctx, mask):
@@ -135,6 +144,8 @@ class PMVEngine:
     capacity: 'structural' (exact max partial nnz — overflow-free) |
       'model' (Eq. 4/8 x slack — tighter, may overflow -> engine retries
       with the dense exchange for that run).
+    payload_dtype: wire dtype for the sparse-exchange values (e.g.
+      'bfloat16' — §Perf); accumulation stays in the spec dtype.
     """
 
     def __init__(
@@ -149,6 +160,7 @@ class PMVEngine:
         exchange: str = "sparse",
         capacity: str = "structural",
         slack: float = 1.5,
+        payload_dtype: str | None = None,
         symmetrize: bool = False,
         base_weights: np.ndarray | None = None,
         mesh: Mesh | None = None,
@@ -165,9 +177,13 @@ class PMVEngine:
         self.exchange = exchange
         self.capacity_mode = capacity
         self.slack = slack
+        self.payload_dtype = payload_dtype
         self.base_weights = base_weights
         self.mesh = mesh
         self.axis_name = axis_name
+        self._prep_cache: dict = {}  # spec -> (step, matrix, mask, meta); FIFO-bounded
+
+    _PREP_CACHE_MAX = 8
 
     # ------------------------------------------------------------------
     def resolve_strategy(self) -> tuple[str, float | None]:
@@ -188,7 +204,35 @@ class PMVEngine:
 
     def prepare(self, spec: GimvSpec, ctx: dict | None = None):
         """Pre-partitioning (runs once; paper §3.1.1): builds device-resident
-        matrix stripes, the blocked initial vector, and the jitted step."""
+        matrix stripes, the blocked initial vector, and the jitted step.
+
+        The expensive parts (partitioning, device placement, the jitted step)
+        are cached per ``spec`` instance, so repeated ``run`` calls — e.g. a
+        serving loop answering many queries against one graph — pay the
+        partition + compile cost once.  Only v0 / ctx are rebuilt per call.
+        """
+        if spec not in self._prep_cache:
+            self._prep_cache[spec] = self._prepare_static(spec)
+            while len(self._prep_cache) > self._PREP_CACHE_MAX:  # bound device residency
+                self._prep_cache.pop(next(iter(self._prep_cache)))
+        step_jit, matrix, real_mask_dev, meta = self._prep_cache[spec]
+        part = meta["part"]
+
+        ids = part.global_ids_grid()            # [b, n_local]
+        ctx = ctx or {}
+        v0 = spec.init(ids.reshape(-1), ctx).reshape(ids.shape).astype(spec.dtype)
+        ctx_blocked = {k: part.to_blocked(np.asarray(x)) for k, x in ctx.items()}
+        if self.mesh is not None:
+            shard = NamedSharding(self.mesh, P(self.axis_name))
+            v0 = jax.device_put(jnp.asarray(v0), shard)
+            ctx_blocked = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), shard), ctx_blocked)
+        else:
+            v0 = jnp.asarray(v0)
+            ctx_blocked = jax.tree.map(jnp.asarray, ctx_blocked)
+        return step_jit, matrix, v0, ctx_blocked, real_mask_dev, meta
+
+    def _prepare_static(self, spec: GimvSpec):
+        """Partition + device matrix + jitted step (the per-spec cacheable part)."""
         strategy, theta = self.resolve_strategy()
         pm, hm = partition_graph(
             self.edges, self.n, self.b, spec,
@@ -217,14 +261,11 @@ class PMVEngine:
             }
             capacity = self._capacity(pm, hm)
 
-        ids = part.global_ids_grid()            # [b, n_local]
-        real_mask = ids < self.n
-        ctx = ctx or {}
-        v0 = spec.init(ids.reshape(-1), ctx).reshape(ids.shape).astype(spec.dtype)
-        ctx_blocked = {k: part.to_blocked(np.asarray(x)) for k, x in ctx.items()}
+        real_mask = part.global_ids_grid() < self.n
 
         cfg = StepConfig(strategy=strategy, n_local=part.n_local,
-                         exchange=self.exchange, capacity=capacity)
+                         exchange=self.exchange, capacity=capacity,
+                         payload_dtype=self.payload_dtype)
         step = make_step(spec, cfg, self.mesh, self.axis_name)
         donate = (1,)
         step_jit = jax.jit(step, donate_argnums=donate)
@@ -232,21 +273,17 @@ class PMVEngine:
         if self.mesh is not None:
             shard = NamedSharding(self.mesh, P(self.axis_name))
             matrix = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), shard), matrix)
-            v0 = jax.device_put(jnp.asarray(v0), shard)
-            ctx_blocked = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), shard), ctx_blocked)
             real_mask_dev = jax.device_put(jnp.asarray(real_mask), shard)
         else:
             matrix = jax.tree.map(jnp.asarray, matrix)
-            v0 = jnp.asarray(v0)
-            ctx_blocked = jax.tree.map(jnp.asarray, ctx_blocked)
             real_mask_dev = jnp.asarray(real_mask)
 
         meta = {
             "strategy": strategy, "theta": theta, "capacity": capacity,
-            "part": part, "pm": pm, "hm": hm,
+            "part": part, "pm": pm, "hm": hm, "cfg": cfg,
             "n_dense": int(hm.dense.d_count.sum()) if hm is not None else 0,
         }
-        return step_jit, matrix, v0, ctx_blocked, real_mask_dev, meta
+        return step_jit, matrix, real_mask_dev, meta
 
     def _capacity(self, pm: PartitionedMatrix, hm: HybridMatrix | None) -> int:
         if self.capacity_mode == "structural":
@@ -269,6 +306,7 @@ class PMVEngine:
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 0,
         resume: bool = False,
+        _allow_fallback: bool = True,
     ) -> PMVResult:
         step, matrix, v, ctx_b, mask, meta = self.prepare(spec, ctx)
         part: Partition = meta["part"]
@@ -293,6 +331,17 @@ class PMVEngine:
             per_iter.append(rec)
             v = v_new
             if rec.get("overflow", 0.0) > 0:
+                fb = self._fallback_overrides(meta["strategy"]) if _allow_fallback else None
+                if fb is not None:
+                    label, overrides = fb
+                    result = self._fallback_engine(meta, overrides).run(
+                        spec, ctx,
+                        max_iters=max_iters, tol=tol,
+                        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+                        resume=False, _allow_fallback=False,
+                    )
+                    result.totals["fallback"] = label
+                    return result
                 raise RuntimeError(
                     "sparse exchange overflow: capacity "
                     f"{meta['capacity']} too small — rerun with capacity='structural' "
@@ -318,6 +367,29 @@ class PMVEngine:
             per_iter=per_iter, totals=totals,
         )
 
+
+    def _fallback_overrides(self, strategy: str) -> tuple[str, dict] | None:
+        """Overflow recovery (optimistic execution, sparse_exchange.py): the
+        model capacity truncated a partial, so retry once with an
+        overflow-free configuration.  vertical -> dense exchange (the
+        documented fallback); hybrid -> structural capacity (its compact
+        exchange has no dense variant)."""
+        if strategy == "vertical" and self.exchange != "dense":
+            return "dense", {"exchange": "dense"}
+        if strategy == "hybrid" and self.capacity_mode != "structural":
+            return "structural_capacity", {"capacity": "structural"}
+        return None
+
+    def _fallback_engine(self, meta, overrides: dict) -> "PMVEngine":
+        kwargs = dict(
+            b=self.b, strategy=meta["strategy"], theta=meta["theta"], psi=self.psi,
+            exchange=self.exchange, capacity=self.capacity_mode, slack=self.slack,
+            payload_dtype=self.payload_dtype, base_weights=self.base_weights,
+            mesh=self.mesh, axis_name=self.axis_name,
+        )
+        kwargs.update(overrides)
+        # edges were already symmetrized in __init__ if requested
+        return PMVEngine(self.edges, self.n, **kwargs)
 
     def _paper_io(self, meta, rec) -> float:
         """Per-iteration I/O in vector elements, the paper's metric:

@@ -71,26 +71,40 @@ def _edges_x(spec: GimvSpec, stripe: BlockEdges, v_gathered_rows: jnp.ndarray) -
     v_gathered_rows: [b, m] — row k is the vector the k-th inner block's
     gat_local indexes into (v^(j) broadcast for vertical; v_all for
     horizontal).  Returns x: [b, E_cap] with padding set to the identity.
+
+    A trailing query axis ([b, m, Q]) broadcasts the per-edge weights and the
+    padding mask across queries and returns x: [b, E_cap, Q].
     """
     b, e_cap = stripe.seg_local.shape
-    vj = jnp.take_along_axis(v_gathered_rows, stripe.gat_local, axis=1)
+    mask = jnp.arange(e_cap, dtype=jnp.int32)[None, :] < stripe.count[:, None]
+    if v_gathered_rows.ndim == 3:  # multi-query
+        vj = jnp.take_along_axis(v_gathered_rows, stripe.gat_local[:, :, None], axis=1)
+        w = None if stripe.w is None else stripe.w[:, :, None]
+        mask = mask[:, :, None]
+    else:
+        vj = jnp.take_along_axis(v_gathered_rows, stripe.gat_local, axis=1)
+        w = stripe.w
     if spec.needs_weights:
-        x = combine2(spec, stripe.w, vj)
+        x = combine2(spec, w, vj)
     else:
         x = combine2(spec, None, vj)
-    mask = jnp.arange(e_cap, dtype=jnp.int32)[None, :] < stripe.count[:, None]
     return jnp.where(mask, x, jnp.asarray(spec.identity, x.dtype))
 
 
 def block_gimv_partials(spec: GimvSpec, stripe: BlockEdges, v_local: jnp.ndarray, n_local: int) -> jnp.ndarray:
     """Vertical sub-multiplications: v^(i,j) = M^(i,j) (x) v^(j) for all i.
 
-    Returns partials [b, n_local] (identity where structurally empty).
+    Returns partials [b, n_local] (identity where structurally empty); with a
+    trailing query axis on v_local ([n_local, Q]) returns [b, n_local, Q].
     """
     b = stripe.seg_local.shape[0]
-    v_rows = jnp.broadcast_to(v_local[None], (b, v_local.shape[0]))
+    v_rows = jnp.broadcast_to(v_local[None], (b,) + v_local.shape)
     x = _edges_x(spec, stripe, v_rows)
     seg = stripe.seg_local + (jnp.arange(b, dtype=jnp.int32) * n_local)[:, None]
+    e_cap = stripe.seg_local.shape[1]
+    if x.ndim == 3:
+        flat = segment_combine(spec, x.reshape(b * e_cap, -1), seg.reshape(-1), b * n_local)
+        return flat.reshape(b, n_local, x.shape[-1])
     flat = segment_combine(spec, x.reshape(-1), seg.reshape(-1), b * n_local)
     return flat.reshape(b, n_local)
 
@@ -107,22 +121,28 @@ def block_gimv_partials_compact(
     O(n_local + b*capacity) instead of O(b * n_local) — the difference
     between fitting and OOM at ClueWeb12 scale (b * n_local = |v| = 25 GB).
 
-    Returns (idx [b, cap], val [b, cap], overflow_rows, logical_elems).
+    Returns (idx [b, cap], val [b, cap], overflow_rows, logical_elems); with
+    a trailing query axis on v_local ([n_local, Q]) val becomes [b, cap, Q]
+    sharing one index set per partial row (wire format (idx, val[Q])).
     """
     ident = jnp.asarray(spec.identity, spec.dtype)
+    batched = v_local.ndim == 2
 
     def body(_, blk):
         seg, gat, w, cnt = blk
         e_cap = seg.shape[0]
         vj = v_local[gat]
+        if batched:
+            w = None if w is None else w[:, None]
         if spec.needs_weights:
             x = combine2(spec, w, vj)
         else:
             x = combine2(spec, None, vj)
         mask = jnp.arange(e_cap, dtype=jnp.int32) < cnt
-        x = jnp.where(mask, x, ident)
+        x = jnp.where(mask[:, None] if batched else mask, x, ident)
         partial = segment_combine(spec, x, seg, n_local)
-        idx, val, over, logical = sparse_exchange.compact_partials(spec, partial, capacity, None)
+        idx, val, over, logical = sparse_exchange.compact_partials(
+            spec, partial, capacity, None, batched=batched)
         return None, (idx, val, over, logical)
 
     xs = (stripe.seg_local, stripe.gat_local,
@@ -134,12 +154,17 @@ def block_gimv_partials_compact(
 
 def gathered_gimv(spec: GimvSpec, stripe: BlockEdges, v_all: jnp.ndarray, n_local: int) -> jnp.ndarray:
     """Horizontal compute: r^(i) = combineAll_j M^(i,j) (x) v^(j) with the
-    whole vector v_all [b, n_local] available locally."""
-    b = stripe.seg_local.shape[0]
+    whole vector v_all [b, n_local] available locally.  A trailing query axis
+    ([b, n_local, Q]) is carried through to r [n_local, Q]."""
+    b, e_cap = stripe.seg_local.shape
     x = _edges_x(spec, stripe, v_all)
     seg = stripe.seg_local + (jnp.arange(b, dtype=jnp.int32) * n_local)[:, None]
-    flat = segment_combine(spec, x.reshape(-1), seg.reshape(-1), b * n_local)
-    contribs = flat.reshape(b, n_local)
+    if x.ndim == 3:
+        flat = segment_combine(spec, x.reshape(b * e_cap, -1), seg.reshape(-1), b * n_local)
+        contribs = flat.reshape(b, n_local, x.shape[-1])
+    else:
+        flat = segment_combine(spec, x.reshape(-1), seg.reshape(-1), b * n_local)
+        contribs = flat.reshape(b, n_local)
     # combineAll across source blocks.
     if spec.combine_all == "sum":
         return jnp.sum(contribs, axis=0)
@@ -200,12 +225,24 @@ def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name):
 
 def _apply_assign(spec, v_local, r_local, ctx_local, real_mask):
     v_new = spec.assign(v_local, r_local, ctx_local)
+    if v_new.ndim > real_mask.ndim:  # multi-query: broadcast over Q
+        real_mask = real_mask[..., None]
     return jnp.where(real_mask, v_new, v_local)  # padding ids frozen
+
+
+def _num_queries(v_local, axis_name) -> int | None:
+    """Trailing query-axis size, or None for the classic single-vector path.
+
+    Worker-local vectors are [n_local] in SPMD / [b, n_local] in emulation;
+    one extra trailing axis means multi-query."""
+    expected = 2 if axis_name is None else 1
+    return v_local.shape[-1] if v_local.ndim == expected + 1 else None
 
 
 def horizontal_step(spec: GimvSpec, stripe: BlockEdges, v_local, ctx_local, real_mask, *, n_local: int, axis_name):
     """Alg. 1: gather the whole vector, compute row stripe locally."""
-    v_all = _all_gather(v_local, axis_name)  # [b, n_local]
+    nq = _num_queries(v_local, axis_name)
+    v_all = _all_gather(v_local, axis_name)  # [b, n_local(, Q)]
 
     def compute(stripe_, v_all_, v_local_, ctx_, mask_):
         r = gathered_gimv(spec, stripe_, v_all_, n_local)
@@ -213,9 +250,9 @@ def horizontal_step(spec: GimvSpec, stripe: BlockEdges, v_local, ctx_local, real
 
     fn = compute if axis_name is not None else jax.vmap(compute)
     v_new, r = fn(stripe, v_all, v_local, ctx_local, real_mask)
-    b = v_all.shape[-2]
+    b = stripe.count.shape[-1]
     stats = {  # GLOBAL elements per iteration (all workers)
-        "gathered_elems": jnp.asarray(b * (b - 1) * n_local, jnp.float32),
+        "gathered_elems": jnp.asarray(b * (b - 1) * n_local * (nq or 1), jnp.float32),
         "exchanged_elems": jnp.asarray(0.0, jnp.float32),
     }
     return v_new, r, stats
@@ -243,9 +280,12 @@ def vertical_step(
     pod + combined dense hop across pods (needs a tuple axis_name whose
     first element is the pod axis; SPMD only).
     """
+    nq = _num_queries(v_local, axis_name)
     if exchange == "hier":
         assert axis_name is not None and isinstance(axis_name, tuple) and len(axis_name) >= 2
         assert capacity is not None
+        if nq is not None:
+            raise NotImplementedError("hierarchical exchange is single-query only")
         compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
         idx, val, overflow, logical = compact(stripe, v_local)
         if payload_dtype is not None:
@@ -265,9 +305,9 @@ def vertical_step(
     if exchange == "dense":
         compute = partial(block_gimv_partials, spec, n_local=n_local)
         fn = compute if axis_name is not None else jax.vmap(lambda s, v: compute(s, v))
-        partials = fn(stripe, v_local)  # [b, n_local] per worker
-        received = _all_to_all(partials, axis_name)  # [b, n_local]
-        reduce_axis = -2
+        partials = fn(stripe, v_local)  # [b, n_local(, Q)] per worker
+        received = _all_to_all(partials, axis_name)  # [b, n_local(, Q)]
+        reduce_axis = -2 if nq is None else -3
 
         def combine_fn(rcv):
             if spec.combine_all == "sum":
@@ -278,10 +318,10 @@ def vertical_step(
 
         r = combine_fn(received)
         logical = sparse_exchange.count_non_identity(spec, partials)
-        b = partials.shape[-2]
+        b = stripe.count.shape[-1]
         stats = {  # GLOBAL elements per iteration
             "gathered_elems": jnp.asarray(0.0, jnp.float32),
-            "exchanged_elems": jnp.asarray(b * (b - 1) * n_local, jnp.float32),
+            "exchanged_elems": jnp.asarray(b * (b - 1) * n_local * (nq or 1), jnp.float32),
             "logical_elems": logical,
         }
     else:
@@ -306,9 +346,9 @@ def vertical_step(
         fn2 = combine_fn if axis_name is not None else jax.vmap(combine_fn)
         r = fn2(idx_x, val_x)
         b = idx.shape[-2]
-        stats = {  # GLOBAL elements; x2 = idx+val words
+        stats = {  # GLOBAL elements; idx word + (1 or Q) value words per slot
             "gathered_elems": jnp.asarray(0.0, jnp.float32),
-            "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * 2, jnp.float32),
+            "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * (1 + (nq or 1)), jnp.float32),
             "logical_elems": logical,
             "overflow": overflow,
         }
@@ -332,6 +372,7 @@ def hybrid_step(
     n_local: int,
     axis_name,
     capacity: int,
+    payload_dtype=None,
 ):
     """Alg. 4: vertical over the sparse region + horizontal over the dense
     region, combined at the owner, then assign.
@@ -342,16 +383,21 @@ def hybrid_step(
     """
     # -- dense region: extract + all_gather the (small) dense sub-vector.
     # gather_idx is per-worker in SPMD ([d_cap]) / [b, d_cap] in emulation.
+    nq = _num_queries(v_local, axis_name)
     if axis_name is not None:
-        v_d = v_local[dense_region.gather_idx]  # [d_cap]
+        v_d = v_local[dense_region.gather_idx]  # [d_cap(, Q)]
+    elif nq is not None:
+        v_d = jnp.take_along_axis(v_local, dense_region.gather_idx[:, :, None], axis=1)
     else:
         v_d = jnp.take_along_axis(v_local, dense_region.gather_idx, axis=1)
-    v_d_all = _all_gather(v_d, axis_name)  # [b, d_cap]
+    v_d_all = _all_gather(v_d, axis_name)  # [b, d_cap(, Q)]
 
     # -- sparse region: streamed vertical partials + compact exchange.
     compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
     fn_c = compact if axis_name is not None else jax.vmap(lambda s, v: compact(s, v))
     idx, val, overflow, logical = fn_c(sparse_stripe, v_local)
+    if payload_dtype is not None:
+        val = val.astype(payload_dtype)  # wire format (§Perf); accumulate in spec dtype
     if axis_name is not None:
         overflow = lax.psum(overflow, axis_name)
         logical = lax.psum(logical, axis_name)
@@ -361,7 +407,7 @@ def hybrid_step(
     val_x = _all_to_all(val, axis_name)
 
     def owner_combine(idx_r, val_r, dense_stripe_, v_d_all_, v_local_, ctx_, mask_):
-        r_sparse = sparse_exchange.scatter_partials(spec, idx_r, val_r, n_local)
+        r_sparse = sparse_exchange.scatter_partials(spec, idx_r, val_r.astype(spec.dtype), n_local)
         r_dense = gathered_gimv(spec, dense_stripe_, v_d_all_, n_local)
         r = combine_elementwise(spec, r_sparse, r_dense)
         v_new = _apply_assign(spec, v_local_, r, ctx_, mask_)
@@ -375,8 +421,8 @@ def hybrid_step(
     b = idx.shape[-2]
     d_cap = dense_region.d_cap
     stats = {  # GLOBAL elements per iteration
-        "gathered_elems": jnp.asarray(b * (b - 1) * d_cap, jnp.float32),
-        "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * 2, jnp.float32),
+        "gathered_elems": jnp.asarray(b * (b - 1) * d_cap * (nq or 1), jnp.float32),
+        "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * (1 + (nq or 1)), jnp.float32),
         "logical_elems": logical,
         "overflow": overflow,
     }

@@ -39,32 +39,56 @@ def count_non_identity(spec: GimvSpec, partials: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum((partials != ident).astype(jnp.float32))
 
 
-def compact_partials(spec: GimvSpec, partials: jnp.ndarray, capacity: int, axis_name):
+def compact_partials(spec: GimvSpec, partials: jnp.ndarray, capacity: int, axis_name, *, batched: bool = False):
     """[..., b, n_local] -> idx [..., b, cap] int32, val [..., b, cap].
 
     idx == n_local marks padding.  Entries equal to the combineAll identity
     are dropped (they are no-ops under combineAll, so value-based compaction
     is semantically lossless).  Returns (idx, val, overflow_rows, logical_elems)
     with the two counters globally reduced when ``axis_name`` is given.
+
+    batched=True: partials carry a trailing query axis [..., n_local, Q] and
+    compaction keeps ONE shared index set per partial row (the union of
+    non-identity entries across queries), so the wire format stays
+    (idx, val[Q]) — Q values ride on each shipped index.  The union can only
+    shrink relative to the structural nnz, so the structural capacity remains
+    overflow-free.  overflow counts rows (not row*query pairs); logical_elems
+    counts value-level non-identity scalars across all queries.
     """
-    n_local = partials.shape[-1]
-    capacity = min(capacity, n_local)
     ident = jnp.asarray(spec.identity, partials.dtype)
-    valid = partials != ident
+    valid_q = partials != ident
+    if batched:
+        valid = jnp.any(valid_q, axis=-1)          # [..., n_local] shared rows
+    else:
+        valid = valid_q
+    n_local = valid.shape[-1]
+    capacity = min(capacity, n_local)
     arange = jnp.arange(n_local, dtype=jnp.int32)
     # Score so that valid entries (in ascending index order) win top_k.
     score = jnp.where(valid, n_local - arange, 0)
     top_score, top_idx = lax.top_k(score, capacity)
     taken = top_score > 0
     idx = jnp.where(taken, top_idx.astype(jnp.int32), jnp.int32(n_local))
-    val = jnp.where(taken, jnp.take_along_axis(partials, top_idx, axis=-1), ident)
+    if batched:
+        val = jnp.take_along_axis(partials, top_idx[..., None], axis=-2)
+        val = jnp.where(taken[..., None], val, ident)
+    else:
+        val = jnp.where(taken, jnp.take_along_axis(partials, top_idx, axis=-1), ident)
     counts = valid.sum(axis=-1)
     overflow = _reduce_sum(jnp.sum((counts > capacity).astype(jnp.float32)), axis_name)
-    logical = _reduce_sum(jnp.sum(counts.astype(jnp.float32)), axis_name)
+    logical = _reduce_sum(jnp.sum(valid_q.astype(jnp.float32)), axis_name)
     return idx, val, overflow, logical
 
 
 def scatter_partials(spec: GimvSpec, idx: jnp.ndarray, val: jnp.ndarray, n_local: int) -> jnp.ndarray:
-    """combineAll of received compact partials: [b, cap] x2 -> r [n_local]."""
-    r = segment_combine(spec, val.reshape(-1), idx.reshape(-1), n_local + 1)
+    """combineAll of received compact partials: [b, cap] x2 -> r [n_local].
+
+    A trailing query axis on ``val`` ([b, cap, Q] with idx [b, cap]) combines
+    columnwise and returns r [n_local, Q].
+    """
+    if val.ndim == idx.ndim + 1:
+        q = val.shape[-1]
+        r = segment_combine(spec, val.reshape(-1, q), idx.reshape(-1), n_local + 1)
+    else:
+        r = segment_combine(spec, val.reshape(-1), idx.reshape(-1), n_local + 1)
     return r[:n_local]

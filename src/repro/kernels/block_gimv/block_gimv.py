@@ -73,6 +73,82 @@ def _dense_gimv_kernel(m_ref, v_ref, o_ref, *, semiring: str):
         o_ref[...] = _combine_all(semiring, o_ref[...], part.astype(o_ref.dtype))
 
 
+def _dense_gimv_multi_kernel(m_ref, v_ref, o_ref, *, semiring: str):
+    """One (TM, TK) x (TK, TQ) tile: partial combineAll over the TK columns.
+
+    plus_times is a straight MXU matmul; the tropical semirings broadcast to
+    a (TM, TK, TQ) tile in VMEM and reduce on the VPU — ops.py keeps TQ small
+    for those so the 3-D temporary fits.
+    """
+    k = pl.program_id(2)
+    m = m_ref[...]                      # (TM, TK) matrix values
+    v = v_ref[...]                      # (TK, TQ) query-tile of vectors
+
+    if semiring == "plus_times":
+        part = jax.lax.dot_general(
+            m, v,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=o_ref.dtype,
+        )                               # (TM, TQ) — MXU at full width
+    elif semiring == "min_plus":
+        part = jnp.min(m[:, :, None] + v[None, :, :], axis=1)
+    elif semiring == "max_plus":
+        part = jnp.max(m[:, :, None] + v[None, :, :], axis=1)
+    else:  # min_src: m is a presence indicator; absent -> identity
+        ident = _identity(semiring, o_ref.dtype)
+        x = jnp.where(m[:, :, None] > 0, v[None, :, :].astype(o_ref.dtype), ident)
+        part = jnp.min(x, axis=1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] = _combine_all(semiring, o_ref[...], part.astype(o_ref.dtype))
+
+
+def dense_gimv_multi_pallas(
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    semiring: str,
+    out_dtype=None,
+    tile_m: int = 128,
+    tile_k: int = 128,
+    tile_q: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Multi-query semiring matmul r = M (x) V over a dense block.
+
+    m: [M, K] (values; for min_src a presence matrix), v: [K, Q] — one query
+    per column.  The grid gains a query-tile axis so the MXU (plus_times) /
+    VPU (tropical) is fed TQ queries wide per pass over the resident matrix
+    tile — the batched-serving analog of dense_gimv_pallas.  M, K, Q must be
+    multiples of the tile sizes (ops.py pads).  Returns r: [M, Q].
+    """
+    assert semiring in SEMIRINGS, semiring
+    M, K = m.shape
+    K2, Q = v.shape
+    assert K2 == K, (m.shape, v.shape)
+    assert M % tile_m == 0 and K % tile_k == 0 and Q % tile_q == 0, (
+        M, K, Q, tile_m, tile_k, tile_q)
+    out_dtype = out_dtype or v.dtype
+
+    grid = (M // tile_m, Q // tile_q, K // tile_k)  # k innermost: accumulate
+    return pl.pallas_call(
+        functools.partial(_dense_gimv_multi_kernel, semiring=semiring),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, q, k: (i, k)),
+            pl.BlockSpec((tile_k, tile_q), lambda i, q, k: (k, q)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_q), lambda i, q, k: (i, q)),
+        out_shape=jax.ShapeDtypeStruct((M, Q), out_dtype),
+        interpret=interpret,
+    )(m, v)
+
+
 def dense_gimv_pallas(
     m: jnp.ndarray,
     v: jnp.ndarray,

@@ -7,9 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.block_gimv.block_gimv import SEMIRINGS, dense_gimv_pallas
+from repro.kernels.block_gimv.block_gimv import SEMIRINGS, dense_gimv_multi_pallas, dense_gimv_pallas
 
-__all__ = ["dense_gimv", "semiring_of"]
+__all__ = ["dense_gimv", "dense_gimv_multi", "semiring_of"]
 
 
 def semiring_of(combine2: str, combine_all: str) -> str:
@@ -35,6 +35,45 @@ def _pad_identity(semiring: str, dtype):
     if semiring == "max_plus":
         return -np.inf
     return 0  # min_src: presence 0 -> masked inside the kernel
+
+
+@partial(jax.jit, static_argnames=("semiring", "tile_m", "tile_k", "tile_q", "interpret"))
+def dense_gimv_multi(
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    semiring: str,
+    tile_m: int = 128,
+    tile_k: int = 128,
+    tile_q: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Multi-query dense block GIM-V with automatic tile padding.
+
+    m: [M, K], v: [K, Q] -> r: [M, Q].  plus_times defaults to a 128-wide
+    query tile (full MXU); the tropical semirings default to TQ=8 so their
+    (TM, TK, TQ) broadcast temporary stays ~512 KB of VMEM.
+    """
+    assert semiring in SEMIRINGS
+    if tile_q is None:
+        tile_q = 128 if semiring == "plus_times" else 8
+    M, K = m.shape
+    _, Q = v.shape
+    Mp = -(-M // tile_m) * tile_m
+    Kp = -(-K // tile_k) * tile_k
+    Qp = -(-Q // tile_q) * tile_q
+    if (Mp, Kp) != (M, K):
+        pad_val = _pad_identity(semiring, m.dtype)
+        m = jnp.pad(m, ((0, Mp - M), (0, Kp - K)), constant_values=pad_val)
+    if (Kp, Qp) != (K, Q):
+        # Padded K rows are never selected (matrix padding is the identity);
+        # padded Q columns are sliced off below.
+        v = jnp.pad(v, ((0, Kp - K), (0, Qp - Q)))
+    out = dense_gimv_multi_pallas(
+        m, v, semiring=semiring, out_dtype=v.dtype,
+        tile_m=tile_m, tile_k=tile_k, tile_q=tile_q, interpret=interpret,
+    )
+    return out[:M, :Q]
 
 
 @partial(jax.jit, static_argnames=("semiring", "tile_m", "tile_k", "interpret"))

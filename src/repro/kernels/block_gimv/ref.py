@@ -17,3 +17,13 @@ def dense_gimv_ref(m: jnp.ndarray, v: jnp.ndarray, *, semiring: str, out_dtype=N
         x = jnp.where(m > 0, v[None, :].astype(out_dtype), jnp.array(ident, out_dtype))
         return jnp.min(x, axis=1)
     raise ValueError(semiring)
+
+
+def dense_gimv_multi_ref(m: jnp.ndarray, v: jnp.ndarray, *, semiring: str, out_dtype=None) -> jnp.ndarray:
+    """Vmapped oracle for the multi-query kernel: m [M, K], v [K, Q] -> [M, Q]."""
+    import jax
+
+    return jax.vmap(
+        lambda col: dense_gimv_ref(m, col, semiring=semiring, out_dtype=out_dtype),
+        in_axes=1, out_axes=1,
+    )(v)

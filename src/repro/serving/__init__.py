@@ -1,0 +1,19 @@
+"""repro.serving: batched multi-query GIM-V serving (continuous batching).
+
+Pre-partition once, answer many concurrent queries against the resident
+matrix — see server.py for the design notes.
+"""
+from repro.serving.batcher import DEFAULT_BUCKETS, Query, QueryBatcher, QueryResult
+from repro.serving.server import FAMILIES, PMVServer, QueryFamily, make_batched_step, per_query_delta
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "FAMILIES",
+    "PMVServer",
+    "Query",
+    "QueryBatcher",
+    "QueryFamily",
+    "QueryResult",
+    "make_batched_step",
+    "per_query_delta",
+]

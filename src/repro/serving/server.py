@@ -1,0 +1,358 @@
+"""PMVServer: pre-partition once, answer many concurrent GIM-V queries.
+
+The paper amortizes pre-partitioning across the *iterations* of one solve
+(§3.1); serving amortizes it across *queries*.  The resident matrix stripes
+stay on device while query vectors come and go as columns of a blocked
+[b, n_local, Q] batch — every placement (placement.py) carries the trailing
+query axis through its collectives, so one iteration of the batched step
+advances all in-flight queries at the cost of one matrix traversal.
+
+Continuous batching: each query column tracks its own convergence delta; a
+converged column is retired (result extracted, latency recorded) and a
+waiting query of the same family is admitted into the freed column mid-loop
+without disturbing the others — the GIM-V semirings are columnwise
+independent, so an admitted column's trajectory is bitwise the trajectory it
+would have had in a fresh batch.  Batches are padded to fixed Q buckets
+(batcher.py) so jit specializes once per bucket size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms
+from repro.core.engine import PMVEngine, StepConfig, _squeeze0, placement_call
+from repro.core.gimv import GimvSpec
+from repro.serving.batcher import DEFAULT_BUCKETS, Query, QueryBatcher, QueryResult
+
+__all__ = ["PMVServer", "QueryFamily", "FAMILIES", "make_batched_step", "per_query_delta"]
+
+
+# ---------------------------------------------------------------------------
+# Query families: algorithm kind -> spec + per-query column construction.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QueryFamily:
+    """How to turn queries of one kind into columns of a batched solve.
+
+    delta_kind: 'abs' (sum |dv|, the PR/RWR metric) or 'count' (changed
+      entries — SSSP/CC, whose +-inf distances make abs-deltas NaN).
+    empty_column: neutral fill for padded / retired-and-unreplaced columns;
+      frozen by the active mask but must stay finite under combine2.
+    """
+
+    kind: str
+    delta_kind: str
+    make_spec: Callable[[int, Query], GimvSpec]
+    init_column: Callable[[int, Query], np.ndarray]
+    ctx_columns: Callable[[int, Query], dict[str, np.ndarray]]
+    empty_column: Callable[[int], np.ndarray]
+    symmetrize: bool = False
+
+
+def _onehot(n: int, i: int) -> np.ndarray:
+    x = np.zeros(n, np.float32)
+    x[i] = 1.0
+    return x
+
+
+FAMILIES: dict[str, QueryFamily] = {
+    "pagerank": QueryFamily(
+        kind="pagerank",
+        delta_kind="abs",
+        make_spec=lambda n, q: algorithms.pagerank(n, damping=q.c),
+        init_column=lambda n, q: np.full(n, 1.0 / n, np.float32),
+        ctx_columns=lambda n, q: {},
+        empty_column=lambda n: np.zeros(n, np.float32),
+    ),
+    "rwr": QueryFamily(
+        kind="rwr",
+        delta_kind="abs",
+        make_spec=lambda n, q: algorithms.random_walk_with_restart(n, source=q.source, c=q.c),
+        init_column=lambda n, q: _onehot(n, q.source),
+        ctx_columns=lambda n, q: algorithms.rwr_context(n, q.source),
+        empty_column=lambda n: np.zeros(n, np.float32),
+    ),
+    "sssp": QueryFamily(
+        kind="sssp",
+        delta_kind="count",
+        make_spec=lambda n, q: algorithms.sssp(source=q.source),
+        init_column=lambda n, q: np.where(np.arange(n) == q.source, np.float32(0.0), np.float32(np.inf)),
+        ctx_columns=lambda n, q: {},
+        empty_column=lambda n: np.full(n, np.inf, np.float32),
+    ),
+    "cc": QueryFamily(
+        kind="cc",
+        delta_kind="count",
+        make_spec=lambda n, q: algorithms.connected_components(),
+        init_column=lambda n, q: np.arange(n, dtype=np.int32),
+        ctx_columns=lambda n, q: {},
+        empty_column=lambda n: np.arange(n, dtype=np.int32),
+        symmetrize=True,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Batched step: placement with a trailing query axis + per-query convergence.
+# ---------------------------------------------------------------------------
+
+def per_query_delta(v, v_new, *, delta_kind: str):
+    """Per-column convergence contribution: [.., n_local, Q] -> [Q]."""
+    axes = tuple(range(v_new.ndim - 1))
+    if delta_kind == "count":
+        return jnp.sum((v_new != v).astype(jnp.float32), axis=axes)
+    return jnp.sum(jnp.abs(v_new - v), axis=axes)
+
+
+def make_batched_step(spec: GimvSpec, cfg: StepConfig, mesh=None, axis_name: str = "workers",
+                      *, delta_kind: str = "abs"):
+    """Build step(matrix, v, ctx, mask, active) -> (v_new, deltas [Q], stats).
+
+    v/ctx carry a trailing query axis ([b, n_local, Q] in emulation,
+    [n_local, Q] per worker in SPMD).  ``active`` [Q] freezes retired /
+    padded columns: their v entries pass through unchanged, so a column can
+    sit retired while the rest of the batch keeps iterating.
+    """
+
+    def _advance(matrix, v, ctx, mask, active, axis):
+        v_new, _r, stats = placement_call(spec, cfg, matrix, v, ctx, mask, axis)
+        v_new = jnp.where(active, v_new, v)  # broadcast over trailing Q axis
+        return v_new, per_query_delta(v, v_new, delta_kind=delta_kind), stats
+
+    if mesh is None:
+        def step(matrix, v, ctx, mask, active):
+            return _advance(matrix, v, ctx, mask, active, None)
+        return jax.jit(step, donate_argnums=(1,))
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(matrix, v, ctx, mask, active):
+        matrix_, v_, ctx_, mask_ = (_squeeze0(t) for t in (matrix, v, ctx, mask))
+        v_new, deltas, stats = _advance(matrix_, v_, ctx_, mask_, active, axis_name)
+        deltas = jax.lax.psum(deltas, axis_name)
+        return v_new[None], deltas, stats
+
+    sharded, repl = P(axis_name), P()
+    step = shard_map(
+        body, mesh=mesh,
+        in_specs=(sharded, sharded, sharded, sharded, repl),
+        out_specs=(sharded, repl, repl),
+        check_rep=False,
+    )
+    return jax.jit(step, donate_argnums=(1,))
+
+
+# ---------------------------------------------------------------------------
+# The server.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _FamilyState:
+    family: QueryFamily
+    spec: GimvSpec
+    engine: PMVEngine
+    step: Callable
+    matrix: object
+    mask: object
+    part: object
+    meta: dict
+
+
+class PMVServer:
+    """Multi-query GIM-V serving over one resident pre-partitioned matrix.
+
+    submit() enqueues queries; drain() packs them into Q-bucket batches per
+    family, iterates the batched step with per-query convergence tracking,
+    and continuously admits waiting queries into retired columns.  Everything
+    expensive — partitioning, device-resident stripes, jit — is cached per
+    family across batches (and across drain calls).
+    """
+
+    def __init__(
+        self,
+        edges: np.ndarray,
+        n: int,
+        *,
+        b: int,
+        strategy: str = "selective",
+        theta: float | str = "auto",
+        psi: str = "cyclic",
+        exchange: str = "sparse",
+        capacity: str = "structural",
+        slack: float = 1.5,
+        payload_dtype: str | None = None,
+        base_weights: np.ndarray | None = None,
+        buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+        max_iters: int = 200,
+        mesh=None,
+        axis_name: str = "workers",
+    ):
+        self.edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        self.n = int(n)
+        self.b = int(b)
+        self.max_iters = int(max_iters)
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self._engine_kwargs = dict(
+            b=b, strategy=strategy, theta=theta, psi=psi, exchange=exchange,
+            capacity=capacity, slack=slack, payload_dtype=payload_dtype,
+            base_weights=base_weights, mesh=mesh, axis_name=axis_name,
+        )
+        self._batcher = QueryBatcher(buckets)
+        self._families: dict[tuple, _FamilyState] = {}
+        self._results: dict[int, QueryResult] = {}
+        self._next_qid = 0
+        self._stats = {
+            "batches": 0, "queries": 0, "admitted_mid_batch": 0,
+            "iterations": 0.0, "gathered_elems": 0.0, "exchanged_elems": 0.0,
+            "logical_elems": 0.0, "wall_s": 0.0,
+        }
+
+    # ------------------------------------------------------------------
+    def submit(self, query: Query) -> int:
+        """Enqueue a query; returns its qid (key into drain()'s results)."""
+        if not 0 <= query.source < self.n:
+            raise ValueError(
+                f"query source {query.source} out of range for |V|={self.n}")
+        if query.qid is not None:  # resubmission: don't alias the old entry
+            query = dataclasses.replace(query, qid=None, t_submit=None)
+        qid = self._next_qid
+        self._next_qid += 1
+        query.qid = qid
+        query.t_submit = time.perf_counter()
+        self._batcher.add(query)
+        self._stats["queries"] += 1
+        return qid
+
+    def drain(self) -> dict[int, QueryResult]:
+        """Serve every queued query to convergence; returns {qid: result}."""
+        while True:
+            nxt = self._batcher.next_batch()
+            if nxt is None:
+                break
+            key, batch = nxt
+            self._run_batch(key, batch)
+        out, self._results = self._results, {}
+        return out
+
+    def serve(self, queries: list[Query]) -> list[QueryResult]:
+        """submit() + drain(), results in submission order."""
+        qids = [self.submit(q) for q in queries]
+        results = self.drain()
+        return [results[qid] for qid in qids]
+
+    def stats(self) -> dict:
+        return dict(self._stats)
+
+    # ------------------------------------------------------------------
+    def _family_state(self, key: tuple, sample: Query) -> _FamilyState:
+        if key not in self._families:
+            family = FAMILIES[sample.spec_kind]
+            spec = family.make_spec(self.n, sample)
+            engine = PMVEngine(self.edges, self.n, symmetrize=family.symmetrize,
+                               **self._engine_kwargs)
+            _, matrix, _v0, _ctx, mask, meta = engine.prepare(spec)
+            step = make_batched_step(spec, meta["cfg"], self.mesh, self.axis_name,
+                                     delta_kind=family.delta_kind)
+            self._families[key] = _FamilyState(
+                family=family, spec=spec, engine=engine, step=step,
+                matrix=matrix, mask=mask, part=meta["part"], meta=meta,
+            )
+        return self._families[key]
+
+    def _column(self, st: _FamilyState, query: Query | None):
+        """(v_col [b, n_local], ctx cols) for a query (None -> neutral pad)."""
+        fam, part = st.family, st.part
+        if query is None:
+            v_col = part.to_blocked(fam.empty_column(self.n))
+            ctx_cols = {k: np.zeros((self.b, part.n_local), x.dtype) for k, x in
+                        fam.ctx_columns(self.n, Query(spec_kind=fam.kind)).items()}
+        else:
+            v_col = part.to_blocked(fam.init_column(self.n, query))
+            ctx_cols = {k: part.to_blocked(x) for k, x in fam.ctx_columns(self.n, query).items()}
+        return v_col, ctx_cols
+
+    def _run_batch(self, key: tuple, batch: list[Query]) -> None:
+        st = self._family_state(key, batch[0])
+        part = st.part
+        n_q = self._batcher.bucket_for(len(batch))
+        self._stats["batches"] += 1
+
+        slots: list[Query | None] = [None] * n_q
+        v_np = np.zeros((self.b, part.n_local, n_q), st.spec.dtype)
+        ctx_np: dict[str, np.ndarray] | None = None
+        for q_i in range(n_q):
+            query = batch[q_i] if q_i < len(batch) else None
+            slots[q_i] = query
+            v_col, ctx_cols = self._column(st, query)
+            if ctx_np is None:
+                ctx_np = {k: np.zeros((self.b, part.n_local, n_q), x.dtype)
+                          for k, x in ctx_cols.items()}
+            v_np[:, :, q_i] = v_col
+            for k, x in ctx_cols.items():
+                ctx_np[k][:, :, q_i] = x
+
+        v = jnp.asarray(v_np)
+        ctx = {k: jnp.asarray(x) for k, x in (ctx_np or {}).items()}
+        active = np.array([s is not None for s in slots])
+        iters = np.zeros(n_q, np.int64)
+        tols = np.array([s.tol if s else 0.0 for s in slots])
+        caps = np.array([(s.max_iters or self.max_iters) if s else 0 for s in slots])
+
+        while active.any():
+            t0 = time.perf_counter()
+            v_new, deltas, stats = st.step(st.matrix, v, ctx, st.mask, jnp.asarray(active))
+            deltas = np.asarray(deltas)
+            self._stats["wall_s"] += time.perf_counter() - t0
+            self._stats["iterations"] += 1
+            for k in ("gathered_elems", "exchanged_elems", "logical_elems"):
+                self._stats[k] += float(np.asarray(stats.get(k, 0.0)))
+            if float(np.asarray(stats.get("overflow", 0.0))) > 0:
+                # A truncated exchange would silently corrupt EVERY in-flight
+                # column (the shared index set unions rows across queries),
+                # so refuse rather than serve wrong answers.  The default
+                # capacity='structural' cannot overflow.
+                lost = sorted(q.qid for q in slots if q is not None)
+                raise RuntimeError(
+                    "sparse exchange overflow in batched serving: capacity "
+                    f"{st.meta['capacity']} too small for the query batch — "
+                    "construct the server with capacity='structural' or "
+                    f"exchange='dense'; unanswered qids in this batch: {lost}")
+            iters[active] += 1
+
+            for q_i in np.nonzero(active)[0]:
+                done = deltas[q_i] < tols[q_i]
+                if not done and iters[q_i] < caps[q_i]:
+                    continue
+                # retire the converged (or capped) column
+                query = slots[q_i]
+                vec = part.from_blocked(np.asarray(v_new[:, :, q_i]))
+                self._results[query.qid] = QueryResult(
+                    qid=query.qid, query=query, vector=vec,
+                    iterations=int(iters[q_i]), converged=bool(done),
+                    latency_s=time.perf_counter() - query.t_submit,
+                )
+                # admit a waiting query of the same family into the freed slot
+                waiting = self._batcher.pop_waiting(key)
+                if waiting is not None:
+                    self._stats["admitted_mid_batch"] += 1
+                    slots[q_i] = waiting
+                    v_col, ctx_cols = self._column(st, waiting)
+                    v_new = v_new.at[:, :, q_i].set(jnp.asarray(v_col))
+                    for k, x in ctx_cols.items():
+                        ctx[k] = ctx[k].at[:, :, q_i].set(jnp.asarray(x))
+                    iters[q_i] = 0
+                    tols[q_i] = waiting.tol
+                    caps[q_i] = waiting.max_iters or self.max_iters
+                else:
+                    slots[q_i] = None
+                    active[q_i] = False
+            v = v_new

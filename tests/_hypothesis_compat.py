@@ -1,0 +1,99 @@
+"""Property-testing shim: real hypothesis when installed, else a tiny
+random-sampling emulation.
+
+The dev extra (``pip install -e .[dev]`` or ``requirements-dev.txt``)
+installs the real library; minimal CI/container images may lack it, and the
+property tests are load-bearing enough that skipping them silently would be
+worse than running them with plain random sampling.  The fallback supports
+exactly the strategy surface these tests use: ``st.integers``,
+``st.sampled_from``, ``st.data()``; the first two examples pin every integer
+strategy to its min/max bound so the b=1 / n=min corner cases are always
+exercised.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample, lo_sample=None, hi_sample=None):
+            self.sample = sample
+            self.lo_sample = lo_sample or sample
+            self.hi_sample = hi_sample or sample
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(None)
+
+    class _Data:
+        """Interactive draw object for ``@given(data=st.data())`` tests."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            del label
+            return strategy.sample(self._rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: rng.randint(min_value, max_value),
+                lo_sample=lambda rng: min_value,
+                hi_sample=lambda rng: max_value,
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _St()
+
+    def _draw(strategy, rng, phase):
+        if isinstance(strategy, _DataStrategy):
+            return _Data(rng)
+        if phase == 0:
+            return strategy.lo_sample(rng)
+        if phase == 1:
+            return strategy.hi_sample(rng)
+        return strategy.sample(rng)
+
+    def settings(max_examples=25, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper():
+                # read at call time so @settings works above OR below @given
+                n_examples = getattr(wrapper, "_max_examples",
+                                     getattr(fn, "_max_examples", 25))
+                rng = random.Random(0xC0FFEE)
+                for ex in range(n_examples):
+                    phase = ex if ex < 2 else 2
+                    args = [_draw(s, rng, phase) for s in arg_strategies]
+                    kwargs = {k: _draw(s, rng, phase) for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            # NOT functools.wraps: pytest must see the zero-arg signature,
+            # not the original one (it would resolve n/b/... as fixtures).
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

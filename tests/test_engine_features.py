@@ -1,0 +1,97 @@
+"""Engine satellites: checkpoint save/resume round-trip, the bfloat16 wire
+format, the overflow -> dense-exchange fallback, and prepare caching."""
+import numpy as np
+import pytest
+
+from repro.core import PMVEngine, pagerank
+from repro.graph import erdos_renyi, star_graph
+
+
+def _graph():
+    n = 96
+    return erdos_renyi(n, 420, seed=3), n
+
+
+def test_checkpoint_resume_matches_uninterrupted(tmp_path):
+    """Interrupt at iteration 10, resume, land on the uninterrupted vector."""
+    edges, n = _graph()
+    spec = pagerank(n)
+    ck = str(tmp_path / "ck")
+
+    full = PMVEngine(edges, n, b=4, strategy="vertical").run(
+        spec, max_iters=20, tol=0.0)
+
+    eng = PMVEngine(edges, n, b=4, strategy="vertical")
+    partial = eng.run(spec, max_iters=10, tol=0.0,
+                      checkpoint_dir=ck, checkpoint_every=5)
+    assert partial.iterations == 10
+    resumed = eng.run(spec, max_iters=20, tol=0.0,
+                      checkpoint_dir=ck, checkpoint_every=5, resume=True)
+    assert resumed.iterations == 20
+    assert len(resumed.per_iter) == 10          # only iterations 10..19 re-run
+    np.testing.assert_allclose(resumed.v, full.v, rtol=1e-7, atol=1e-9)
+
+
+def test_checkpoint_resume_converges_to_same_vector(tmp_path):
+    """Resumed run converges to the same fixed point as an uninterrupted one."""
+    edges, n = _graph()
+    spec = pagerank(n)
+    ck = str(tmp_path / "ck")
+
+    full = PMVEngine(edges, n, b=4, strategy="hybrid", theta=4.0).run(
+        spec, max_iters=100, tol=1e-8)
+    assert full.converged
+
+    eng = PMVEngine(edges, n, b=4, strategy="hybrid", theta=4.0)
+    eng.run(spec, max_iters=7, tol=0.0, checkpoint_dir=ck, checkpoint_every=7)
+    resumed = eng.run(spec, max_iters=100, tol=1e-8,
+                      checkpoint_dir=ck, checkpoint_every=7, resume=True)
+    assert resumed.converged
+    np.testing.assert_allclose(resumed.v, full.v, atol=1e-7)
+
+
+@pytest.mark.parametrize("strategy", ["vertical", "hybrid"])
+def test_payload_dtype_threaded_and_close_to_f32(strategy):
+    edges, n = _graph()
+    spec = pagerank(n)
+    eng16 = PMVEngine(edges, n, b=4, strategy=strategy, theta=4.0, payload_dtype="bfloat16")
+    _, _, _, _, _, meta = eng16.prepare(spec)
+    assert meta["cfg"].payload_dtype == "bfloat16"   # wire format actually set
+    r16 = eng16.run(spec, max_iters=15, tol=0.0)
+    r32 = PMVEngine(edges, n, b=4, strategy=strategy, theta=4.0).run(spec, max_iters=15, tol=0.0)
+    np.testing.assert_allclose(r16.v, r32.v, atol=5e-3)
+    assert np.abs(r16.v - r32.v).max() > 0           # bf16 really on the wire
+
+
+@pytest.mark.parametrize("strategy,label", [("vertical", "dense"), ("hybrid", "structural_capacity")])
+def test_overflow_falls_back(strategy, label):
+    """A too-tight model capacity overflows; the engine retries once with an
+    overflow-free configuration instead of raising."""
+    n = 64
+    edges = star_graph(n)   # hub 0 -> all: partials are maximally dense
+    spec = pagerank(n)
+    eng = PMVEngine(edges, n, b=4, strategy=strategy, theta=1e9,
+                    capacity="model", slack=0.01)
+    res = eng.run(spec, max_iters=10, tol=0.0)
+    assert res.totals["fallback"] == label
+    ref = PMVEngine(edges, n, b=4, strategy=strategy, theta=1e9).run(
+        spec, max_iters=10, tol=0.0)
+    np.testing.assert_allclose(res.v, ref.v, rtol=1e-6, atol=1e-9)
+
+
+def test_overflow_without_fallback_still_raises():
+    n = 64
+    edges = star_graph(n)
+    eng = PMVEngine(edges, n, b=4, strategy="vertical", capacity="model", slack=0.01)
+    with pytest.raises(RuntimeError, match="overflow"):
+        eng.run(pagerank(n), max_iters=10, tol=0.0, _allow_fallback=False)
+
+
+def test_prepare_is_cached_per_spec():
+    edges, n = _graph()
+    spec = pagerank(n)
+    eng = PMVEngine(edges, n, b=4, strategy="vertical")
+    step1, m1, *_ = eng.prepare(spec)
+    step2, m2, *_ = eng.prepare(spec)
+    assert step1 is step2 and m1 is m2     # partition + jit paid once
+    assert eng.prepare(pagerank(n))[0] is not step1  # distinct spec instance

@@ -1,6 +1,6 @@
 """Graph substrate: generators, stats, io."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.graph import compute_stats, erdos_renyi, paper_example_graph, rmat, star_graph
 from repro.graph.generators import dedup_edges, symmetrize_edges

@@ -5,11 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.block_gimv import dense_gimv, dense_gimv_ref
+from repro.kernels.block_gimv import dense_gimv, dense_gimv_multi, dense_gimv_multi_ref, dense_gimv_ref
 from repro.kernels.ell_spmv import ell_from_edges, ell_gimv, ell_gimv_ref
 
 SEMIRINGS = ["plus_times", "min_plus", "min_src", "max_plus"]
 DENSE_SHAPES = [(128, 128), (256, 384), (100, 200), (1, 1), (129, 257), (512, 64)]
+MULTI_SHAPES = [(128, 128, 128), (256, 384, 17), (100, 200, 33), (1, 1, 1), (129, 257, 8), (512, 64, 2)]
 
 
 @pytest.mark.parametrize("semiring", SEMIRINGS)
@@ -43,6 +44,46 @@ def test_dense_gimv_plus_times_equals_matvec():
     v = rng.random(300).astype(np.float32)
     got = dense_gimv(jnp.asarray(m), jnp.asarray(v), semiring="plus_times", interpret=True)
     np.testing.assert_allclose(np.asarray(got), m @ v, rtol=1e-5)
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("shape", MULTI_SHAPES)
+def test_dense_gimv_multi_matches_vmapped_ref(semiring, shape):
+    """The [M,K]x[K,Q] multi-query kernel vs the vmapped single-query oracle
+    (interpret mode), all four semirings, ragged shapes included."""
+    M, K, Q = shape
+    rng = np.random.default_rng(hash(("multi", semiring, shape)) % 2**31)
+    m = rng.random((M, K)).astype(np.float32)
+    if semiring == "min_src":
+        m = (m > 0.7).astype(np.float32)
+    v = rng.random((K, Q)).astype(np.float32)
+    got = dense_gimv_multi(jnp.asarray(m), jnp.asarray(v), semiring=semiring, interpret=True)
+    want = dense_gimv_multi_ref(jnp.asarray(m), jnp.asarray(v), semiring=semiring)
+    assert got.shape == (M, Q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+def test_dense_gimv_multi_q1_equals_single(semiring):
+    """Q=1 must reduce to the single-vector kernel exactly."""
+    rng = np.random.default_rng(7)
+    m = rng.random((96, 160)).astype(np.float32)
+    if semiring == "min_src":
+        m = (m > 0.8).astype(np.float32)
+    v = rng.random(160).astype(np.float32)
+    multi = dense_gimv_multi(jnp.asarray(m), jnp.asarray(v)[:, None], semiring=semiring, interpret=True)
+    single = dense_gimv(jnp.asarray(m), jnp.asarray(v), semiring=semiring, interpret=True)
+    np.testing.assert_allclose(np.asarray(multi[:, 0]), np.asarray(single), rtol=1e-6, atol=1e-6)
+
+
+def test_dense_gimv_multi_min_src_int32():
+    """CC labels are int32; the multi-query presence semiring must hold them."""
+    rng = np.random.default_rng(0)
+    m = (rng.random((64, 96)) > 0.8).astype(np.float32)
+    v = rng.integers(0, 100, (96, 5)).astype(np.int32)
+    got = dense_gimv_multi(jnp.asarray(m), jnp.asarray(v), semiring="min_src", interpret=True)
+    want = dense_gimv_multi_ref(jnp.asarray(m), jnp.asarray(v), semiring="min_src")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 @pytest.mark.parametrize("semiring", ["plus_times", "min_plus", "min_src"])

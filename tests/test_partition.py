@@ -1,7 +1,7 @@
 """Pre-partitioning invariants (paper §3.1.1), incl. hypothesis properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.gimv import GimvSpec
 from repro.core.partition import Partition, partition_graph

@@ -1,0 +1,162 @@
+"""repro.serving: batched multi-query GIM-V vs independent solves, and the
+continuous-batching retire/admit protocol."""
+import numpy as np
+import pytest
+
+from repro.core import PMVEngine
+from repro.core.algorithms import random_walk_with_restart, rwr_context
+from repro.graph import rmat
+from repro.graph.generators import chain_graph
+from repro.serving import PMVServer, Query, QueryBatcher
+
+STRATEGIES = ["horizontal", "vertical", "hybrid"]
+
+
+def _rwr_references(edges, n, b, sources, tol, c=0.85):
+    """Independent PMVEngine.run solves (one engine, ctx-swapped restart)."""
+    eng = PMVEngine(edges, n, b=b, strategy="vertical")
+    spec = random_walk_with_restart(n, source=int(sources[0]), c=c)
+    refs = {}
+    for s in sources:
+        r = eng.run(spec, ctx=rwr_context(n, int(s)), max_iters=500, tol=tol)
+        assert r.converged
+        refs[int(s)] = r.v
+    return refs
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_batched_matches_independent_small(strategy):
+    """Q=12 RWR queries (bucket pads to 16) == 12 independent solves."""
+    n, b = 1024, 4
+    edges = rmat(10, 6000, seed=7)
+    sources = np.random.default_rng(1).choice(n, size=12, replace=False)
+    refs = _rwr_references(edges, n, b, sources, tol=1e-7)
+
+    srv = PMVServer(edges, n, b=b, strategy=strategy, theta=8.0, buckets=(8, 16))
+    res = srv.serve([Query("rwr", source=int(s), tol=1e-7) for s in sources])
+    for s, r in zip(sources, res):
+        assert r.converged
+        np.testing.assert_allclose(r.vector, refs[int(s)], atol=1e-5)
+    assert srv.stats()["batches"] == 1
+
+
+_Q64_REF_CACHE: dict = {}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_batched_q64_matches_independent_rmat(strategy):
+    """Acceptance: Q=64 RWR queries (distinct sources) on a 10k+-vertex RMAT
+    graph match 64 independent PMVEngine.run solves within 1e-5."""
+    scale = 14
+    n, b = 2 ** scale, 4          # 16384 vertices
+    edges = rmat(scale, 80000, seed=11)
+    sources = np.random.default_rng(5).choice(n, size=64, replace=False)
+    if "refs" not in _Q64_REF_CACHE:
+        # c=0.5 contracts ~4x faster than 0.85 with identical code paths,
+        # keeping 64 reference solves + 3 batched strategies in tier-1 budget;
+        # the solves are strategy-independent, so compute them once.
+        _Q64_REF_CACHE["refs"] = _rwr_references(edges, n, b, sources, tol=1e-7, c=0.5)
+    refs = _Q64_REF_CACHE["refs"]
+
+    srv = PMVServer(edges, n, b=b, strategy=strategy, theta="auto" if strategy == "hybrid" else 16.0,
+                    buckets=(64,), max_iters=500)
+    res = srv.serve([Query("rwr", source=int(s), tol=1e-7, c=0.5) for s in sources])
+    worst = 0.0
+    for s, r in zip(sources, res):
+        assert r.converged
+        worst = max(worst, float(np.abs(r.vector - refs[int(s)]).max()))
+    assert worst < 1e-5, worst
+
+
+def test_continuous_batching_retire_and_admit():
+    """A converged column is retired and a waiting query admitted mid-loop
+    without disturbing in-flight columns: one batch serves 7 queries through
+    4 slots, per-query iteration counts differ, every answer is exact."""
+    n = 64
+    edges = chain_graph(n)
+    srv = PMVServer(edges, n, b=4, strategy="vertical", buckets=(4,), max_iters=300)
+    sources = [0, 40, 55, 60, 62, 10, 30]   # eccentricities differ wildly
+    res = srv.serve([Query("sssp", source=s, tol=0.5) for s in sources])
+
+    for s, r in zip(sources, res):
+        want = np.where(np.arange(n) >= s, np.arange(n) - s, np.inf)
+        np.testing.assert_array_equal(r.vector, want)
+
+    iters = [r.iterations for r in res]
+    stats = srv.stats()
+    assert stats["batches"] == 1                       # one resident batch
+    assert stats["admitted_mid_batch"] == 3            # 7 queries, 4 slots
+    assert len(set(iters)) > 1                         # genuinely per-query
+    # admitted queries ran fewer iterations than the longest in-flight one
+    assert max(iters[4:]) < max(iters[:4])
+
+
+def test_mixed_kinds_grouped_into_separate_batches():
+    """RWR and SSSP queries share the server but not a batch (different
+    semirings); both kinds are answered correctly."""
+    n = 256
+    edges = rmat(8, 1500, seed=3)
+    srv = PMVServer(edges, n, b=4, strategy="vertical", buckets=(8,))
+    queries = [Query("rwr", source=i, tol=1e-7) for i in range(5)]
+    queries += [Query("sssp", source=i, tol=0.5) for i in (0, 7)]
+    res = srv.serve(queries)
+
+    refs = _rwr_references(edges, n, 4, list(range(5)), tol=1e-7)
+    for i in range(5):
+        np.testing.assert_allclose(res[i].vector, refs[i], atol=1e-5)
+    assert srv.stats()["batches"] == 2  # one per family, never mixed
+
+
+def test_mixed_kinds_sssp_answers():
+    n = 128
+    edges = chain_graph(n)
+    srv = PMVServer(edges, n, b=4, strategy="vertical", buckets=(8,))
+    res = srv.serve([Query("sssp", source=s, tol=0.5) for s in (0, 100)])
+    for s, r in zip((0, 100), res):
+        want = np.where(np.arange(n) >= s, np.arange(n) - s, np.inf)
+        np.testing.assert_array_equal(r.vector, want)
+    assert srv.stats()["batches"] >= 1
+
+
+def test_resubmitting_same_query_object_yields_two_results():
+    """submit() must not alias a resubmitted Query's qid onto the old entry."""
+    n = 64
+    edges = chain_graph(n)
+    srv = PMVServer(edges, n, b=4, strategy="vertical", buckets=(4,))
+    q = Query("sssp", source=3, tol=0.5)
+    res = srv.serve([q, q])
+    assert len(res) == 2
+    np.testing.assert_array_equal(res[0].vector, res[1].vector)
+    # and a fresh serve() of the already-answered object still works
+    res2 = srv.serve([q])
+    np.testing.assert_array_equal(res2[0].vector, res[0].vector)
+
+
+def test_server_refuses_overflowing_capacity():
+    """A truncating sparse exchange must never be served as a converged
+    answer — the server raises instead (engine-side runs fall back, but a
+    batched fallback would disturb every in-flight column)."""
+    from repro.graph import star_graph
+
+    n = 64
+    srv = PMVServer(star_graph(n), n, b=4, strategy="vertical",
+                    capacity="model", slack=0.01)
+    with pytest.raises(RuntimeError, match="overflow"):
+        srv.serve([Query("pagerank", tol=1e-10)])
+
+
+def test_batcher_bucket_policy_and_fifo():
+    qb = QueryBatcher(buckets=(8, 16, 32))
+    assert qb.bucket_for(3) == 8
+    assert qb.bucket_for(9) == 16
+    assert qb.bucket_for(64) == 32   # clamp to max bucket
+    qb.add(Query("rwr", source=1))
+    qb.add(Query("sssp", source=2))
+    qb.add(Query("rwr", source=3))
+    key, batch = qb.next_batch()
+    assert key[0] == "rwr" and [q.source for q in batch] == [1, 3]
+    assert qb.pop_waiting(key) is None
+    key2, batch2 = qb.next_batch()
+    assert key2 == ("sssp",) and batch2[0].source == 2
+    assert qb.next_batch() is None

@@ -112,8 +112,16 @@ def test_vertical_dense_vs_sparse_exchange(small_graph):
 
 
 def test_model_capacity_with_overflow_detection(small_graph):
+    """Overflow is detected and recovered: the engine retries the run with
+    the dense exchange (the documented fallback) and records it; with the
+    fallback disabled, it raises."""
     edges, n = small_graph
     spec = pagerank(n)
     eng = PMVEngine(edges, n, b=8, strategy="vertical", capacity="model", slack=0.01)
     with pytest.raises(RuntimeError, match="overflow"):
-        eng.run(spec, max_iters=3, tol=0.0)
+        eng.run(spec, max_iters=3, tol=0.0, _allow_fallback=False)
+    res = eng.run(spec, max_iters=3, tol=0.0)
+    assert res.totals["fallback"] == "dense"
+    ref = PMVEngine(edges, n, b=8, strategy="vertical", exchange="dense").run(
+        spec, max_iters=3, tol=0.0)
+    np.testing.assert_allclose(res.v, ref.v, rtol=1e-6)
