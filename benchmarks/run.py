@@ -8,11 +8,12 @@ import time
 
 def main() -> None:
     from benchmarks import (fig1_scalability, fig5_density, fig6_theta, fig7_machines,
-                            fig8_engine, fig9_serving, table2_algorithms)
+                            fig8_engine, fig9_serving, fig10_kernels, table2_algorithms)
 
     print("name,us_per_call,derived")
     for mod in (table2_algorithms, fig1_scalability, fig5_density,
-                fig6_theta, fig7_machines, fig8_engine, fig9_serving):
+                fig6_theta, fig7_machines, fig8_engine, fig9_serving,
+                fig10_kernels):
         t0 = time.time()
         mod.run()
         print(f"# {mod.__name__} done in {time.time() - t0:.1f}s", file=sys.stderr)

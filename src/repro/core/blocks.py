@@ -32,7 +32,15 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["BlockEdges", "build_stripes", "DenseRegion"]
+__all__ = [
+    "BlockEdges",
+    "build_stripes",
+    "DenseRegion",
+    "EllStripe",
+    "stripe_to_ell",
+    "stack_ells",
+    "materialize_dense_matrix",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +162,157 @@ def structural_partial_nnz(
     pair = uniq // (int(seg_local.max(initial=0)) + 1)
     counts = np.bincount(pair, minlength=b * b)
     return counts.reshape(b, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class EllStripe:
+    """Destination-major ELL repack of a :class:`BlockEdges` stripe for the
+    Pallas kernels (backend='pallas'): each destination row stores up to D
+    source slots; col < 0 marks padding.
+
+    Two layouts, produced at pre-partition time (stripe_to_ell):
+
+    - per-block (vertical stripes): cols [b, n_local, D] — row r of table i
+      lists the v^(j)-local sources of destination r in sub-matrix M^(i,j);
+      the kernel runs one table per destination block (partials stay
+      separable for the compact exchange).
+    - merged (horizontal stripes): cols [n_local, D] — all b source blocks'
+      edges of destination r in ONE row, cols pre-offset to index the flat
+      gathered vector [b * stride]; the kernel's combineAll over D is then
+      also the cross-block combineAll, so one kernel call does the whole
+      per-worker compute.
+    """
+
+    cols: Any        # [(b,) n_local, D] int32; -1 = pad
+    w: Any | None    # matching weights, or None when the spec never reads them
+
+    @property
+    def d_cap(self) -> int:
+        return self.cols.shape[-1]
+
+
+jax.tree_util.register_dataclass(
+    EllStripe,
+    data_fields=["cols", "w"],
+    meta_fields=[],
+)
+
+
+def _pack_ell(dst, src, w, n_rows: int, d_cap: int | None = None):
+    """Edge arrays -> (cols [n_rows, D], w [n_rows, D]); the kernel package's
+    vectorized packer (kernels do not import core, so no cycle)."""
+    from repro.kernels.ell_spmv import ell_from_edges
+
+    return ell_from_edges(dst, src, w, n_rows, d_cap=d_cap)
+
+
+def stripe_to_ell(
+    stripe: BlockEdges,
+    n_rows: int,
+    *,
+    merge_col_stride: int | None = None,
+    d_cap: int | None = None,
+) -> EllStripe:
+    """Repack a padded edge-block stripe into ELL neighbor tables.
+
+    merge_col_stride=None: per-block tables [b, n_local, D] (cols are the
+    block-local gather indices, as stored).  merge_col_stride=s: one merged
+    table [n_local, D] whose cols are flattened to block_k * s + gat_local —
+    the layout ``gathered_gimv``'s flat all-gathered vector wants.
+    """
+    b, _ = stripe.seg_local.shape
+    counts = np.asarray(stripe.count)
+    seg = np.asarray(stripe.seg_local)
+    gat = np.asarray(stripe.gat_local)
+    has_w = stripe.w is not None
+    www = np.asarray(stripe.w) if has_w else None
+
+    def block_edges(k):
+        cnt = int(counts[k])
+        return seg[k, :cnt], gat[k, :cnt], (www[k, :cnt] if has_w else None)
+
+    if merge_col_stride is not None:
+        dsts, srcs, ws = [], [], []
+        for k in range(b):
+            d_k, s_k, w_k = block_edges(k)
+            dsts.append(d_k)
+            srcs.append(s_k.astype(np.int64) + k * merge_col_stride)
+            if has_w:
+                ws.append(w_k)
+        cols, ww = _pack_ell(
+            np.concatenate(dsts) if dsts else np.zeros(0, np.int64),
+            np.concatenate(srcs) if srcs else np.zeros(0, np.int64),
+            np.concatenate(ws) if has_w else None,
+            n_rows, d_cap)
+        return EllStripe(cols=cols, w=ww)
+
+    if d_cap is None:
+        d_cap = 1
+        for k in range(b):
+            cnt = int(counts[k])
+            if cnt:
+                deg = np.bincount(seg[k, :cnt], minlength=n_rows)
+                d_cap = max(d_cap, int(deg.max()))
+    tables = [_pack_ell(*block_edges(k), n_rows, d_cap) for k in range(b)]
+    cols = np.stack([t[0] for t in tables])
+    ww = np.stack([t[1] for t in tables]) if has_w else None
+    return EllStripe(cols=cols, w=ww)
+
+
+def stack_ells(ells: list[EllStripe]) -> EllStripe:
+    """b per-worker ELL tables -> one stripe with a leading worker axis,
+    padded to the max neighbor-table width across workers."""
+    d = max(e.d_cap for e in ells)
+
+    def pad(e: EllStripe):
+        extra = d - e.d_cap
+        cols = np.pad(e.cols, [(0, 0)] * (e.cols.ndim - 1) + [(0, extra)],
+                      constant_values=-1)
+        w = None if e.w is None else np.pad(
+            e.w, [(0, 0)] * (e.w.ndim - 1) + [(0, extra)])
+        return cols, w
+
+    padded = [pad(e) for e in ells]
+    cols = np.stack([c for c, _ in padded])
+    w = None if ells[0].w is None else np.stack([w_ for _, w_ in padded])
+    return EllStripe(cols=cols, w=w)
+
+
+def materialize_dense_matrix(
+    stripe: BlockEdges, n_local: int, d_cap: int, semiring: str
+) -> np.ndarray:
+    """Dense-region horizontal stripe -> an actual [n_local, b * d_cap] dense
+    matrix for the MXU kernels (dense_gimv / dense_gimv_multi).
+
+    Column jj * d_cap + slot holds the combine2 weight of the edge from dense
+    slot ``slot`` of block jj; absent entries hold the semiring's padding
+    value (0 / +-inf / presence 0) so they are no-ops under combineAll.
+    Parallel edges fold with the semiring's own combine (sum / min / max /
+    presence), matching what segment_combine does on the edge list.
+    """
+    b, _ = stripe.seg_local.shape
+    counts = np.asarray(stripe.count)
+    if semiring == "plus_times":
+        fill, fold = 0.0, np.add
+    elif semiring == "min_plus":
+        fill, fold = np.inf, np.minimum
+    elif semiring == "max_plus":
+        fill, fold = -np.inf, np.maximum
+    else:  # min_src: presence matrix
+        fill, fold = 0.0, np.maximum
+    m = np.full((n_local, b * d_cap), fill, dtype=np.float32)
+    for jj in range(b):
+        cnt = int(counts[jj])
+        if not cnt:
+            continue
+        rows = np.asarray(stripe.seg_local[jj, :cnt])
+        cols = jj * d_cap + np.asarray(stripe.gat_local[jj, :cnt]).astype(np.int64)
+        if stripe.w is not None and semiring != "min_src":
+            vals = np.asarray(stripe.w[jj, :cnt], dtype=np.float32)
+        else:
+            vals = np.ones(cnt, dtype=np.float32)
+        fold.at(m, (rows, cols), vals)
+    return m
 
 
 @dataclasses.dataclass(frozen=True)

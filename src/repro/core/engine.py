@@ -24,8 +24,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import blocks as blocks_lib
 from repro.core import cost_model, placement
 from repro.core.blocks import BlockEdges, DenseRegion
+from repro.kernels.block_gimv import has_semiring, semiring_of
 from repro.core.gimv import GimvSpec
 from repro.core.partition import HybridMatrix, Partition, PartitionedMatrix, partition_graph
 from repro.graph.generators import symmetrize_edges
@@ -40,6 +42,8 @@ class StepConfig:
     exchange: str = "sparse"  # vertical transport: 'sparse' | 'dense' | 'hier'
     capacity: int | None = None
     payload_dtype: str | None = None  # e.g. 'bfloat16' wire values (§Perf)
+    backend: str = "xla"     # per-worker compute: 'xla' | 'pallas' (kernels/)
+    interpret: bool = False  # Pallas interpret mode (CPU hosts / debugging)
 
 
 def _stack_stripes(stripes: list[BlockEdges]) -> BlockEdges:
@@ -59,18 +63,22 @@ def placement_call(spec: GimvSpec, cfg: StepConfig, matrix, v, ctx, mask, axis):
     n_local = cfg.n_local
     if cfg.strategy == "horizontal":
         return placement.horizontal_step(
-            spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis)
+            spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis,
+            ell=matrix.get("ell"), backend=cfg.backend, interpret=cfg.interpret)
     if cfg.strategy == "vertical":
         pd = jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
         return placement.vertical_step(
             spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis,
-            exchange=cfg.exchange, capacity=cfg.capacity, payload_dtype=pd)
+            exchange=cfg.exchange, capacity=cfg.capacity, payload_dtype=pd,
+            ell=matrix.get("ell"), backend=cfg.backend, interpret=cfg.interpret)
     if cfg.strategy == "hybrid":
         pd = jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
         return placement.hybrid_step(
             spec, matrix["sparse_stripe"], matrix["dense_stripe"], matrix["dense_region"],
             v, ctx, mask, n_local=n_local, axis_name=axis, capacity=cfg.capacity,
-            payload_dtype=pd)
+            payload_dtype=pd, sparse_ell=matrix.get("sparse_ell"),
+            dense_matrix=matrix.get("dense_matrix"), backend=cfg.backend,
+            interpret=cfg.interpret)
     raise ValueError(cfg.strategy)
 
 
@@ -146,6 +154,14 @@ class PMVEngine:
       with the dense exchange for that run).
     payload_dtype: wire dtype for the sparse-exchange values (e.g.
       'bfloat16' — §Perf); accumulation stays in the spec dtype.
+    backend: 'xla' (generic gather/segment lowering) | 'pallas' (per-worker
+      block compute through the ELL / dense-region kernels; stripes are
+      additionally packed to ELL at pre-partition time and the hybrid dense
+      region is materialized as a [n_local, b*d_cap] matrix).  Specs whose
+      (combine2, combineAll) pair has no kernel semiring fall back to 'xla'
+      (recorded in meta['backend']).
+    pallas_interpret: force the kernels' interpret mode; default None runs
+      interpret on non-TPU hosts and compiled kernels on TPU.
     """
 
     def __init__(
@@ -161,11 +177,14 @@ class PMVEngine:
         capacity: str = "structural",
         slack: float = 1.5,
         payload_dtype: str | None = None,
+        backend: str = "xla",
+        pallas_interpret: bool | None = None,
         symmetrize: bool = False,
         base_weights: np.ndarray | None = None,
         mesh: Mesh | None = None,
         axis_name: str = "workers",
     ):
+        assert backend in ("xla", "pallas"), backend
         if symmetrize:
             edges = symmetrize_edges(edges)
         self.edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
@@ -178,6 +197,8 @@ class PMVEngine:
         self.capacity_mode = capacity
         self.slack = slack
         self.payload_dtype = payload_dtype
+        self.backend = backend
+        self.pallas_interpret = pallas_interpret
         self.base_weights = base_weights
         self.mesh = mesh
         self.axis_name = axis_name
@@ -241,12 +262,25 @@ class PMVEngine:
         )
         part = pm.part
 
+        backend = self._resolve_backend(spec)
+        interpret = (jax.default_backend() != "tpu"
+                     if self.pallas_interpret is None else self.pallas_interpret)
+
         if strategy == "horizontal":
             matrix = {"stripe": _stack_stripes(pm.horizontal)}
             capacity = None
+            if backend == "pallas":
+                # merged ELL: cols pre-offset into the flat gathered vector
+                matrix["ell"] = blocks_lib.stack_ells([
+                    blocks_lib.stripe_to_ell(s, part.n_local, merge_col_stride=part.n_local)
+                    for s in pm.horizontal])
         elif strategy == "vertical":
             matrix = {"stripe": _stack_stripes(pm.vertical)}
             capacity = self._capacity(pm, None)
+            if backend == "pallas":
+                # per-destination-block ELL for the streamed compact scan
+                matrix["ell"] = blocks_lib.stack_ells([
+                    blocks_lib.stripe_to_ell(s, part.n_local) for s in pm.vertical])
         else:
             assert hm is not None
             matrix = {
@@ -260,12 +294,21 @@ class PMVEngine:
                 ),
             }
             capacity = self._capacity(pm, hm)
+            if backend == "pallas":
+                semiring = semiring_of(spec.combine2, spec.combine_all)
+                matrix["sparse_ell"] = blocks_lib.stack_ells([
+                    blocks_lib.stripe_to_ell(s, part.n_local) for s in hm.sparse_vertical])
+                matrix["dense_matrix"] = np.stack([
+                    blocks_lib.materialize_dense_matrix(
+                        s, part.n_local, hm.dense.d_cap, semiring)
+                    for s in hm.dense_horizontal])
 
         real_mask = part.global_ids_grid() < self.n
 
         cfg = StepConfig(strategy=strategy, n_local=part.n_local,
                          exchange=self.exchange, capacity=capacity,
-                         payload_dtype=self.payload_dtype)
+                         payload_dtype=self.payload_dtype,
+                         backend=backend, interpret=interpret)
         step = make_step(spec, cfg, self.mesh, self.axis_name)
         donate = (1,)
         step_jit = jax.jit(step, donate_argnums=donate)
@@ -280,10 +323,16 @@ class PMVEngine:
 
         meta = {
             "strategy": strategy, "theta": theta, "capacity": capacity,
-            "part": part, "pm": pm, "hm": hm, "cfg": cfg,
+            "part": part, "pm": pm, "hm": hm, "cfg": cfg, "backend": backend,
             "n_dense": int(hm.dense.d_count.sum()) if hm is not None else 0,
         }
         return step_jit, matrix, real_mask_dev, meta
+
+    def _resolve_backend(self, spec: GimvSpec) -> str:
+        """'pallas' only when the spec's semiring has a kernel; else 'xla'."""
+        if self.backend == "pallas" and not has_semiring(spec.combine2, spec.combine_all):
+            return "xla"
+        return self.backend
 
     def _capacity(self, pm: PartitionedMatrix, hm: HybridMatrix | None) -> int:
         if self.capacity_mode == "structural":
@@ -331,7 +380,7 @@ class PMVEngine:
             per_iter.append(rec)
             v = v_new
             if rec.get("overflow", 0.0) > 0:
-                fb = self._fallback_overrides(meta["strategy"]) if _allow_fallback else None
+                fb = self.fallback_overrides(meta["strategy"]) if _allow_fallback else None
                 if fb is not None:
                     label, overrides = fb
                     result = self._fallback_engine(meta, overrides).run(
@@ -368,12 +417,13 @@ class PMVEngine:
         )
 
 
-    def _fallback_overrides(self, strategy: str) -> tuple[str, dict] | None:
+    def fallback_overrides(self, strategy: str) -> tuple[str, dict] | None:
         """Overflow recovery (optimistic execution, sparse_exchange.py): the
         model capacity truncated a partial, so retry once with an
         overflow-free configuration.  vertical -> dense exchange (the
         documented fallback); hybrid -> structural capacity (its compact
-        exchange has no dense variant)."""
+        exchange has no dense variant).  Public: repro.serving uses the same
+        table for its requeue-on-overflow path."""
         if strategy == "vertical" and self.exchange != "dense":
             return "dense", {"exchange": "dense"}
         if strategy == "hybrid" and self.capacity_mode != "structural":
@@ -384,7 +434,8 @@ class PMVEngine:
         kwargs = dict(
             b=self.b, strategy=meta["strategy"], theta=meta["theta"], psi=self.psi,
             exchange=self.exchange, capacity=self.capacity_mode, slack=self.slack,
-            payload_dtype=self.payload_dtype, base_weights=self.base_weights,
+            payload_dtype=self.payload_dtype, backend=self.backend,
+            pallas_interpret=self.pallas_interpret, base_weights=self.base_weights,
             mesh=self.mesh, axis_name=self.axis_name,
         )
         kwargs.update(overrides)

@@ -19,6 +19,15 @@ Mapping to the paper:
 - PMV_hybrid     (Alg. 4): sparse region runs vertical with the compact
   exchange; the dense region's sub-vector v_d is small by construction
   (high-out-degree vertices only), so it is all-gathered (horizontal).
+
+Kernel backends (StepConfig.backend):
+- 'xla' (default): the generic gather + segment-combine lowering below.
+- 'pallas': per-worker block compute runs the validated Pallas kernels —
+  sparse stripes through the ELL semiring kernel (kernels/ell_spmv, packed
+  at pre-partition time, blocks.stripe_to_ell), the hybrid dense region
+  through the MXU/VPU dense kernel (kernels/block_gimv) on the materialized
+  [n_local, b*d_cap] matrix.  Collectives, compaction and assign are shared
+  with the xla path, so both backends are interchangeable per step.
 """
 from __future__ import annotations
 
@@ -30,8 +39,10 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import sparse_exchange
-from repro.core.blocks import BlockEdges, DenseRegion
+from repro.core.blocks import BlockEdges, DenseRegion, EllStripe
 from repro.core.gimv import GimvSpec, combine2, combine_elementwise, segment_combine
+from repro.kernels.block_gimv import dense_gimv, dense_gimv_multi, semiring_of
+from repro.kernels.ell_spmv import ell_gimv, ell_gimv_multi
 
 __all__ = [
     "horizontal_step",
@@ -39,6 +50,7 @@ __all__ = [
     "hybrid_step",
     "block_gimv_partials",
     "gathered_gimv",
+    "ell_gimv_call",
 ]
 
 
@@ -173,6 +185,132 @@ def gathered_gimv(spec: GimvSpec, stripe: BlockEdges, v_all: jnp.ndarray, n_loca
     return jnp.max(contribs, axis=0)
 
 
+# --------------------------------------------------------------------------
+# Pallas-backend per-worker compute (backend='pallas').  The collectives,
+# compaction and assign stay shared with the xla path above.
+# --------------------------------------------------------------------------
+
+def ell_gimv_call(spec: GimvSpec, cols, w, v, interpret: bool):
+    """Dispatch one ELL table to the (multi-)query semiring kernel.
+
+    cols/w: [R, D]; v: [N] or [N, Q] -> r: [R] or [R, Q]."""
+    semiring = semiring_of(spec.combine2, spec.combine_all)
+    if not spec.needs_weights:
+        w = None
+    if v.ndim == 2:
+        return ell_gimv_multi(cols, w, v, semiring=semiring, interpret=interpret)
+    return ell_gimv(cols, w, v, semiring=semiring, interpret=interpret)
+
+
+def _ell_gathered_gimv(spec: GimvSpec, ell: EllStripe, v_local, n_local: int,
+                       axis_name, interpret: bool):
+    """Pallas analog of the horizontal compute: one merged ELL table per
+    worker (cols pre-offset into the flat gathered vector), one kernel call.
+
+    Emulation mode folds the worker axis into the row axis — the merged cols
+    already index the flat blocked vector, which IS v_local.reshape(b * n_local).
+    Returns r [n_local(, Q)] (emulation: [b, n_local(, Q)])."""
+    if axis_name is None:
+        b = v_local.shape[0]
+        v_flat = v_local.reshape((b * n_local,) + v_local.shape[2:])
+        cols = ell.cols.reshape((-1,) + ell.cols.shape[-1:])
+        w = None if ell.w is None else ell.w.reshape(cols.shape)
+        r_flat = ell_gimv_call(spec, cols, w, v_flat, interpret)
+        return r_flat.reshape((b, n_local) + r_flat.shape[1:])
+    v_all = _all_gather(v_local, axis_name)          # [b, n_local(, Q)]
+    v_flat = v_all.reshape((-1,) + v_all.shape[2:])  # [b*n_local(, Q)]
+    return ell_gimv_call(spec, ell.cols, ell.w, v_flat, interpret)
+
+
+def _ell_block_partials(spec: GimvSpec, ell: EllStripe, v_local, n_local: int,
+                        axis_name, interpret: bool):
+    """Pallas analog of block_gimv_partials: all b destination-block partials
+    in one flattened kernel call.  Emulation folds the worker axis in by
+    offsetting cols into the flat per-worker vector.  Returns partials
+    [b, n_local(, Q)] (emulation: [b_worker, b, n_local(, Q)])."""
+    if axis_name is None:
+        b_w, b = ell.cols.shape[0], ell.cols.shape[1]
+        off = (jnp.arange(b_w, dtype=jnp.int32) * n_local)[:, None, None, None]
+        cols = jnp.where(ell.cols >= 0, ell.cols + off, -1)
+        cols2 = cols.reshape(b_w * b * n_local, -1)
+        w2 = None if ell.w is None else ell.w.reshape(cols2.shape)
+        v_flat = v_local.reshape((b_w * n_local,) + v_local.shape[2:])
+        r = ell_gimv_call(spec, cols2, w2, v_flat, interpret)
+        return r.reshape((b_w, b, n_local) + r.shape[1:])
+    b = ell.cols.shape[0]
+    cols2 = ell.cols.reshape(b * n_local, -1)
+    w2 = None if ell.w is None else ell.w.reshape(cols2.shape)
+    r = ell_gimv_call(spec, cols2, w2, v_local, interpret)
+    return r.reshape((b, n_local) + r.shape[1:])
+
+
+def _ell_partials_compact(spec: GimvSpec, ell: EllStripe, v_local, n_local: int,
+                          capacity: int, axis_name, interpret: bool):
+    """Pallas analog of block_gimv_partials_compact: scan destination blocks,
+    ELL kernel per block, immediate compaction — same O(n_local + b*cap) live
+    memory as the xla streaming path.  Handles the emulation worker axis
+    internally (cols offset into the flat vector), so callers never vmap a
+    pallas_call.  Returns (idx, val, overflow, logical_elems)."""
+    emulation = axis_name is None
+    batched = v_local.ndim == (3 if emulation else 2)
+    if emulation:
+        b_w = ell.cols.shape[0]
+        off = (jnp.arange(b_w, dtype=jnp.int32) * n_local)[:, None, None]
+        v_flat = v_local.reshape((b_w * n_local,) + v_local.shape[2:])
+        cols_s = jnp.swapaxes(ell.cols, 0, 1)    # [b, b_w, n_local, D]
+        w_s = None if ell.w is None else jnp.swapaxes(ell.w, 0, 1)
+
+        def body(_, blk):
+            cols, w = blk                        # [b_w, n_local, D]
+            cols = jnp.where(cols >= 0, cols + off, -1)
+            cols2 = cols.reshape(b_w * n_local, -1)
+            w2 = None if w is None else w.reshape(cols2.shape)
+            r = ell_gimv_call(spec, cols2, w2, v_flat, interpret)
+            partial_ = r.reshape((b_w, n_local) + r.shape[1:])
+            return None, sparse_exchange.compact_partials(
+                spec, partial_, capacity, None, batched=batched)
+
+        _, (idx, val, over, logical) = lax.scan(body, None, (cols_s, w_s))
+        idx = jnp.swapaxes(idx, 0, 1)            # -> [b_w, b, cap]
+        val = jnp.swapaxes(val, 0, 1)
+        return idx, val, jnp.sum(over), jnp.sum(logical)
+
+    def body(_, blk):
+        cols, w = blk                            # [n_local, D]
+        r = ell_gimv_call(spec, cols, w, v_local, interpret)
+        return None, sparse_exchange.compact_partials(
+            spec, r, capacity, None, batched=batched)
+
+    _, (idx, val, over, logical) = lax.scan(body, None, (ell.cols, ell.w))
+    return idx, val, jnp.sum(over), jnp.sum(logical)
+
+
+def _dense_region_gimv(spec: GimvSpec, dense_matrix, v_d, n_local: int,
+                       axis_name, interpret: bool):
+    """Pallas dense-region compute: the materialized [n_local, b*d_cap]
+    matrix against the flat gathered dense sub-vector, on the MXU
+    (plus_times) / VPU (tropical) kernels.  v_d: per-worker [b, d_cap(, Q)]
+    in emulation (the full blocked dense vector), [d_cap(, Q)] in SPMD
+    (all-gathered inside).  Returns r_dense [n_local(, Q)] (emulation:
+    [b_worker, n_local(, Q)])."""
+    semiring = semiring_of(spec.combine2, spec.combine_all)
+    if axis_name is None:
+        b_w = dense_matrix.shape[0]
+        k = dense_matrix.shape[-1]
+        dm2 = dense_matrix.reshape(b_w * n_local, k)
+        v_flat = v_d.reshape((k,) + v_d.shape[2:])
+        if v_flat.ndim == 2:
+            r = dense_gimv_multi(dm2, v_flat, semiring=semiring, interpret=interpret)
+        else:
+            r = dense_gimv(dm2, v_flat, semiring=semiring, interpret=interpret)
+        return r.reshape((b_w, n_local) + r.shape[1:])
+    v_d_all = _all_gather(v_d, axis_name)            # [b, d_cap(, Q)]
+    v_flat = v_d_all.reshape((-1,) + v_d_all.shape[2:])
+    if v_flat.ndim == 2:
+        return dense_gimv_multi(dense_matrix, v_flat, semiring=semiring, interpret=interpret)
+    return dense_gimv(dense_matrix, v_flat, semiring=semiring, interpret=interpret)
+
+
 def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name):
     """Two-hop topology-aware exchange (beyond-paper, DESIGN §6 / §Perf).
 
@@ -187,20 +325,27 @@ def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name):
     rows over the pod axis, then the final combine.
 
     Inter-pod volume drops from W*cap*(idx+val) to n_local values: ~12x at
-    ClueWeb12 scale (see EXPERIMENTS §Perf).  Returns (r [n_local], stats).
+    ClueWeb12 scale (see EXPERIMENTS §Perf).  Returns (r [n_local(, Q)],
+    stats).
+
+    A trailing query axis on ``val`` ([b, cap, Q] riding one shared index set
+    per partial row, the serving wire format) is carried through both hops:
+    hop 1 ships Q values per shipped index, hop 2 ships the combined
+    [n_local, Q] rows.
     """
     pod_axis, inner = axis_name[0], tuple(axis_name[1:])
     n_pods = lax.psum(1, pod_axis)
     w_size = lax.psum(1, inner)
     cap = idx.shape[-1]
+    nq = val.shape[-1] if val.ndim == idx.ndim + 1 else None
     idx3 = idx.reshape(n_pods, w_size, cap)
-    val3 = val.reshape(n_pods, w_size, cap)
+    val3 = val.reshape((n_pods, w_size, cap) + (() if nq is None else (nq,)))
     # hop 1: split the intra-pod destination axis, gather per-source rows
     idx_r = lax.all_to_all(idx3, inner, split_axis=1, concat_axis=1, tiled=True)
     val_r = lax.all_to_all(val3, inner, split_axis=1, concat_axis=1, tiled=True)
     # combine the W intra-pod partials per destination pod
     per_pod = jax.vmap(lambda i, v: sparse_exchange.scatter_partials(
-        spec, i, v.astype(spec.dtype), n_local))(idx_r, val_r)   # [P, n_local]
+        spec, i, v.astype(spec.dtype), n_local))(idx_r, val_r)   # [P, n_local(, Q)]
     # hop 2: cross-pod exchange of the combined dense rows
     received = lax.all_to_all(per_pod, pod_axis, split_axis=0, concat_axis=0)
     if spec.combine_all == "sum":
@@ -209,11 +354,11 @@ def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name):
         r = jnp.min(received, axis=0)
     else:
         r = jnp.max(received, axis=0)
-    stats = {  # GLOBAL elements per iteration
+    stats = {  # GLOBAL elements per iteration; idx word + (1 or Q) value words
         "intra_pod_elems": jnp.asarray(
-            float(n_pods) ** 2 * w_size * (w_size - 1) * cap * 2, jnp.float32),
+            float(n_pods) ** 2 * w_size * (w_size - 1) * cap * (1 + (nq or 1)), jnp.float32),
         "inter_pod_elems": jnp.asarray(
-            float(n_pods) * (n_pods - 1) * w_size * n_local, jnp.float32),
+            float(n_pods) * (n_pods - 1) * w_size * n_local * (nq or 1), jnp.float32),
     }
     return r, stats
 
@@ -239,17 +384,26 @@ def _num_queries(v_local, axis_name) -> int | None:
     return v_local.shape[-1] if v_local.ndim == expected + 1 else None
 
 
-def horizontal_step(spec: GimvSpec, stripe: BlockEdges, v_local, ctx_local, real_mask, *, n_local: int, axis_name):
+def horizontal_step(spec: GimvSpec, stripe: BlockEdges, v_local, ctx_local, real_mask, *,
+                    n_local: int, axis_name, ell: EllStripe | None = None,
+                    backend: str = "xla", interpret: bool = False):
     """Alg. 1: gather the whole vector, compute row stripe locally."""
     nq = _num_queries(v_local, axis_name)
-    v_all = _all_gather(v_local, axis_name)  # [b, n_local(, Q)]
+    if backend == "pallas" and ell is not None:
+        r = _ell_gathered_gimv(spec, ell, v_local, n_local, axis_name, interpret)
+        if axis_name is not None:
+            v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
+        else:
+            v_new = jax.vmap(partial(_apply_assign, spec))(v_local, r, ctx_local, real_mask)
+    else:
+        v_all = _all_gather(v_local, axis_name)  # [b, n_local(, Q)]
 
-    def compute(stripe_, v_all_, v_local_, ctx_, mask_):
-        r = gathered_gimv(spec, stripe_, v_all_, n_local)
-        return _apply_assign(spec, v_local_, r, ctx_, mask_), r
+        def compute(stripe_, v_all_, v_local_, ctx_, mask_):
+            r_ = gathered_gimv(spec, stripe_, v_all_, n_local)
+            return _apply_assign(spec, v_local_, r_, ctx_, mask_), r_
 
-    fn = compute if axis_name is not None else jax.vmap(compute)
-    v_new, r = fn(stripe, v_all, v_local, ctx_local, real_mask)
+        fn = compute if axis_name is not None else jax.vmap(compute)
+        v_new, r = fn(stripe, v_all, v_local, ctx_local, real_mask)
     b = stripe.count.shape[-1]
     stats = {  # GLOBAL elements per iteration (all workers)
         "gathered_elems": jnp.asarray(b * (b - 1) * n_local * (nq or 1), jnp.float32),
@@ -270,6 +424,9 @@ def vertical_step(
     exchange: str = "sparse",
     capacity: int | None = None,
     payload_dtype=None,
+    ell: EllStripe | None = None,
+    backend: str = "xla",
+    interpret: bool = False,
 ):
     """Alg. 2: local column-stripe partials, exchange, combine at the owner.
 
@@ -278,16 +435,21 @@ def vertical_step(
     static ``capacity`` first — the paper's "only non-empty v^(i,j) entries
     hit the distributed storage".  exchange='hier': sparse hop within the
     pod + combined dense hop across pods (needs a tuple axis_name whose
-    first element is the pod axis; SPMD only).
+    first element is the pod axis; SPMD only).  A trailing query axis on
+    v_local batches all exchanges (hier ships [cap, Q] values on one shared
+    index set per hop, like the flat sparse exchange).
     """
     nq = _num_queries(v_local, axis_name)
+    use_pallas = backend == "pallas" and ell is not None
     if exchange == "hier":
         assert axis_name is not None and isinstance(axis_name, tuple) and len(axis_name) >= 2
         assert capacity is not None
-        if nq is not None:
-            raise NotImplementedError("hierarchical exchange is single-query only")
-        compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
-        idx, val, overflow, logical = compact(stripe, v_local)
+        if use_pallas:
+            idx, val, overflow, logical = _ell_partials_compact(
+                spec, ell, v_local, n_local, capacity, axis_name, interpret)
+        else:
+            compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
+            idx, val, overflow, logical = compact(stripe, v_local)
         if payload_dtype is not None:
             val = val.astype(payload_dtype)
         overflow = lax.psum(overflow, axis_name)
@@ -303,9 +465,12 @@ def vertical_step(
         }
         return v_new, r, stats
     if exchange == "dense":
-        compute = partial(block_gimv_partials, spec, n_local=n_local)
-        fn = compute if axis_name is not None else jax.vmap(lambda s, v: compute(s, v))
-        partials = fn(stripe, v_local)  # [b, n_local(, Q)] per worker
+        if use_pallas:
+            partials = _ell_block_partials(spec, ell, v_local, n_local, axis_name, interpret)
+        else:
+            compute = partial(block_gimv_partials, spec, n_local=n_local)
+            fn = compute if axis_name is not None else jax.vmap(lambda s, v: compute(s, v))
+            partials = fn(stripe, v_local)  # [b, n_local(, Q)] per worker
         received = _all_to_all(partials, axis_name)  # [b, n_local(, Q)]
         reduce_axis = -2 if nq is None else -3
 
@@ -326,9 +491,13 @@ def vertical_step(
         }
     else:
         assert capacity is not None, "sparse exchange needs a static capacity"
-        compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
-        fn_c = compact if axis_name is not None else jax.vmap(lambda s, v: compact(s, v))
-        idx, val, overflow, logical = fn_c(stripe, v_local)
+        if use_pallas:
+            idx, val, overflow, logical = _ell_partials_compact(
+                spec, ell, v_local, n_local, capacity, axis_name, interpret)
+        else:
+            compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
+            fn_c = compact if axis_name is not None else jax.vmap(lambda s, v: compact(s, v))
+            idx, val, overflow, logical = fn_c(stripe, v_local)
         if payload_dtype is not None:
             val = val.astype(payload_dtype)  # wire format (§Perf); f32 accumulate
         if axis_name is not None:
@@ -373,29 +542,49 @@ def hybrid_step(
     axis_name,
     capacity: int,
     payload_dtype=None,
+    sparse_ell: EllStripe | None = None,
+    dense_matrix=None,
+    backend: str = "xla",
+    interpret: bool = False,
 ):
     """Alg. 4: vertical over the sparse region + horizontal over the dense
     region, combined at the owner, then assign.
 
     The dense sub-vector v_d is the compacted gather of high-out-degree
     entries: [d_cap] per worker -> all_gather -> [b, d_cap]; its edges index
-    it with (block, slot) pairs.
+    it with (block, slot) pairs.  backend='pallas' runs the sparse region
+    through the ELL kernel and the dense region as a semiring matmul against
+    the materialized ``dense_matrix`` [n_local, b*d_cap].
     """
     # -- dense region: extract + all_gather the (small) dense sub-vector.
     # gather_idx is per-worker in SPMD ([d_cap]) / [b, d_cap] in emulation.
     nq = _num_queries(v_local, axis_name)
+    use_pallas = backend == "pallas" and sparse_ell is not None and dense_matrix is not None
     if axis_name is not None:
         v_d = v_local[dense_region.gather_idx]  # [d_cap(, Q)]
     elif nq is not None:
         v_d = jnp.take_along_axis(v_local, dense_region.gather_idx[:, :, None], axis=1)
     else:
         v_d = jnp.take_along_axis(v_local, dense_region.gather_idx, axis=1)
-    v_d_all = _all_gather(v_d, axis_name)  # [b, d_cap(, Q)]
+
+    if use_pallas:
+        r_dense = _dense_region_gimv(spec, dense_matrix, v_d, n_local, axis_name, interpret)
+    else:
+        v_d_all = _all_gather(v_d, axis_name)  # [b, d_cap(, Q)]
+        if axis_name is not None:
+            r_dense = gathered_gimv(spec, dense_stripe, v_d_all, n_local)
+        else:
+            r_dense = jax.vmap(lambda s, va: gathered_gimv(spec, s, va, n_local))(
+                dense_stripe, v_d_all)
 
     # -- sparse region: streamed vertical partials + compact exchange.
-    compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
-    fn_c = compact if axis_name is not None else jax.vmap(lambda s, v: compact(s, v))
-    idx, val, overflow, logical = fn_c(sparse_stripe, v_local)
+    if use_pallas:
+        idx, val, overflow, logical = _ell_partials_compact(
+            spec, sparse_ell, v_local, n_local, capacity, axis_name, interpret)
+    else:
+        compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
+        fn_c = compact if axis_name is not None else jax.vmap(lambda s, v: compact(s, v))
+        idx, val, overflow, logical = fn_c(sparse_stripe, v_local)
     if payload_dtype is not None:
         val = val.astype(payload_dtype)  # wire format (§Perf); accumulate in spec dtype
     if axis_name is not None:
@@ -406,17 +595,16 @@ def hybrid_step(
     idx_x = _all_to_all(idx, axis_name)
     val_x = _all_to_all(val, axis_name)
 
-    def owner_combine(idx_r, val_r, dense_stripe_, v_d_all_, v_local_, ctx_, mask_):
+    def owner_combine(idx_r, val_r, r_dense_, v_local_, ctx_, mask_):
         r_sparse = sparse_exchange.scatter_partials(spec, idx_r, val_r.astype(spec.dtype), n_local)
-        r_dense = gathered_gimv(spec, dense_stripe_, v_d_all_, n_local)
-        r = combine_elementwise(spec, r_sparse, r_dense)
+        r = combine_elementwise(spec, r_sparse, r_dense_)
         v_new = _apply_assign(spec, v_local_, r, ctx_, mask_)
         return v_new, r
 
     if axis_name is not None:
-        v_new, r = owner_combine(idx_x, val_x, dense_stripe, v_d_all, v_local, ctx_local, real_mask)
+        v_new, r = owner_combine(idx_x, val_x, r_dense, v_local, ctx_local, real_mask)
     else:
-        v_new, r = jax.vmap(owner_combine)(idx_x, val_x, dense_stripe, v_d_all, v_local, ctx_local, real_mask)
+        v_new, r = jax.vmap(owner_combine)(idx_x, val_x, r_dense, v_local, ctx_local, real_mask)
 
     b = idx.shape[-2]
     d_cap = dense_region.d_cap

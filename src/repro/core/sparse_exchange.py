@@ -14,11 +14,21 @@ so we compact each partial row [n_local] into (idx, val) pairs of a static
   caller can detect truncation and fall back to the dense exchange (optimistic
   execution, like MoE capacity-factor dispatch).
 
-Compaction = top_k on a "first-valid" score: O(n log k) per row, fully
-batched; the inverse (scatter_partials) is a segment-combine with a drop
-bucket at index n_local.
+Compaction methods (both keep the first ``capacity`` valid entries of each
+row in ascending index order, so their outputs are bitwise identical):
+
+- 'scan' (default): cumsum-prefix scatter — each valid entry computes its
+  output slot as (number of valid entries before it) and scatters itself
+  there, overflow going to a drop bucket.  O(n) work per row.
+- 'topk': lax.top_k on a "first-valid" score — O(n log k) per row; kept as
+  the pre-kernelization baseline for the fig10 compaction microbenchmark.
+
+The inverse (scatter_partials) is a segment-combine with a drop bucket at
+index n_local.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +37,8 @@ from jax import lax
 from repro.core.gimv import GimvSpec, segment_combine
 
 __all__ = ["compact_partials", "scatter_partials", "count_non_identity"]
+
+COMPACT_METHODS = ("scan", "topk")
 
 
 def _reduce_sum(x, axis_name):
@@ -39,7 +51,37 @@ def count_non_identity(spec: GimvSpec, partials: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum((partials != ident).astype(jnp.float32))
 
 
-def compact_partials(spec: GimvSpec, partials: jnp.ndarray, capacity: int, axis_name, *, batched: bool = False):
+def _compact_idx_topk(valid: jnp.ndarray, capacity: int, n_local: int) -> jnp.ndarray:
+    """First ``capacity`` valid indices per row via top_k on a score."""
+    arange = jnp.arange(n_local, dtype=jnp.int32)
+    # Score so that valid entries (in ascending index order) win top_k.
+    score = jnp.where(valid, n_local - arange, 0)
+    top_score, top_idx = lax.top_k(score, capacity)
+    return jnp.where(top_score > 0, top_idx.astype(jnp.int32), jnp.int32(n_local))
+
+
+def _compact_idx_scan(valid: jnp.ndarray, capacity: int, n_local: int) -> jnp.ndarray:
+    """First ``capacity`` valid indices per row via cumsum-prefix scatter.
+
+    Each valid entry's output slot is the count of valid entries strictly
+    before it; slots >= capacity land in a drop bucket that is sliced off.
+    O(n) per row vs top_k's O(n log k) — the dominant non-collective cost of
+    the vertical/hybrid step at large n_local.
+    """
+    lead = valid.shape[:-1]
+    rows = math.prod(lead) if lead else 1
+    pos = jnp.cumsum(valid.astype(jnp.int32), axis=-1) - 1
+    dest = jnp.where(valid & (pos < capacity), pos, capacity)  # cap = drop bucket
+    flat = (jnp.arange(rows, dtype=jnp.int32)[:, None] * (capacity + 1)
+            + dest.reshape(rows, n_local))
+    src = jnp.broadcast_to(jnp.arange(n_local, dtype=jnp.int32), (rows, n_local))
+    out = jnp.full((rows * (capacity + 1),), jnp.int32(n_local))
+    out = out.at[flat.reshape(-1)].set(src.reshape(-1), mode="drop")
+    return out.reshape(rows, capacity + 1)[:, :capacity].reshape(lead + (capacity,))
+
+
+def compact_partials(spec: GimvSpec, partials: jnp.ndarray, capacity: int, axis_name, *,
+                     batched: bool = False, method: str = "scan"):
     """[..., b, n_local] -> idx [..., b, cap] int32, val [..., b, cap].
 
     idx == n_local marks padding.  Entries equal to the combineAll identity
@@ -54,7 +96,10 @@ def compact_partials(spec: GimvSpec, partials: jnp.ndarray, capacity: int, axis_
     shrink relative to the structural nnz, so the structural capacity remains
     overflow-free.  overflow counts rows (not row*query pairs); logical_elems
     counts value-level non-identity scalars across all queries.
+
+    method: 'scan' | 'topk' (bitwise-identical outputs, see module docs).
     """
+    assert method in COMPACT_METHODS, method
     ident = jnp.asarray(spec.identity, partials.dtype)
     valid_q = partials != ident
     if batched:
@@ -63,17 +108,17 @@ def compact_partials(spec: GimvSpec, partials: jnp.ndarray, capacity: int, axis_
         valid = valid_q
     n_local = valid.shape[-1]
     capacity = min(capacity, n_local)
-    arange = jnp.arange(n_local, dtype=jnp.int32)
-    # Score so that valid entries (in ascending index order) win top_k.
-    score = jnp.where(valid, n_local - arange, 0)
-    top_score, top_idx = lax.top_k(score, capacity)
-    taken = top_score > 0
-    idx = jnp.where(taken, top_idx.astype(jnp.int32), jnp.int32(n_local))
+    if method == "scan":
+        idx = _compact_idx_scan(valid, capacity, n_local)
+    else:
+        idx = _compact_idx_topk(valid, capacity, n_local)
+    taken = idx < n_local
+    safe = jnp.where(taken, idx, 0)
     if batched:
-        val = jnp.take_along_axis(partials, top_idx[..., None], axis=-2)
+        val = jnp.take_along_axis(partials, safe[..., None], axis=-2)
         val = jnp.where(taken[..., None], val, ident)
     else:
-        val = jnp.where(taken, jnp.take_along_axis(partials, top_idx, axis=-1), ident)
+        val = jnp.where(taken, jnp.take_along_axis(partials, safe, axis=-1), ident)
     counts = valid.sum(axis=-1)
     overflow = _reduce_sum(jnp.sum((counts > capacity).astype(jnp.float32)), axis_name)
     logical = _reduce_sum(jnp.sum(valid_q.astype(jnp.float32)), axis_name)

@@ -9,21 +9,28 @@ import numpy as np
 
 from repro.kernels.block_gimv.block_gimv import SEMIRINGS, dense_gimv_multi_pallas, dense_gimv_pallas
 
-__all__ = ["dense_gimv", "dense_gimv_multi", "semiring_of"]
+__all__ = ["dense_gimv", "dense_gimv_multi", "semiring_of", "has_semiring"]
+
+_SEMIRING_TABLE = {
+    ("mul", "sum"): "plus_times",
+    ("add", "min"): "min_plus",
+    ("add", "max"): "max_plus",
+    ("src", "min"): "min_src",
+}
 
 
 def semiring_of(combine2: str, combine_all: str) -> str:
     """Map a GimvSpec's (combine2, combineAll) to a kernel semiring id."""
-    table = {
-        ("mul", "sum"): "plus_times",
-        ("add", "min"): "min_plus",
-        ("add", "max"): "max_plus",
-        ("src", "min"): "min_src",
-    }
     key = (combine2, combine_all)
-    if key not in table:
-        raise ValueError(f"no dense kernel for {key}")
-    return table[key]
+    if key not in _SEMIRING_TABLE:
+        raise ValueError(f"no kernel semiring for {key}")
+    return _SEMIRING_TABLE[key]
+
+
+def has_semiring(combine2: str, combine_all: str) -> bool:
+    """Whether the (combine2, combineAll) pair has a Pallas kernel semiring
+    (the engine's backend='pallas' falls back to 'xla' when it does not)."""
+    return (combine2, combine_all) in _SEMIRING_TABLE
 
 
 def _pad_identity(semiring: str, dtype):

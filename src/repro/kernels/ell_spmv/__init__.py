@@ -1,4 +1,4 @@
-from repro.kernels.ell_spmv.ops import ell_gimv, ell_from_edges
-from repro.kernels.ell_spmv.ref import ell_gimv_ref
+from repro.kernels.ell_spmv.ops import ell_from_edges, ell_gimv, ell_gimv_multi
+from repro.kernels.ell_spmv.ref import ell_gimv_multi_ref, ell_gimv_ref
 
-__all__ = ["ell_gimv", "ell_gimv_ref", "ell_from_edges"]
+__all__ = ["ell_gimv", "ell_gimv_multi", "ell_gimv_multi_ref", "ell_gimv_ref", "ell_from_edges"]

@@ -93,3 +93,83 @@ def ell_gimv_pallas(
         interpret=interpret,
     )(cols, w, v[None, :])
     return out[:, 0]
+
+
+def _ell_gimv_multi_kernel(cols_ref, w_ref, v_ref, o_ref, *, semiring: str, has_w: bool):
+    """Multi-query tile: gather TQ query columns per neighbor slot.
+
+    The row gather v[cols] pulls whole (TQ-wide) rows of the query-stacked
+    sub-vector, so the wire layout (idx, val[Q]) of the serving subsystem maps
+    1:1 onto VMEM accesses; the (TR, TD, TQ) temporary bounds TQ (ops.py
+    defaults it to 8 so the f32 temporary stays ~512 KB).
+    """
+    d = pl.program_id(2)
+    cols = cols_ref[...]                        # (TR, TD) int32, <0 = pad
+    valid = cols >= 0
+    safe = jnp.where(valid, cols, 0)
+    vals = v_ref[...][safe]                     # (TR, TD, TQ) row gather
+    if semiring == "plus_times":
+        x = w_ref[...][:, :, None] * vals if has_w else vals
+    elif semiring in ("min_plus", "max_plus"):
+        x = w_ref[...][:, :, None] + vals if has_w else vals
+    else:  # min_src
+        x = vals
+    ident = _identity(semiring, o_ref.dtype)
+    x = jnp.where(valid[:, :, None], x.astype(o_ref.dtype), ident)
+    if semiring == "plus_times":
+        part = jnp.sum(x, axis=1)
+    elif semiring in ("min_plus", "min_src"):
+        part = jnp.min(x, axis=1)
+    else:
+        part = jnp.max(x, axis=1)
+
+    @pl.when(d == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(d != 0)
+    def _acc():
+        o_ref[...] = _combine_all(semiring, o_ref[...], part)
+
+
+def ell_gimv_multi_pallas(
+    cols: jnp.ndarray,
+    w: jnp.ndarray | None,
+    v: jnp.ndarray,
+    *,
+    semiring: str,
+    out_dtype=None,
+    tile_r: int = 128,
+    tile_d: int = 128,
+    tile_q: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """r[i, q] = combineAll_d combine2(w[i,d], v[cols[i,d], q]); pads skipped.
+
+    cols/w: [R, D]; v: [N, Q].  R % tile_r == D % tile_d == Q % tile_q == 0
+    (ops.py pads).  Grid = (row_tiles, query_tiles, deg_tiles) with the deg
+    axis innermost so the output tile accumulates in place.
+    """
+    assert semiring in SEMIRINGS
+    R, D = cols.shape
+    N, Q = v.shape
+    assert R % tile_r == 0 and D % tile_d == 0 and Q % tile_q == 0, (
+        R, D, Q, tile_r, tile_d, tile_q)
+    out_dtype = out_dtype or v.dtype
+    has_w = w is not None
+    if w is None:
+        w = jnp.zeros_like(cols, dtype=jnp.float32)  # placeholder, never read
+
+    grid = (R // tile_r, Q // tile_q, D // tile_d)
+    return pl.pallas_call(
+        functools.partial(_ell_gimv_multi_kernel, semiring=semiring, has_w=has_w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, tile_d), lambda i, q, d: (i, d)),
+            pl.BlockSpec((tile_r, tile_d), lambda i, q, d: (i, d)),
+            pl.BlockSpec((N, tile_q), lambda i, q, d: (0, q)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, tile_q), lambda i, q, d: (i, q)),
+        out_shape=jax.ShapeDtypeStruct((R, Q), out_dtype),
+        interpret=interpret,
+    )(cols, w, v)

@@ -7,24 +7,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ell_spmv.ell_spmv import ell_gimv_pallas
+from repro.kernels.ell_spmv.ell_spmv import ell_gimv_multi_pallas, ell_gimv_pallas
 
-__all__ = ["ell_gimv", "ell_from_edges"]
+__all__ = ["ell_gimv", "ell_gimv_multi", "ell_from_edges"]
 
 
-def ell_from_edges(dst: np.ndarray, src: np.ndarray, w: np.ndarray | None, n_rows: int):
-    """Edge list -> ELL (cols[r, D], w[r, D]); D = max in-degree, col<0 pads."""
+def ell_from_edges(dst: np.ndarray, src: np.ndarray, w: np.ndarray | None, n_rows: int,
+                   *, d_cap: int | None = None):
+    """Edge list -> ELL (cols[r, D], w[r, D]); D = max in-degree, col<0 pads.
+
+    Vectorized (lexsort + offset-from-row-start slots) so pre-partition-time
+    packing of web-scale stripes stays O(E log E), not a Python loop.  Slot
+    order within a row is edge submission order (stable sort).  ``d_cap``
+    forces a wider table (so stripes packed per worker can stack).
+    """
+    dst = np.asarray(dst, dtype=np.int64)
+    src = np.asarray(src, dtype=np.int64)
     deg = np.bincount(dst, minlength=n_rows)
     D = max(int(deg.max(initial=0)), 1)
+    if d_cap is not None:
+        assert d_cap >= D, (d_cap, D)
+        D = d_cap
+    order = np.argsort(dst, kind="stable")
+    dst_s, src_s = dst[order], src[order]
+    starts = np.concatenate([[0], np.cumsum(deg)])
+    slots = np.arange(len(dst_s), dtype=np.int64) - starts[dst_s]
     cols = np.full((n_rows, D), -1, dtype=np.int32)
-    ww = None if w is None else np.zeros((n_rows, D), dtype=np.float32)
-    slot = np.zeros(n_rows, dtype=np.int64)
-    for e in range(len(dst)):
-        r = dst[e]
-        cols[r, slot[r]] = src[e]
-        if ww is not None:
-            ww[r, slot[r]] = w[e]
-        slot[r] += 1
+    cols[dst_s, slots] = src_s
+    ww = None
+    if w is not None:
+        ww = np.zeros((n_rows, D), dtype=np.float32)
+        ww[dst_s, slots] = np.asarray(w)[order]
     return cols, ww
 
 
@@ -52,3 +65,39 @@ def ell_gimv(
         tile_r=tile_r, tile_d=tile_d, interpret=interpret,
     )
     return out[:R]
+
+
+@partial(jax.jit, static_argnames=("semiring", "tile_r", "tile_d", "tile_q", "interpret"))
+def ell_gimv_multi(
+    cols: jnp.ndarray,
+    w: jnp.ndarray | None,
+    v: jnp.ndarray,
+    *,
+    semiring: str,
+    tile_r: int = 128,
+    tile_d: int = 128,
+    tile_q: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Multi-query ELL GIM-V with automatic tile padding.
+
+    cols/w: [R, D]; v: [N, Q] (one query per column) -> r: [R, Q].  The
+    default TQ=8 keeps the kernel's (TR, TD, TQ) gather temporary ~512 KB of
+    VMEM; larger Q runs more query tiles over the resident cols tile.
+    """
+    R, D = cols.shape
+    N, Q = v.shape
+    Rp = -(-R // tile_r) * tile_r
+    Dp = -(-D // tile_d) * tile_d
+    Qp = -(-Q // tile_q) * tile_q
+    if (Rp, Dp) != (R, D):
+        cols = jnp.pad(cols, ((0, Rp - R), (0, Dp - D)), constant_values=-1)
+        if w is not None:
+            w = jnp.pad(w, ((0, Rp - R), (0, Dp - D)))
+    if Qp != Q:
+        v = jnp.pad(v, ((0, 0), (0, Qp - Q)))  # pad queries sliced off below
+    out = ell_gimv_multi_pallas(
+        cols, w, v, semiring=semiring, out_dtype=v.dtype,
+        tile_r=tile_r, tile_d=tile_d, tile_q=tile_q, interpret=interpret,
+    )
+    return out[:R, :Q]

@@ -25,3 +25,13 @@ def ell_gimv_ref(cols, w, v, *, semiring: str, out_dtype=None):
         x = jnp.where(valid, vals.astype(out_dtype), jnp.array(ident, out_dtype))
         return jnp.min(x, axis=1)
     raise ValueError(semiring)
+
+
+def ell_gimv_multi_ref(cols, w, v, *, semiring: str, out_dtype=None):
+    """Vmapped oracle for the multi-query kernel: v [N, Q] -> r [R, Q]."""
+    import jax
+
+    return jax.vmap(
+        lambda col: ell_gimv_ref(cols, w, col, semiring=semiring, out_dtype=out_dtype),
+        in_axes=1, out_axes=1,
+    )(v)

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 from typing import Callable
 
 import jax
@@ -150,6 +151,21 @@ def make_batched_step(spec: GimvSpec, cfg: StepConfig, mesh=None, axis_name: str
     return jax.jit(step, donate_argnums=(1,))
 
 
+@partial(jax.jit, donate_argnums=(0, 1))
+def _admit_columns(v, ctx, slot_idx, v_cols, ctx_cols):
+    """Admit one iteration's queries in a single donated scatter.
+
+    v: [b, n_local, Q] (donated — updated in place on device), slot_idx: [k]
+    freed column indices, v_cols: [b, n_local, k] init columns.  Batching the
+    admissions and donating the buffers replaces the per-query eager
+    ``.at[].set`` (which copied the full multi-GB state once per admitted
+    query) with one fused scatter per iteration.
+    """
+    v = v.at[:, :, slot_idx].set(v_cols)
+    ctx = {k: ctx[k].at[:, :, slot_idx].set(ctx_cols[k]) for k in ctx}
+    return v, ctx
+
+
 # ---------------------------------------------------------------------------
 # The server.
 # ---------------------------------------------------------------------------
@@ -189,6 +205,8 @@ class PMVServer:
         capacity: str = "structural",
         slack: float = 1.5,
         payload_dtype: str | None = None,
+        backend: str = "xla",
+        pallas_interpret: bool | None = None,
         base_weights: np.ndarray | None = None,
         buckets: tuple[int, ...] = DEFAULT_BUCKETS,
         max_iters: int = 200,
@@ -204,14 +222,17 @@ class PMVServer:
         self._engine_kwargs = dict(
             b=b, strategy=strategy, theta=theta, psi=psi, exchange=exchange,
             capacity=capacity, slack=slack, payload_dtype=payload_dtype,
+            backend=backend, pallas_interpret=pallas_interpret,
             base_weights=base_weights, mesh=mesh, axis_name=axis_name,
         )
         self._batcher = QueryBatcher(buckets)
         self._families: dict[tuple, _FamilyState] = {}
+        self._family_overrides: dict[tuple, dict] = {}  # overflow fallbacks
         self._results: dict[int, QueryResult] = {}
         self._next_qid = 0
         self._stats = {
             "batches": 0, "queries": 0, "admitted_mid_batch": 0,
+            "overflow_fallbacks": 0,
             "iterations": 0.0, "gathered_elems": 0.0, "exchanged_elems": 0.0,
             "logical_elems": 0.0, "wall_s": 0.0,
         }
@@ -257,8 +278,10 @@ class PMVServer:
         if key not in self._families:
             family = FAMILIES[sample.spec_kind]
             spec = family.make_spec(self.n, sample)
+            kwargs = dict(self._engine_kwargs)
+            kwargs.update(self._family_overrides.get(key, {}))
             engine = PMVEngine(self.edges, self.n, symmetrize=family.symmetrize,
-                               **self._engine_kwargs)
+                               **kwargs)
             _, matrix, _v0, _ctx, mask, meta = engine.prepare(spec)
             step = make_batched_step(spec, meta["cfg"], self.mesh, self.axis_name,
                                      delta_kind=family.delta_kind)
@@ -317,17 +340,34 @@ class PMVServer:
                 self._stats[k] += float(np.asarray(stats.get(k, 0.0)))
             if float(np.asarray(stats.get("overflow", 0.0))) > 0:
                 # A truncated exchange would silently corrupt EVERY in-flight
-                # column (the shared index set unions rows across queries),
-                # so refuse rather than serve wrong answers.  The default
-                # capacity='structural' cannot overflow.
-                lost = sorted(q.qid for q in slots if q is not None)
-                raise RuntimeError(
-                    "sparse exchange overflow in batched serving: capacity "
-                    f"{st.meta['capacity']} too small for the query batch — "
-                    "construct the server with capacity='structural' or "
-                    f"exchange='dense'; unanswered qids in this batch: {lost}")
+                # column (the shared index set unions rows across queries), so
+                # the truncated iteration is discarded.  When an overflow-free
+                # configuration exists (the engine's fallback table: vertical
+                # -> dense exchange, hybrid -> structural capacity), the
+                # family is rebuilt with it and the batch's in-flight queries
+                # are requeued — they restart, but keep their qids so callers
+                # see answers, not errors.  The default capacity='structural'
+                # cannot overflow.
+                fb = st.engine.fallback_overrides(st.meta["strategy"])
+                if fb is None:
+                    lost = sorted(q.qid for q in slots if q is not None)
+                    raise RuntimeError(
+                        "sparse exchange overflow in batched serving: capacity "
+                        f"{st.meta['capacity']} too small for the query batch — "
+                        "construct the server with capacity='structural' or "
+                        f"exchange='dense'; unanswered qids in this batch: {lost}")
+                label, overrides = fb
+                self._stats["overflow_fallbacks"] += 1
+                self._family_overrides[key] = {**self._family_overrides.get(key, {}),
+                                               **overrides}
+                del self._families[key]  # rebuilt with the fallback on requeue
+                for query in slots:
+                    if query is not None:
+                        self._batcher.add(query)  # keeps qid -> result mapping
+                return
             iters[active] += 1
 
+            admissions: list[tuple[int, np.ndarray, dict]] = []
             for q_i in np.nonzero(active)[0]:
                 done = deltas[q_i] < tols[q_i]
                 if not done and iters[q_i] < caps[q_i]:
@@ -346,13 +386,21 @@ class PMVServer:
                     self._stats["admitted_mid_batch"] += 1
                     slots[q_i] = waiting
                     v_col, ctx_cols = self._column(st, waiting)
-                    v_new = v_new.at[:, :, q_i].set(jnp.asarray(v_col))
-                    for k, x in ctx_cols.items():
-                        ctx[k] = ctx[k].at[:, :, q_i].set(jnp.asarray(x))
+                    admissions.append((int(q_i), v_col, ctx_cols))
                     iters[q_i] = 0
                     tols[q_i] = waiting.tol
                     caps[q_i] = waiting.max_iters or self.max_iters
                 else:
                     slots[q_i] = None
                     active[q_i] = False
+            if admissions:
+                # one jitted, buffer-donated scatter admits the whole
+                # iteration's queries (vs an eager full-state copy per query)
+                slot_idx = np.array([a[0] for a in admissions], np.int32)
+                v_cols = np.stack([a[1] for a in admissions], axis=-1)
+                ctx_cols = {k: np.stack([a[2][k] for a in admissions], axis=-1)
+                            for k in ctx}
+                v_new, ctx = _admit_columns(
+                    v_new, ctx, jnp.asarray(slot_idx), jnp.asarray(v_cols),
+                    {k: jnp.asarray(x) for k, x in ctx_cols.items()})
             v = v_new

@@ -39,3 +39,42 @@ print("HIER-OK")
     out = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, timeout=560, env=ENV, cwd="/root/repo")
     assert "HIER-OK" in out.stdout, (out.stdout, out.stderr[-2000:])
+
+
+@pytest.mark.slow
+def test_hierarchical_batched_matches_flat():
+    """The two-hop exchange carries a trailing query axis ([b, cap, Q] values
+    on one shared index set) through both hops: a batched step under the
+    hier exchange matches the flat sparse exchange columnwise."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import PMVEngine, pagerank
+from repro.serving.server import make_batched_step
+from repro.graph import erdos_renyi
+
+n, b, q = 160, 8, 4
+edges = erdos_renyi(n, 900, seed=4)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+axis = ("pod", "data", "model")
+spec = pagerank(n)
+shard = NamedSharding(mesh, P(axis))
+outs, stats = {}, {}
+for name, exchange in [("hier", "hier"), ("flat", "sparse")]:
+    eng = PMVEngine(edges, n, b=b, strategy="vertical", exchange=exchange,
+                    mesh=mesh, axis_name=axis)
+    _, matrix, _v0, _ctx, mask, meta = eng.prepare(spec)
+    step = make_batched_step(spec, meta["cfg"], mesh, axis, delta_kind="abs")
+    v_np = np.random.default_rng(0).random((b, meta["part"].n_local, q)).astype(np.float32)
+    v = jax.device_put(jnp.asarray(v_np), shard)
+    v_new, _d, st = step(matrix, v, {}, mask, jnp.ones(q, bool))
+    outs[name], stats[name] = np.asarray(v_new), st
+np.testing.assert_allclose(outs["hier"], outs["flat"], rtol=1e-5, atol=1e-7)
+assert float(stats["hier"]["inter_pod_elems"]) < float(stats["flat"]["exchanged_elems"])
+print("HIER-BATCHED-OK")
+"""
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=560, env=ENV, cwd="/root/repo")
+    assert "HIER-BATCHED-OK" in out.stdout, (out.stdout, out.stderr[-2000:])

@@ -133,17 +133,43 @@ def test_resubmitting_same_query_object_yields_two_results():
     np.testing.assert_array_equal(res2[0].vector, res[0].vector)
 
 
-def test_server_refuses_overflowing_capacity():
+def test_server_overflow_requeues_with_fallback():
     """A truncating sparse exchange must never be served as a converged
-    answer — the server raises instead (engine-side runs fall back, but a
-    batched fallback would disturb every in-flight column)."""
+    answer.  With capacity='model' the server discards the truncated
+    iteration, rebuilds the family with the engine's overflow-free fallback
+    (vertical -> dense exchange) and requeues the batch's in-flight queries —
+    callers get correct answers, not errors (mirrors the engine's
+    dense-exchange fallback)."""
     from repro.graph import star_graph
 
     n = 64
-    srv = PMVServer(star_graph(n), n, b=4, strategy="vertical",
+    edges = star_graph(n)
+    srv = PMVServer(edges, n, b=4, strategy="vertical",
                     capacity="model", slack=0.01)
-    with pytest.raises(RuntimeError, match="overflow"):
-        srv.serve([Query("pagerank", tol=1e-10)])
+    res = srv.serve([Query("pagerank", tol=1e-10, max_iters=100)])
+    assert srv.stats()["overflow_fallbacks"] == 1
+    # answers match an overflow-free engine solve
+    from repro.core import pagerank
+    ref = PMVEngine(edges, n, b=4, strategy="vertical", exchange="dense").run(
+        pagerank(n), max_iters=100, tol=1e-10)
+    np.testing.assert_allclose(res[0].vector, ref.v, atol=1e-6)
+
+
+def test_server_overflow_requeue_preserves_other_inflight_queries():
+    """Overflow mid-batch requeues EVERY in-flight query of that batch (the
+    truncated exchange corrupts all columns) and still answers each one."""
+    from repro.graph import star_graph
+
+    n = 64
+    edges = star_graph(n)
+    srv = PMVServer(edges, n, b=4, strategy="vertical",
+                    capacity="model", slack=0.01, buckets=(4,))
+    queries = [Query("pagerank", tol=1e-8, max_iters=100) for _ in range(3)]
+    res = srv.serve(queries)
+    assert len(res) == 3
+    for r in res[1:]:
+        np.testing.assert_allclose(r.vector, res[0].vector, atol=1e-7)
+    assert srv.stats()["overflow_fallbacks"] >= 1
 
 
 def test_batcher_bucket_policy_and_fifo():
