@@ -11,7 +11,11 @@ Three comparisons, emitted as CSV lines (benchmarks.common) AND as
   the materialized [n_local, b*d_cap] matrix;
 - compaction/topk_vs_scan: the sparse-exchange compaction alone — the legacy
   O(n log k) lax.top_k lowering vs the O(n) cumsum-prefix scatter that
-  replaced it (sparse_exchange.compact_partials method='scan').
+  replaced it (sparse_exchange.compact_partials method='scan');
+- ell_padding/rmat: padded ELL slots of the flat one-d_cap-per-stripe layout
+  vs the planner's row-bucketed slices on a skewed (RMAT power-law) graph —
+  the memory/compute win ISSUE 3's per-block ExecutionPlan buys at pack time
+  (reported as slot counts + occupancy, gated on reduction > 1).
 
 On CPU hosts the Pallas kernels run in interpret mode (what this container
 measures); on TPU they lower to Mosaic.  ``--smoke`` shrinks every size for
@@ -154,16 +158,61 @@ def bench_compaction(n_local: int, rows: int, capacity: int, reps: int) -> None:
             f"n_local={n_local} rows={rows} cap={capacity}")
 
 
+def bench_ell_padding(scale: int, m_edges: int, b: int) -> None:
+    """Row-bucketed ELL slices vs the flat d_cap layout on a power-law graph.
+
+    Packs the SAME vertical stripes both ways (all blocks 'ell', the plan's
+    bucket boundaries) and counts padded slots actually allocated — the
+    quantity the per-iteration ELL kernels stream and VMEM holds.
+    """
+    from repro.core import blocks as blocks_lib, pagerank, planner
+    from repro.core.partition import partition_graph
+
+    n = 1 << scale
+    edges = rmat(scale, m_edges, seed=7)
+    spec = pagerank(n)
+    pm, _ = partition_graph(edges, n, b, spec)
+    n_local = pm.part.n_local
+    plan = planner.plan_execution(pm, None, strategy="vertical", mode="planned",
+                                  capacity=pm.partial_cap)
+    flat = blocks_lib.stack_ells(
+        [blocks_lib.stripe_to_ell(s, n_local) for s in pm.vertical])
+    bucketed = blocks_lib.stack_planned(
+        [blocks_lib.pack_planned_stripe(
+            s, ("ell",) * b, n_local, layout="vertical",
+            boundaries=plan.boundaries, semiring="plus_times")
+         for s in pm.vertical], "plus_times")
+    flat_slots = int(np.asarray(flat.cols).size)
+    bucketed_slots = sum(int(np.asarray(bk.cols).size) for bk in bucketed.buckets)
+    nnz = int(pm.block_nnz.sum())
+    reduction = flat_slots / max(bucketed_slots, 1)
+    RESULTS.append({
+        "name": "fig10/ell_padding/rmat",
+        "flat_slots": flat_slots,
+        "bucketed_slots": bucketed_slots,
+        "nnz": nnz,
+        "flat_occupancy": round(nnz / max(flat_slots, 1), 4),
+        "bucketed_occupancy": round(nnz / max(bucketed_slots, 1), 4),
+        "slot_reduction": round(reduction, 3),
+        "buckets": list(plan.boundaries),
+    })
+    emit("fig10/ell_padding/rmat", float(bucketed_slots),
+         f"flat_slots={flat_slots} reduction={reduction:.2f}x "
+         f"occ {nnz / max(flat_slots, 1):.3f}->{nnz / max(bucketed_slots, 1):.3f}")
+
+
 def run(smoke: bool = False, out: str = "BENCH_kernels.json") -> dict:
     RESULTS.clear()
     if smoke:
         bench_steps(scale=9, m_edges=3000, b=4, qs=(1, 16), reps=2)
         bench_dense_region(n_local=256, b=4, d_cap=64, reps=2)
         bench_compaction(n_local=1 << 15, rows=8, capacity=1024, reps=2)
+        bench_ell_padding(scale=11, m_edges=12_000, b=4)
     else:
         bench_steps(scale=12, m_edges=60_000, b=4, qs=(1, 16, 64), reps=3)
         bench_dense_region(n_local=512, b=4, d_cap=128, reps=3)
         bench_compaction(n_local=1 << 17, rows=16, capacity=4096, reps=3)
+        bench_ell_padding(scale=14, m_edges=200_000, b=4)
     payload = {
         "bench": "fig10_kernels",
         "smoke": smoke,
@@ -187,6 +236,10 @@ def main() -> None:
     slow = [r for r in micro if r["speedup"] < 1.0]
     if slow:
         raise SystemExit(f"microbenchmark regression (pallas/scan slower): {slow}")
+    padding = [r for r in payload["results"] if r["name"] == "fig10/ell_padding/rmat"]
+    if not padding or padding[0]["slot_reduction"] <= 1.0:
+        raise SystemExit(
+            f"row-bucketed ELL did not reduce padded slots: {padding}")
 
 
 if __name__ == "__main__":

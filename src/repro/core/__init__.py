@@ -9,7 +9,8 @@ from repro.core.algorithms import (
 from repro.core.engine import PMVEngine, PMVResult, StepConfig, make_step
 from repro.core.gimv import GimvSpec
 from repro.core.partition import Partition, partition_graph
-from repro.core import cost_model
+from repro.core import cost_model, planner
+from repro.core.planner import BlockPlan, ExecutionPlan
 
 __all__ = [
     "GimvSpec",
@@ -19,6 +20,9 @@ __all__ = [
     "make_step",
     "Partition",
     "partition_graph",
+    "planner",
+    "BlockPlan",
+    "ExecutionPlan",
     "pagerank",
     "random_walk_with_restart",
     "rwr_context",

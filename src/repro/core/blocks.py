@@ -40,6 +40,14 @@ __all__ = [
     "stripe_to_ell",
     "stack_ells",
     "materialize_dense_matrix",
+    "materialize_dense_block",
+    "EllBucket",
+    "DenseGroup",
+    "PlannedStripe",
+    "pack_bucketed_ell",
+    "pack_planned_stripe",
+    "stack_planned",
+    "planned_to_edges",
 ]
 
 
@@ -278,6 +286,17 @@ def stack_ells(ells: list[EllStripe]) -> EllStripe:
     return EllStripe(cols=cols, w=w)
 
 
+# Semiring fill value (no-op under combineAll) and the fold used when
+# parallel edges land on the same dense cell — matching segment_combine on
+# the edge list.  min_src stores a presence matrix (fill 0, fold max).
+SEMIRING_FILL_FOLD = {
+    "plus_times": (0.0, np.add),
+    "min_plus": (np.inf, np.minimum),
+    "max_plus": (-np.inf, np.maximum),
+    "min_src": (0.0, np.maximum),
+}
+
+
 def materialize_dense_matrix(
     stripe: BlockEdges, n_local: int, d_cap: int, semiring: str
 ) -> np.ndarray:
@@ -292,14 +311,7 @@ def materialize_dense_matrix(
     """
     b, _ = stripe.seg_local.shape
     counts = np.asarray(stripe.count)
-    if semiring == "plus_times":
-        fill, fold = 0.0, np.add
-    elif semiring == "min_plus":
-        fill, fold = np.inf, np.minimum
-    elif semiring == "max_plus":
-        fill, fold = -np.inf, np.maximum
-    else:  # min_src: presence matrix
-        fill, fold = 0.0, np.maximum
+    fill, fold = SEMIRING_FILL_FOLD[semiring]
     m = np.full((n_local, b * d_cap), fill, dtype=np.float32)
     for jj in range(b):
         cnt = int(counts[jj])
@@ -334,3 +346,300 @@ jax.tree_util.register_dataclass(
     data_fields=["gather_idx", "d_count"],
     meta_fields=["d_cap", "theta"],
 )
+
+
+# ---------------------------------------------------------------------------
+# Planned packing (planner.ExecutionPlan -> device layouts).
+#
+# The per-block execution plan splits a worker's stripe into three groups:
+#   skip  — structurally empty blocks, dropped entirely at pack time;
+#   ell   — sparse blocks packed as ROW-BUCKETED ELL slices: destination rows
+#           are grouped by degree into power-of-two buckets, each bucket a
+#           [R_k, D_k] table with its own (much tighter) width, so one skewed
+#           row no longer pads every row of the stripe to d_max;
+#   dense — near-dense blocks materialized as [n_local, n_local] semiring
+#           matrices for the MXU kernel.
+# Rows of every table carry their *flat output index* so same-tactic blocks
+# across the whole stripe fuse into per-bucket kernel launches whose results
+# scatter back into one output vector (placement._planned_* executors).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EllBucket:
+    """One degree-bucket ELL slice covering all ell-tactic blocks of a stripe.
+
+    rows: [R] int32 flat output row of each table row (-1 = padding row,
+      introduced when stacking workers to a common R); cols: [R, D] int32
+      gather index into the flat source vector (-1 = padding slot); w: [R, D]
+      matching weights or None.  Every destination row lives in exactly ONE
+      bucket (its degree picks it), so bucket results scatter with plain
+      ``set`` — no cross-bucket combine.
+    """
+
+    rows: Any        # [(b_w,) R] int32; -1 = pad
+    cols: Any        # [(b_w,) R, D] int32; -1 = pad
+    w: Any | None    # matching weights, or None
+
+    @property
+    def d_cap(self) -> int:
+        return self.cols.shape[-1]
+
+
+jax.tree_util.register_dataclass(
+    EllBucket, data_fields=["rows", "cols", "w"], meta_fields=[])
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseGroup:
+    """The dense-tactic blocks of a stripe, fused for one MXU launch.
+
+    layout='vertical': matrix [k, n_local, n_local] (one per dense block,
+      columns = worker-local sources), index [k] = destination block ids
+      (-1 = stacking pad, its matrix is identity-filled and dropped at
+      scatter time).
+    layout='merged': matrix [n_local, k * n_local] (dense source blocks'
+      columns concatenated), index [k] = source block ids (stacking pads use
+      index 0 — harmless, their columns are identity-filled).
+    """
+
+    matrix: Any      # see above
+    index: Any       # [(b_w,) k] int32
+
+
+jax.tree_util.register_dataclass(
+    DenseGroup, data_fields=["matrix", "index"], meta_fields=[])
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannedStripe:
+    """One worker's plan-packed stripe: bucketed ELL slices + dense group.
+
+    layout='vertical' (vertical / hybrid-sparse stripes): output space is the
+    flat partial vector [b * n_local] (block i rows at i * n_local); cols
+    index the worker-local source vector [n_local].
+    layout='merged' (horizontal stripes): output space is the worker's result
+    sub-vector [n_local]; cols are pre-offset to jj * n_local + gat_local,
+    indexing the flat all-gathered vector [b * n_local].
+    """
+
+    buckets: tuple   # tuple[EllBucket, ...]
+    dense: DenseGroup | None
+    rows_out: int    # flat output size (b * n_local | n_local)
+    layout: str      # 'vertical' | 'merged'
+
+
+jax.tree_util.register_dataclass(
+    PlannedStripe,
+    data_fields=["buckets", "dense"],
+    meta_fields=["rows_out", "layout"],
+)
+
+
+def pack_bucketed_ell(
+    out_rows: np.ndarray,
+    cols: np.ndarray,
+    w: np.ndarray | None,
+    boundaries: tuple[int, ...],
+) -> tuple:
+    """Flat edge arrays -> row-bucketed ELL slices.
+
+    out_rows[e] is the flat output row of edge e, cols[e] its gather index.
+    Each output row with degree d goes to the first bucket whose width
+    boundary >= d; bucket k is packed as a [R_k, boundaries[k]] table.  All
+    len(boundaries) buckets are emitted (possibly with R_k = 0) so the pytree
+    structure is identical across workers; stack_planned drops buckets that
+    are empty on every worker.
+    """
+    out_rows = np.asarray(out_rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    bounds = np.asarray(boundaries, dtype=np.int64)
+    if out_rows.size:
+        deg = np.bincount(out_rows)
+        present = np.nonzero(deg)[0]
+        assert int(deg.max()) <= int(bounds[-1]), (int(deg.max()), boundaries)
+        bucket_of = np.searchsorted(bounds, deg[present], side="left")
+        remap = np.full(int(out_rows.max()) + 1, -1, dtype=np.int64)
+    else:
+        present = np.zeros(0, dtype=np.int64)
+        bucket_of = np.zeros(0, dtype=np.int64)
+        remap = np.zeros(0, dtype=np.int64)
+
+    has_w = w is not None
+    buckets = []
+    for k, cap_k in enumerate(boundaries):
+        rows_k = present[bucket_of == k]
+        if rows_k.size == 0:
+            buckets.append(EllBucket(
+                rows=np.zeros((0,), np.int32),
+                cols=np.full((0, cap_k), -1, np.int32),
+                w=np.zeros((0, cap_k), np.float32) if has_w else None))
+            continue
+        remap[:] = -1
+        remap[rows_k] = np.arange(rows_k.size)
+        sel = remap[out_rows] >= 0
+        cols_k, w_k = _pack_ell(
+            remap[out_rows[sel]], cols[sel],
+            np.asarray(w)[sel] if has_w else None,
+            rows_k.size, d_cap=cap_k)
+        buckets.append(EllBucket(rows=rows_k.astype(np.int32), cols=cols_k, w=w_k))
+    return tuple(buckets)
+
+
+def materialize_dense_block(
+    dst: np.ndarray, src: np.ndarray, w: np.ndarray | None, n_local: int, semiring: str
+) -> np.ndarray:
+    """One dense-tactic block's edges -> a [n_local, n_local] semiring matrix
+    (fill = combineAll identity / presence 0; parallel edges fold)."""
+    fill, fold = SEMIRING_FILL_FOLD[semiring]
+    m = np.full((n_local, n_local), fill, dtype=np.float32)
+    if w is not None and semiring != "min_src":
+        vals = np.asarray(w, dtype=np.float32)
+    else:
+        vals = np.ones(len(dst), dtype=np.float32)
+    fold.at(m, (np.asarray(dst), np.asarray(src)), vals)
+    return m
+
+
+def pack_planned_stripe(
+    stripe: BlockEdges,
+    tactics: tuple[str, ...],
+    n_local: int,
+    *,
+    layout: str,
+    boundaries: tuple[int, ...],
+    semiring: str,
+) -> PlannedStripe:
+    """Pack one worker's stripe against its per-block tactics (see module
+    section above).  tactics[k] is the tactic of the k-th inner block."""
+    assert layout in ("vertical", "merged"), layout
+    b = stripe.seg_local.shape[0]
+    counts = np.asarray(stripe.count)
+    has_w = stripe.w is not None
+
+    out_rows_l: list[np.ndarray] = []
+    cols_l: list[np.ndarray] = []
+    w_l: list[np.ndarray] = []
+    dense_mats: list[np.ndarray] = []
+    dense_index: list[int] = []
+    for k in range(b):
+        cnt = int(counts[k])
+        if tactics[k] == "skip" or cnt == 0:
+            continue
+        seg = np.asarray(stripe.seg_local[k, :cnt], dtype=np.int64)
+        gat = np.asarray(stripe.gat_local[k, :cnt], dtype=np.int64)
+        wk = np.asarray(stripe.w[k, :cnt]) if has_w else None
+        if tactics[k] == "ell":
+            if layout == "vertical":
+                out_rows_l.append(k * n_local + seg)
+                cols_l.append(gat)
+            else:
+                out_rows_l.append(seg)
+                cols_l.append(k * n_local + gat)
+            if has_w:
+                w_l.append(wk)
+        else:  # dense
+            dense_mats.append(materialize_dense_block(seg, gat, wk, n_local, semiring))
+            dense_index.append(k)
+
+    cat = lambda xs, dt: (np.concatenate(xs) if xs else np.zeros(0, dt))
+    buckets = pack_bucketed_ell(
+        cat(out_rows_l, np.int64), cat(cols_l, np.int64),
+        cat(w_l, np.float32) if has_w else None, boundaries)
+
+    dense = None
+    if dense_mats:
+        if layout == "vertical":
+            dense = DenseGroup(matrix=np.stack(dense_mats),
+                               index=np.asarray(dense_index, np.int32))
+        else:
+            dense = DenseGroup(matrix=np.concatenate(dense_mats, axis=1),
+                               index=np.asarray(dense_index, np.int32))
+    rows_out = b * n_local if layout == "vertical" else n_local
+    return PlannedStripe(buckets=buckets, dense=dense, rows_out=rows_out, layout=layout)
+
+
+def stack_planned(stripes: list[PlannedStripe], semiring: str) -> PlannedStripe:
+    """b per-worker planned stripes -> one stripe with a leading worker axis.
+
+    Buckets share widths (plan-level boundaries) so only the row counts pad
+    (rows = -1, cols = -1); buckets empty on EVERY worker are dropped.  Dense
+    groups pad to the max dense-block count with identity-filled matrices
+    (index -1 for 'vertical' — dropped at scatter; index 0 for 'merged' —
+    the identity-filled columns contribute the combineAll identity)."""
+    layout = stripes[0].layout
+    n_buckets = len(stripes[0].buckets)
+    fill, _ = SEMIRING_FILL_FOLD[semiring]
+
+    out_buckets = []
+    for k in range(n_buckets):
+        bs = [s.buckets[k] for s in stripes]
+        r_max = max(x.rows.shape[0] for x in bs)
+        if r_max == 0:
+            continue
+        d = bs[0].cols.shape[-1]
+        has_w = bs[0].w is not None
+        rows = np.stack([_pad_to(x.rows, r_max, -1) for x in bs])
+        cols = np.stack([
+            np.concatenate([x.cols, np.full((r_max - x.rows.shape[0], d), -1, np.int32)])
+            for x in bs])
+        w = None
+        if has_w:
+            w = np.stack([
+                np.concatenate([x.w, np.zeros((r_max - x.rows.shape[0], d), np.float32)])
+                for x in bs])
+        out_buckets.append(EllBucket(rows=rows, cols=cols, w=w))
+
+    k_max = max((0 if s.dense is None else s.dense.index.shape[0]) for s in stripes)
+    dense = None
+    if k_max:
+        mats, idxs = [], []
+        for s in stripes:
+            k_s = 0 if s.dense is None else s.dense.index.shape[0]
+            if layout == "vertical":
+                nl = s.dense.matrix.shape[-1] if s.dense is not None else _dense_nl(stripes)
+                m = (s.dense.matrix if k_s else
+                     np.zeros((0, nl, nl), np.float32))
+                pad = np.full((k_max - k_s, nl, nl), fill, np.float32)
+                mats.append(np.concatenate([m, pad]) if k_max - k_s else m)
+                idx = (s.dense.index if k_s else np.zeros(0, np.int32))
+                idxs.append(_pad_to(idx, k_max, -1))
+            else:
+                nl = s.rows_out
+                m = (s.dense.matrix if k_s else np.zeros((nl, 0), np.float32))
+                pad = np.full((nl, (k_max - k_s) * nl), fill, np.float32)
+                mats.append(np.concatenate([m, pad], axis=1) if k_max - k_s else m)
+                idx = (s.dense.index if k_s else np.zeros(0, np.int32))
+                idxs.append(_pad_to(idx, k_max, 0))
+        dense = DenseGroup(matrix=np.stack(mats), index=np.stack(idxs))
+    return PlannedStripe(buckets=tuple(out_buckets), dense=dense,
+                         rows_out=stripes[0].rows_out, layout=layout)
+
+
+def _dense_nl(stripes: list[PlannedStripe]) -> int:
+    for s in stripes:
+        if s.dense is not None:
+            return s.dense.matrix.shape[-1]
+    raise AssertionError("no dense group on any worker")
+
+
+def planned_to_edges(planned: PlannedStripe) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    """Bucketed-ELL slices -> flat (out_row, col, w) edge arrays, lexsorted by
+    (out_row, col) — the pack/unpack direction of the round-trip property
+    test.  Covers the ell-tactic blocks of an UNSTACKED stripe (rows [R])."""
+    rows_l, cols_l, w_l = [], [], []
+    has_w = any(b.w is not None for b in planned.buckets)
+    for b in planned.buckets:
+        rows = np.asarray(b.rows)
+        cols = np.asarray(b.cols)
+        rr = np.repeat(rows, cols.shape[-1]).reshape(cols.shape)
+        valid = (cols >= 0) & (rr >= 0)
+        rows_l.append(rr[valid])
+        cols_l.append(cols[valid])
+        if has_w:
+            w_l.append(np.asarray(b.w)[valid])
+    out_rows = np.concatenate(rows_l) if rows_l else np.zeros(0, np.int64)
+    cols = np.concatenate(cols_l) if cols_l else np.zeros(0, np.int64)
+    w = np.concatenate(w_l) if has_w and w_l else None
+    order = np.lexsort((cols, out_rows))
+    return out_rows[order], cols[order], (w[order] if w is not None else None)

@@ -126,6 +126,31 @@ def ici_seconds(elems: float, bytes_per_elem: int = 4, links: int | None = None)
     return elems * bytes_per_elem / (HW.ici_link_bw * links)
 
 
+# ---------------------------------------------------------------------------
+# Per-block tactic costs (planner.py): the planner compares, for each of the
+# b x b pre-partitioned sub-blocks, the slots the ELL sparse kernel would
+# touch against the MXU cost of materializing the block dense.
+# ---------------------------------------------------------------------------
+
+# One MXU dense slot costs ~1/8 of one gather/ELL slot: the systolic array
+# streams 128x128 tiles at full clip while the sparse kernel pays the gather
+# unit + padding per slot.  Calibrate on hardware; the ordering the planner
+# needs (dense wins only on near-dense blocks) is insensitive to +-2x.
+MXU_SLOT_ADVANTAGE = 8.0
+
+
+def ell_block_cost(bucketed_slots: int) -> float:
+    """Per-iteration compute cost of an ell-tactic block = the padded slots
+    its row-bucketed ELL slices touch (gather + combine per slot)."""
+    return float(bucketed_slots)
+
+
+def dense_block_cost(n_local: int, mxu_advantage: float = MXU_SLOT_ADVANTAGE) -> float:
+    """Per-iteration compute cost of a dense-tactic block: the MXU streams
+    all n_local^2 cells, each ~1/mxu_advantage of a gather slot."""
+    return n_local * n_local / mxu_advantage
+
+
 def capacity_from_cost_model(
     b: int,
     n: int,

@@ -25,7 +25,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import blocks as blocks_lib
-from repro.core import cost_model, placement
+from repro.core import cost_model, placement, planner, sparse_exchange
 from repro.core.blocks import BlockEdges, DenseRegion
 from repro.kernels.block_gimv import has_semiring, semiring_of
 from repro.core.gimv import GimvSpec
@@ -37,13 +37,21 @@ __all__ = ["PMVEngine", "PMVResult", "StepConfig", "make_step", "placement_call"
 
 @dataclasses.dataclass(frozen=True)
 class StepConfig:
+    """Static per-step configuration, derived from the ExecutionPlan.
+
+    ``backend`` is the resolved execution mode ('xla' | 'pallas' |
+    'planned'); ``plan`` carries the full per-block tactic table that the
+    'planned' mode executes and ``explain()`` reports.  The config is frozen
+    and hashable so jitted steps can close over it."""
+
     strategy: str            # 'horizontal' | 'vertical' | 'hybrid'
     n_local: int
     exchange: str = "sparse"  # vertical transport: 'sparse' | 'dense' | 'hier'
     capacity: int | None = None
     payload_dtype: str | None = None  # e.g. 'bfloat16' wire values (§Perf)
-    backend: str = "xla"     # per-worker compute: 'xla' | 'pallas' (kernels/)
+    backend: str = "xla"     # resolved mode: 'xla' | 'pallas' | 'planned'
     interpret: bool = False  # Pallas interpret mode (CPU hosts / debugging)
+    plan: planner.ExecutionPlan | None = None
 
 
 def _stack_stripes(stripes: list[BlockEdges]) -> BlockEdges:
@@ -61,24 +69,28 @@ def placement_call(spec: GimvSpec, cfg: StepConfig, matrix, v, ctx, mask, axis):
     Shared by the engine's scalar step and repro.serving's multi-query step
     (v/ctx may carry a trailing query axis; placements are polymorphic)."""
     n_local = cfg.n_local
+    scatter = cfg.plan.scatter if cfg.plan is not None else "segment"
     if cfg.strategy == "horizontal":
         return placement.horizontal_step(
             spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis,
-            ell=matrix.get("ell"), backend=cfg.backend, interpret=cfg.interpret)
+            ell=matrix.get("ell"), planned=matrix.get("planned"),
+            backend=cfg.backend, interpret=cfg.interpret)
     if cfg.strategy == "vertical":
         pd = jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
         return placement.vertical_step(
             spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis,
             exchange=cfg.exchange, capacity=cfg.capacity, payload_dtype=pd,
-            ell=matrix.get("ell"), backend=cfg.backend, interpret=cfg.interpret)
+            ell=matrix.get("ell"), planned=matrix.get("planned"),
+            backend=cfg.backend, scatter=scatter, interpret=cfg.interpret)
     if cfg.strategy == "hybrid":
         pd = jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
         return placement.hybrid_step(
             spec, matrix["sparse_stripe"], matrix["dense_stripe"], matrix["dense_region"],
             v, ctx, mask, n_local=n_local, axis_name=axis, capacity=cfg.capacity,
             payload_dtype=pd, sparse_ell=matrix.get("sparse_ell"),
+            planned_sparse=matrix.get("planned_sparse"),
             dense_matrix=matrix.get("dense_matrix"), backend=cfg.backend,
-            interpret=cfg.interpret)
+            scatter=scatter, interpret=cfg.interpret)
     raise ValueError(cfg.strategy)
 
 
@@ -154,12 +166,18 @@ class PMVEngine:
       with the dense exchange for that run).
     payload_dtype: wire dtype for the sparse-exchange values (e.g.
       'bfloat16' — §Perf); accumulation stays in the spec dtype.
-    backend: 'xla' (generic gather/segment lowering) | 'pallas' (per-worker
-      block compute through the ELL / dense-region kernels; stripes are
-      additionally packed to ELL at pre-partition time and the hybrid dense
-      region is materialized as a [n_local, b*d_cap] matrix).  Specs whose
+    backend: 'auto' engages the per-block execution planner (core/planner.py):
+      every b x b sub-block is classified at prepare() time into skip / ell
+      (row-bucketed ELL slices) / dense (MXU matmul) tactics by density, and
+      the step executes the resulting ExecutionPlan with fused same-tactic
+      launches.  'xla' (generic gather/segment lowering) and 'pallas' (the
+      flat global kernel layout) remain as forced overrides.  Specs whose
       (combine2, combineAll) pair has no kernel semiring fall back to 'xla'
-      (recorded in meta['backend']).
+      (recorded in meta['backend']); every prepared solve carries its plan in
+      meta['plan'] and pretty-prints it via ``explain()``.
+    scatter: receive-side tactic of the sparse exchange — 'segment' (XLA
+      segment op), 'kernel' (Pallas scatter-combine kernel), or 'auto'
+      (kernel only for planned mode on real TPU hardware).
     pallas_interpret: force the kernels' interpret mode; default None runs
       interpret on non-TPU hosts and compiled kernels on TPU.
     """
@@ -178,13 +196,15 @@ class PMVEngine:
         slack: float = 1.5,
         payload_dtype: str | None = None,
         backend: str = "xla",
+        scatter: str = "auto",
         pallas_interpret: bool | None = None,
         symmetrize: bool = False,
         base_weights: np.ndarray | None = None,
         mesh: Mesh | None = None,
         axis_name: str = "workers",
     ):
-        assert backend in ("xla", "pallas"), backend
+        assert backend in ("xla", "pallas", "auto"), backend
+        assert scatter in ("auto",) + sparse_exchange.SCATTER_METHODS, scatter
         if symmetrize:
             edges = symmetrize_edges(edges)
         self.edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
@@ -198,6 +218,7 @@ class PMVEngine:
         self.slack = slack
         self.payload_dtype = payload_dtype
         self.backend = backend
+        self.scatter = scatter
         self.pallas_interpret = pallas_interpret
         self.base_weights = base_weights
         self.mesh = mesh
@@ -294,21 +315,53 @@ class PMVEngine:
                 ),
             }
             capacity = self._capacity(pm, hm)
-            if backend == "pallas":
+            if backend in ("pallas", "planned"):
                 semiring = semiring_of(spec.combine2, spec.combine_all)
-                matrix["sparse_ell"] = blocks_lib.stack_ells([
-                    blocks_lib.stripe_to_ell(s, part.n_local) for s in hm.sparse_vertical])
+                if backend == "pallas":
+                    matrix["sparse_ell"] = blocks_lib.stack_ells([
+                        blocks_lib.stripe_to_ell(s, part.n_local) for s in hm.sparse_vertical])
+                # the dense REGION is a region-level dense tactic (§3.5):
+                # both kernel modes run it as a materialized MXU matmul
                 matrix["dense_matrix"] = np.stack([
                     blocks_lib.materialize_dense_matrix(
                         s, part.n_local, hm.dense.d_cap, semiring)
                     for s in hm.dense_horizontal])
+
+        # the scatter-combine kernel shares the semiring table: a spec with
+        # no kernel semiring degrades a forced 'kernel' to the segment op,
+        # mirroring the backend fallback.
+        scatter = (self.scatter
+                   if has_semiring(spec.combine2, spec.combine_all) else "segment")
+        plan = planner.plan_execution(
+            pm, hm, strategy=strategy, mode=backend, theta=theta,
+            capacity=capacity, scatter=scatter, interpret=interpret)
+        if backend == "planned":
+            semiring = semiring_of(spec.combine2, spec.combine_all)
+            if strategy == "horizontal":
+                matrix["planned"] = blocks_lib.stack_planned([
+                    blocks_lib.pack_planned_stripe(
+                        s, plan.tactics_for_worker(i, "merged"), part.n_local,
+                        layout="merged", boundaries=plan.boundaries, semiring=semiring)
+                    for i, s in enumerate(pm.horizontal)], semiring)
+            elif strategy == "vertical":
+                matrix["planned"] = blocks_lib.stack_planned([
+                    blocks_lib.pack_planned_stripe(
+                        s, plan.tactics_for_worker(j, "vertical"), part.n_local,
+                        layout="vertical", boundaries=plan.boundaries, semiring=semiring)
+                    for j, s in enumerate(pm.vertical)], semiring)
+            else:
+                matrix["planned_sparse"] = blocks_lib.stack_planned([
+                    blocks_lib.pack_planned_stripe(
+                        s, plan.tactics_for_worker(j, "vertical"), part.n_local,
+                        layout="vertical", boundaries=plan.boundaries, semiring=semiring)
+                    for j, s in enumerate(hm.sparse_vertical)], semiring)
 
         real_mask = part.global_ids_grid() < self.n
 
         cfg = StepConfig(strategy=strategy, n_local=part.n_local,
                          exchange=self.exchange, capacity=capacity,
                          payload_dtype=self.payload_dtype,
-                         backend=backend, interpret=interpret)
+                         backend=backend, interpret=interpret, plan=plan)
         step = make_step(spec, cfg, self.mesh, self.axis_name)
         donate = (1,)
         step_jit = jax.jit(step, donate_argnums=donate)
@@ -324,15 +377,32 @@ class PMVEngine:
         meta = {
             "strategy": strategy, "theta": theta, "capacity": capacity,
             "part": part, "pm": pm, "hm": hm, "cfg": cfg, "backend": backend,
+            "plan": plan,
             "n_dense": int(hm.dense.d_count.sum()) if hm is not None else 0,
         }
         return step_jit, matrix, real_mask_dev, meta
 
     def _resolve_backend(self, spec: GimvSpec) -> str:
-        """'pallas' only when the spec's semiring has a kernel; else 'xla'."""
-        if self.backend == "pallas" and not has_semiring(spec.combine2, spec.combine_all):
+        """Resolve the execution mode: 'auto' -> 'planned' (the per-block
+        planner) when the spec's semiring has kernels, else 'xla'; a forced
+        'pallas' likewise degrades to 'xla' without kernel support."""
+        kernels_ok = has_semiring(spec.combine2, spec.combine_all)
+        if self.backend == "auto":
+            return "planned" if kernels_ok else "xla"
+        if self.backend == "pallas" and not kernels_ok:
             return "xla"
         return self.backend
+
+    def explain(self, spec: GimvSpec, ctx: dict | None = None) -> str:
+        """Human-readable report of the prepared ExecutionPlan: per-block
+        tactic, nnz, max in-degree, padding occupancy and predicted cost,
+        plus plan-level aggregates (tactic counts, flat -> bucketed padded
+        slots).  Prepares (and caches) the solve as a side effect."""
+        _step, _matrix, _v0, _ctx, _mask, meta = self.prepare(spec, ctx)
+        extra = {"spec": spec.name, "exchange": self.exchange}
+        if meta["hm"] is not None:
+            extra["dense_region_vertices"] = meta["n_dense"]
+        return planner.format_plan(meta["plan"], extra=extra)
 
     def _capacity(self, pm: PartitionedMatrix, hm: HybridMatrix | None) -> int:
         if self.capacity_mode == "structural":
@@ -435,6 +505,7 @@ class PMVEngine:
             b=self.b, strategy=meta["strategy"], theta=meta["theta"], psi=self.psi,
             exchange=self.exchange, capacity=self.capacity_mode, slack=self.slack,
             payload_dtype=self.payload_dtype, backend=self.backend,
+            scatter=self.scatter,
             pallas_interpret=self.pallas_interpret, base_weights=self.base_weights,
             mesh=self.mesh, axis_name=self.axis_name,
         )

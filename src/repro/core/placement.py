@@ -20,7 +20,7 @@ Mapping to the paper:
   exchange; the dense region's sub-vector v_d is small by construction
   (high-out-degree vertices only), so it is all-gathered (horizontal).
 
-Kernel backends (StepConfig.backend):
+Execution modes (planner.ExecutionPlan.mode, forced via StepConfig.backend):
 - 'xla' (default): the generic gather + segment-combine lowering below.
 - 'pallas': per-worker block compute runs the validated Pallas kernels —
   sparse stripes through the ELL semiring kernel (kernels/ell_spmv, packed
@@ -28,6 +28,15 @@ Kernel backends (StepConfig.backend):
   through the MXU/VPU dense kernel (kernels/block_gimv) on the materialized
   [n_local, b*d_cap] matrix.  Collectives, compaction and assign are shared
   with the xla path, so both backends are interchangeable per step.
+- 'planned' (backend='auto'): per-BLOCK tactics from the density-driven
+  ExecutionPlan (core/planner.py).  The _planned_* executors below group
+  same-tactic blocks into fused launches: skip blocks were dropped at pack
+  time, ell blocks run per degree-bucket ELL kernel calls over row-bucketed
+  slices (blocks.PlannedStripe), dense blocks run one fused MXU semiring
+  matmul; bucket/dense results scatter into one flat output vector (each
+  destination row lives in exactly one group, so plain ``set`` suffices).
+  The plan's ``scatter`` field additionally picks the receive side of the
+  sparse exchange: the XLA segment op or the Pallas scatter-combine kernel.
 """
 from __future__ import annotations
 
@@ -39,7 +48,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import sparse_exchange
-from repro.core.blocks import BlockEdges, DenseRegion, EllStripe
+from repro.core.blocks import BlockEdges, DenseRegion, EllStripe, PlannedStripe
 from repro.core.gimv import GimvSpec, combine2, combine_elementwise, segment_combine
 from repro.kernels.block_gimv import dense_gimv, dense_gimv_multi, semiring_of
 from repro.kernels.ell_spmv import ell_gimv, ell_gimv_multi
@@ -311,7 +320,134 @@ def _dense_region_gimv(spec: GimvSpec, dense_matrix, v_d, n_local: int,
     return dense_gimv(dense_matrix, v_flat, semiring=semiring, interpret=interpret)
 
 
-def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name):
+# --------------------------------------------------------------------------
+# Planned executors (mode='planned'): run an ExecutionPlan's per-block
+# tactics, grouping same-tactic blocks into fused kernel launches.
+# --------------------------------------------------------------------------
+
+def _scatter_set(out, rows, vals, drop):
+    """out[rows] = vals, with rows == -1 (stacking pads) routed to the drop
+    slot the caller slices off.  Rows are unique across all of a stripe's
+    buckets and dense blocks (a destination row lives in exactly one group),
+    so a plain ``set`` is the correct combine."""
+    safe = jnp.where(rows >= 0, rows, drop)
+    return out.at[safe].set(vals, mode="drop")
+
+
+def _planned_dense_call(spec: GimvSpec, matrix2d, operand, interpret: bool):
+    """One fused MXU/VPU launch over a dense group's materialized matrix."""
+    semiring = semiring_of(spec.combine2, spec.combine_all)
+    if operand.ndim == 2:
+        return dense_gimv_multi(matrix2d, operand, semiring=semiring, interpret=interpret)
+    return dense_gimv(matrix2d, operand, semiring=semiring, interpret=interpret)
+
+
+def _planned_merged_gimv(spec: GimvSpec, planned: PlannedStripe, v_local,
+                         n_local: int, axis_name, interpret: bool):
+    """Planned horizontal compute: per-bucket ELL launches + one dense-group
+    matmul against the flat all-gathered vector, scattered/combined into
+    r [n_local(, Q)] (emulation: [b_w, n_local(, Q)]).
+
+    Emulation folds the worker axis into the scatter space; the merged cols
+    already index the flat blocked vector (= the gathered vector every
+    worker holds), so only output rows need per-worker offsets.  The dense
+    group runs per worker (each worker gathers a different column slice) —
+    in SPMD, where it matters, it is one launch per worker either way."""
+    ident = jnp.asarray(spec.identity, spec.dtype)
+    if axis_name is None:
+        b_w = v_local.shape[0]
+        tail = v_local.shape[2:]
+        v_flat = v_local.reshape((b_w * n_local,) + tail)
+        drop = b_w * n_local
+        out = jnp.full((drop + 1,) + tail, ident, spec.dtype)
+        woff = (jnp.arange(b_w, dtype=jnp.int32) * n_local)[:, None]
+        for bucket in planned.buckets:
+            rows = jnp.where(bucket.rows >= 0, bucket.rows + woff, -1).reshape(-1)
+            cols2 = bucket.cols.reshape((-1,) + bucket.cols.shape[-1:])
+            w2 = None if bucket.w is None else bucket.w.reshape(cols2.shape)
+            r = ell_gimv_call(spec, cols2, w2, v_flat, interpret)
+            out = _scatter_set(out, rows, r, drop)
+        r_all = out[:drop].reshape((b_w, n_local) + tail)
+        if planned.dense is not None:
+            k = planned.dense.index.shape[-1]
+            r_ds = []
+            for wk in range(b_w):
+                operand = v_local[planned.dense.index[wk]].reshape((k * n_local,) + tail)
+                r_ds.append(_planned_dense_call(
+                    spec, planned.dense.matrix[wk], operand, interpret))
+            r_all = combine_elementwise(spec, r_all, jnp.stack(r_ds))
+        return r_all
+    v_all = _all_gather(v_local, axis_name)          # [b, n_local(, Q)]
+    tail = v_all.shape[2:]
+    v_flat = v_all.reshape((-1,) + tail)
+    out = jnp.full((n_local + 1,) + tail, ident, spec.dtype)
+    for bucket in planned.buckets:
+        r = ell_gimv_call(spec, bucket.cols, bucket.w, v_flat, interpret)
+        out = _scatter_set(out, bucket.rows, r, n_local)
+    r_all = out[:n_local]
+    if planned.dense is not None:
+        k = planned.dense.index.shape[-1]
+        operand = v_all[planned.dense.index].reshape((k * n_local,) + tail)
+        r_dense = _planned_dense_call(spec, planned.dense.matrix, operand, interpret)
+        r_all = combine_elementwise(spec, r_all, r_dense)
+    return r_all
+
+
+def _planned_vertical_partials(spec: GimvSpec, planned: PlannedStripe, v_local,
+                               n_local: int, axis_name, interpret: bool):
+    """Planned vertical compute: all destination-block partials via per-bucket
+    ELL launches + one fused dense-group matmul, scattered into the flat
+    partial space [b * n_local].  Returns partials [b, n_local(, Q)]
+    (emulation: [b_w, b, n_local(, Q)])."""
+    ident = jnp.asarray(spec.identity, spec.dtype)
+    b = planned.rows_out // n_local
+    if axis_name is None:
+        b_w = v_local.shape[0]
+        tail = v_local.shape[2:]
+        v_flat = v_local.reshape((b_w * n_local,) + tail)
+        drop = b_w * planned.rows_out
+        out = jnp.full((drop + 1,) + tail, ident, spec.dtype)
+        coff = (jnp.arange(b_w, dtype=jnp.int32) * n_local)[:, None, None]
+        roff = (jnp.arange(b_w, dtype=jnp.int32) * planned.rows_out)[:, None]
+        for bucket in planned.buckets:
+            cols = jnp.where(bucket.cols >= 0, bucket.cols + coff, -1)
+            cols2 = cols.reshape((-1,) + cols.shape[-1:])
+            w2 = None if bucket.w is None else bucket.w.reshape(cols2.shape)
+            rows = jnp.where(bucket.rows >= 0, bucket.rows + roff, -1).reshape(-1)
+            r = ell_gimv_call(spec, cols2, w2, v_flat, interpret)
+            out = _scatter_set(out, rows, r, drop)
+        if planned.dense is not None:
+            k = planned.dense.index.shape[-1]
+            ar = jnp.arange(n_local, dtype=jnp.int32)[None, :]
+            for wk in range(b_w):
+                m2 = planned.dense.matrix[wk].reshape(k * n_local, n_local)
+                r_d = _planned_dense_call(spec, m2, v_local[wk], interpret)
+                dix = planned.dense.index[wk][:, None]
+                rows_d = jnp.where(
+                    dix >= 0, wk * planned.rows_out + dix * n_local + ar, -1
+                ).reshape(-1)
+                out = _scatter_set(out, rows_d, r_d, drop)
+        return out[:drop].reshape((b_w, b, n_local) + tail)
+    tail = v_local.shape[1:]
+    drop = planned.rows_out
+    out = jnp.full((drop + 1,) + tail, ident, spec.dtype)
+    for bucket in planned.buckets:
+        r = ell_gimv_call(spec, bucket.cols, bucket.w, v_local, interpret)
+        out = _scatter_set(out, bucket.rows, r, drop)
+    if planned.dense is not None:
+        k = planned.dense.index.shape[-1]
+        m2 = planned.dense.matrix.reshape(k * n_local, n_local)
+        r_d = _planned_dense_call(spec, m2, v_local, interpret)
+        ar = jnp.arange(n_local, dtype=jnp.int32)[None, :]
+        rows_d = jnp.where(
+            planned.dense.index[:, None] >= 0,
+            planned.dense.index[:, None] * n_local + ar, -1).reshape(-1)
+        out = _scatter_set(out, rows_d, r_d, drop)
+    return out[:drop].reshape((b, n_local) + tail)
+
+
+def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name, *,
+                          scatter: str = "segment", interpret: bool = False):
     """Two-hop topology-aware exchange (beyond-paper, DESIGN §6 / §Perf).
 
     axis_name = (pod_axis, *intra_axes).  Partial rows are ordered by global
@@ -343,9 +479,11 @@ def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name):
     # hop 1: split the intra-pod destination axis, gather per-source rows
     idx_r = lax.all_to_all(idx3, inner, split_axis=1, concat_axis=1, tiled=True)
     val_r = lax.all_to_all(val3, inner, split_axis=1, concat_axis=1, tiled=True)
-    # combine the W intra-pod partials per destination pod
-    per_pod = jax.vmap(lambda i, v: sparse_exchange.scatter_partials(
-        spec, i, v.astype(spec.dtype), n_local))(idx_r, val_r)   # [P, n_local(, Q)]
+    # combine the W intra-pod partials per destination pod: the plan's
+    # receive-side tactic; scatter_partials folds the leading pod dim itself
+    per_pod = sparse_exchange.scatter_partials(
+        spec, idx_r, val_r.astype(spec.dtype), n_local,
+        method=scatter, interpret=interpret)                     # [P, n_local(, Q)]
     # hop 2: cross-pod exchange of the combined dense rows
     received = lax.all_to_all(per_pod, pod_axis, split_axis=0, concat_axis=0)
     if spec.combine_all == "sum":
@@ -386,10 +524,17 @@ def _num_queries(v_local, axis_name) -> int | None:
 
 def horizontal_step(spec: GimvSpec, stripe: BlockEdges, v_local, ctx_local, real_mask, *,
                     n_local: int, axis_name, ell: EllStripe | None = None,
+                    planned: PlannedStripe | None = None,
                     backend: str = "xla", interpret: bool = False):
     """Alg. 1: gather the whole vector, compute row stripe locally."""
     nq = _num_queries(v_local, axis_name)
-    if backend == "pallas" and ell is not None:
+    if backend == "planned" and planned is not None:
+        r = _planned_merged_gimv(spec, planned, v_local, n_local, axis_name, interpret)
+        if axis_name is not None:
+            v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
+        else:
+            v_new = jax.vmap(partial(_apply_assign, spec))(v_local, r, ctx_local, real_mask)
+    elif backend == "pallas" and ell is not None:
         r = _ell_gathered_gimv(spec, ell, v_local, n_local, axis_name, interpret)
         if axis_name is not None:
             v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
@@ -425,7 +570,9 @@ def vertical_step(
     capacity: int | None = None,
     payload_dtype=None,
     ell: EllStripe | None = None,
+    planned: PlannedStripe | None = None,
     backend: str = "xla",
+    scatter: str = "segment",
     interpret: bool = False,
 ):
     """Alg. 2: local column-stripe partials, exchange, combine at the owner.
@@ -438,13 +585,27 @@ def vertical_step(
     first element is the pod axis; SPMD only).  A trailing query axis on
     v_local batches all exchanges (hier ships [cap, Q] values on one shared
     index set per hop, like the flat sparse exchange).
+
+    backend='planned' computes the partials through the ExecutionPlan's
+    per-block tactics (``planned``) and compacts them in one vectorized pass;
+    ``scatter`` picks the receive-side combine (segment op | Pallas kernel).
     """
     nq = _num_queries(v_local, axis_name)
     use_pallas = backend == "pallas" and ell is not None
+    use_planned = backend == "planned" and planned is not None
+
+    def _planned_compact(v_):
+        partials_ = _planned_vertical_partials(
+            spec, planned, v_, n_local, axis_name, interpret)
+        return sparse_exchange.compact_partials(
+            spec, partials_, capacity, None, batched=nq is not None)
+
     if exchange == "hier":
         assert axis_name is not None and isinstance(axis_name, tuple) and len(axis_name) >= 2
         assert capacity is not None
-        if use_pallas:
+        if use_planned:
+            idx, val, overflow, logical = _planned_compact(v_local)
+        elif use_pallas:
             idx, val, overflow, logical = _ell_partials_compact(
                 spec, ell, v_local, n_local, capacity, axis_name, interpret)
         else:
@@ -454,7 +615,8 @@ def vertical_step(
             val = val.astype(payload_dtype)
         overflow = lax.psum(overflow, axis_name)
         logical = lax.psum(logical, axis_name)
-        r, hstats = hierarchical_exchange(spec, idx, val, n_local, axis_name)
+        r, hstats = hierarchical_exchange(spec, idx, val, n_local, axis_name,
+                                          scatter=scatter, interpret=interpret)
         v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
         stats = {
             "gathered_elems": jnp.asarray(0.0, jnp.float32),
@@ -465,7 +627,10 @@ def vertical_step(
         }
         return v_new, r, stats
     if exchange == "dense":
-        if use_pallas:
+        if use_planned:
+            partials = _planned_vertical_partials(
+                spec, planned, v_local, n_local, axis_name, interpret)
+        elif use_pallas:
             partials = _ell_block_partials(spec, ell, v_local, n_local, axis_name, interpret)
         else:
             compute = partial(block_gimv_partials, spec, n_local=n_local)
@@ -491,7 +656,9 @@ def vertical_step(
         }
     else:
         assert capacity is not None, "sparse exchange needs a static capacity"
-        if use_pallas:
+        if use_planned:
+            idx, val, overflow, logical = _planned_compact(v_local)
+        elif use_pallas:
             idx, val, overflow, logical = _ell_partials_compact(
                 spec, ell, v_local, n_local, capacity, axis_name, interpret)
         else:
@@ -507,13 +674,11 @@ def vertical_step(
             overflow, logical = jnp.sum(overflow), jnp.sum(logical)
         idx_x = _all_to_all(idx, axis_name)
         val_x = _all_to_all(val, axis_name)
-
-        def combine_fn(i_, v_):
-            return sparse_exchange.scatter_partials(spec, i_.astype(jnp.int32),
-                                                    v_.astype(spec.dtype), n_local)
-
-        fn2 = combine_fn if axis_name is not None else jax.vmap(combine_fn)
-        r = fn2(idx_x, val_x)
+        # receive side: the plan's scatter tactic (segment op | Pallas kernel);
+        # leading (emulation worker) dims are handled inside scatter_partials.
+        r = sparse_exchange.scatter_partials(
+            spec, idx_x.astype(jnp.int32), val_x.astype(spec.dtype), n_local,
+            method=scatter, interpret=interpret)
         b = idx.shape[-2]
         stats = {  # GLOBAL elements; idx word + (1 or Q) value words per slot
             "gathered_elems": jnp.asarray(0.0, jnp.float32),
@@ -543,8 +708,10 @@ def hybrid_step(
     capacity: int,
     payload_dtype=None,
     sparse_ell: EllStripe | None = None,
+    planned_sparse: PlannedStripe | None = None,
     dense_matrix=None,
     backend: str = "xla",
+    scatter: str = "segment",
     interpret: bool = False,
 ):
     """Alg. 4: vertical over the sparse region + horizontal over the dense
@@ -554,11 +721,16 @@ def hybrid_step(
     entries: [d_cap] per worker -> all_gather -> [b, d_cap]; its edges index
     it with (block, slot) pairs.  backend='pallas' runs the sparse region
     through the ELL kernel and the dense region as a semiring matmul against
-    the materialized ``dense_matrix`` [n_local, b*d_cap].
+    the materialized ``dense_matrix`` [n_local, b*d_cap]; backend='planned'
+    runs the sparse region per the ExecutionPlan's block tactics
+    (``planned_sparse``) and keeps the kernelized dense region (it IS the
+    region-level dense tactic).  ``scatter`` picks the receive-side combine.
     """
     # -- dense region: extract + all_gather the (small) dense sub-vector.
     # gather_idx is per-worker in SPMD ([d_cap]) / [b, d_cap] in emulation.
     nq = _num_queries(v_local, axis_name)
+    use_planned = backend == "planned" and planned_sparse is not None
+    use_dense_kernel = backend in ("pallas", "planned") and dense_matrix is not None
     use_pallas = backend == "pallas" and sparse_ell is not None and dense_matrix is not None
     if axis_name is not None:
         v_d = v_local[dense_region.gather_idx]  # [d_cap(, Q)]
@@ -567,7 +739,7 @@ def hybrid_step(
     else:
         v_d = jnp.take_along_axis(v_local, dense_region.gather_idx, axis=1)
 
-    if use_pallas:
+    if use_dense_kernel:
         r_dense = _dense_region_gimv(spec, dense_matrix, v_d, n_local, axis_name, interpret)
     else:
         v_d_all = _all_gather(v_d, axis_name)  # [b, d_cap(, Q)]
@@ -577,8 +749,13 @@ def hybrid_step(
             r_dense = jax.vmap(lambda s, va: gathered_gimv(spec, s, va, n_local))(
                 dense_stripe, v_d_all)
 
-    # -- sparse region: streamed vertical partials + compact exchange.
-    if use_pallas:
+    # -- sparse region: vertical partials + compact exchange.
+    if use_planned:
+        partials = _planned_vertical_partials(
+            spec, planned_sparse, v_local, n_local, axis_name, interpret)
+        idx, val, overflow, logical = sparse_exchange.compact_partials(
+            spec, partials, capacity, None, batched=nq is not None)
+    elif use_pallas:
         idx, val, overflow, logical = _ell_partials_compact(
             spec, sparse_ell, v_local, n_local, capacity, axis_name, interpret)
     else:
@@ -595,16 +772,16 @@ def hybrid_step(
     idx_x = _all_to_all(idx, axis_name)
     val_x = _all_to_all(val, axis_name)
 
-    def owner_combine(idx_r, val_r, r_dense_, v_local_, ctx_, mask_):
-        r_sparse = sparse_exchange.scatter_partials(spec, idx_r, val_r.astype(spec.dtype), n_local)
-        r = combine_elementwise(spec, r_sparse, r_dense_)
-        v_new = _apply_assign(spec, v_local_, r, ctx_, mask_)
-        return v_new, r
-
+    # owner combine: plan-selected receive-side scatter, then elementwise
+    # combineAll with the dense region and assign.
+    r_sparse = sparse_exchange.scatter_partials(
+        spec, idx_x.astype(jnp.int32), val_x.astype(spec.dtype), n_local,
+        method=scatter, interpret=interpret)
+    r = combine_elementwise(spec, r_sparse, r_dense)
     if axis_name is not None:
-        v_new, r = owner_combine(idx_x, val_x, r_dense, v_local, ctx_local, real_mask)
+        v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
     else:
-        v_new, r = jax.vmap(owner_combine)(idx_x, val_x, r_dense, v_local, ctx_local, real_mask)
+        v_new = jax.vmap(partial(_apply_assign, spec))(v_local, r, ctx_local, real_mask)
 
     b = idx.shape[-2]
     d_cap = dense_region.d_cap

@@ -1,0 +1,280 @@
+"""Per-block execution planner: density-driven ExecutionPlan (tentpole).
+
+The paper's central claim is that PMV wins by "judiciously applying execution
+strategies based on the density of the pre-partitioned sub-matrices".  The
+engine used to pick ONE strategy and ONE backend globally per solve; this
+module closes the gap with a three-stage pipeline:
+
+    planner (here)  ->  ExecutionPlan (static, hashable)  ->  executor
+
+At ``PMVEngine.prepare()`` time every b x b sub-block M^(i,j) is measured
+(nnz, max in-degree, flat-ELL padding occupancy) and classified with the
+cost model (cost_model.ell_block_cost / dense_block_cost) into a tactic:
+
+    skip  — structurally empty: dropped at pack time, zero per-iteration cost;
+    ell   — sparse kernel over ROW-BUCKETED ELL slices (degree buckets with
+            power-of-two widths cut the padding a skewed block pays under one
+            global d_cap);
+    dense — near-dense block materialized as a [n_local, n_local] semiring
+            matrix for the MXU kernel.
+
+The resulting :class:`ExecutionPlan` is a frozen, hashable pytree-of-metadata
+that ``blocks.pack_planned_stripe`` packs against, the ``placement._planned_*``
+executors run by grouping same-tactic blocks into fused kernel launches, and
+``engine.py`` / ``repro.serving`` consume in place of the former global
+``backend=`` branching (``backend='xla' | 'pallas'`` remain as forced
+overrides, recorded as plan modes; ``backend='auto'`` engages the planner).
+
+The plan also carries the receive-side tactic of the sparse exchange
+(``scatter``): 'segment' (the XLA segment-combine) or 'kernel' (the Pallas
+scatter-combine kernel, kernels/scatter_combine) — 'auto' resolves to the
+kernel only for planned mode on real TPU hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.blocks import BlockEdges
+from repro.core.sparse_exchange import SCATTER_METHODS
+
+__all__ = [
+    "BlockPlan",
+    "ExecutionPlan",
+    "bucket_boundaries",
+    "measure_blocks",
+    "plan_execution",
+    "format_plan",
+    "TACTICS",
+    "MODES",
+]
+
+TACTICS = ("skip", "ell", "dense")
+MODES = ("xla", "pallas", "planned")
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """Measured stats + chosen tactic for one pre-partitioned sub-block."""
+
+    i: int               # destination (segment) block
+    j: int               # source (gather) block
+    tactic: str          # 'skip' | 'ell' | 'dense'
+    nnz: int             # edges in M^(i,j)
+    rows: int            # destination rows with >= 1 edge
+    d_max: int           # max in-degree within the block
+    occupancy: float     # nnz / (rows * d_max): flat-ELL slot occupancy
+    cost: float          # predicted per-iteration compute cost (slot units)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Static, hashable execution plan for one prepared solve.
+
+    mode: 'planned' runs the per-block tactics; 'xla' / 'pallas' record the
+    forced global overrides (their executors ignore the tactic table, but
+    ``PMVEngine.explain()`` still reports it).
+    """
+
+    strategy: str                   # 'horizontal' | 'vertical' | 'hybrid'
+    mode: str                       # 'xla' | 'pallas' | 'planned'
+    b: int
+    n_local: int
+    theta: float | None
+    capacity: int | None
+    boundaries: tuple[int, ...]     # bucket width boundaries (ascending)
+    blocks: tuple[BlockPlan, ...]   # b*b entries, row-major (i, j)
+    scatter: str = "segment"        # receive-side tactic: 'segment' | 'kernel'
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+        assert self.scatter in SCATTER_METHODS, self.scatter
+        assert len(self.blocks) == self.b * self.b, (len(self.blocks), self.b)
+
+    def block(self, i: int, j: int) -> BlockPlan:
+        return self.blocks[i * self.b + j]
+
+    def tactics_for_worker(self, worker: int, layout: str) -> tuple[str, ...]:
+        """Per-inner-block tactics of one worker's stripe.
+
+        layout='vertical': worker j owns blocks (i, j), inner axis = i.
+        layout='merged': worker i owns blocks (i, jj), inner axis = jj.
+        """
+        if layout == "vertical":
+            return tuple(self.block(i, worker).tactic for i in range(self.b))
+        return tuple(self.block(worker, jj).tactic for jj in range(self.b))
+
+    def tactic_counts(self) -> dict[str, int]:
+        out = {t: 0 for t in TACTICS}
+        for bp in self.blocks:
+            out[bp.tactic] += 1
+        return out
+
+    @property
+    def flat_padded_slots(self) -> int:
+        """Slots the pre-plan flat layout touches: every non-empty block's
+        rows padded to the stripe-global d_cap (what stripe_to_ell packs)."""
+        d_cap = max((bp.d_max for bp in self.blocks), default=1)
+        return sum(bp.rows * d_cap for bp in self.blocks if bp.nnz)
+
+    @property
+    def planned_slots(self) -> float:
+        """Predicted slots under the plan (sum of per-block tactic costs)."""
+        return sum(bp.cost for bp in self.blocks)
+
+
+def bucket_boundaries(d_max: int, *, max_buckets: int = 8) -> tuple[int, ...]:
+    """Power-of-two ELL bucket widths up to d_max, capped at max_buckets
+    (dropping from the narrow end: low-degree rows then land in the smallest
+    remaining boundary, still correct, just slightly more padded)."""
+    bounds = []
+    d = 1
+    while d < max(d_max, 1):
+        bounds.append(d)
+        d *= 2
+    bounds.append(max(d_max, 1))
+    return tuple(bounds[-max_buckets:])
+
+
+def measure_blocks(
+    stripes: list[BlockEdges], b: int, *, stripe_axis: str
+) -> list[dict]:
+    """Per-block measured stats from per-worker stripes (host numpy).
+
+    stripe_axis='gat' (vertical stripes): stripes[j] inner block k is
+    M^(k, j).  stripe_axis='seg' (horizontal stripes): stripes[i] inner block
+    k is M^(i, k).  Returns b*b dicts, row-major (i, j), each with nnz, rows
+    (non-empty destination rows), d_max, and the degree histogram needed for
+    bucketed-slot costing.
+    """
+    assert stripe_axis in ("gat", "seg")
+    out = [None] * (b * b)
+    for worker, stripe in enumerate(stripes):
+        counts = np.asarray(stripe.count)
+        for k in range(b):
+            i, j = (k, worker) if stripe_axis == "gat" else (worker, k)
+            cnt = int(counts[k])
+            if cnt:
+                seg = np.asarray(stripe.seg_local[k, :cnt])
+                deg = np.bincount(seg)
+                deg = deg[deg > 0]
+                rec = {"nnz": cnt, "rows": int(deg.size),
+                       "d_max": int(deg.max()), "deg": deg}
+            else:
+                rec = {"nnz": 0, "rows": 0, "d_max": 0,
+                       "deg": np.zeros(0, np.int64)}
+            out[i * b + j] = rec
+    return out
+
+
+def _merged_d_max(stripe: BlockEdges) -> int:
+    """Max per-row in-degree of a horizontal stripe with all inner (source)
+    blocks merged — what the merged ELL layout buckets by."""
+    counts = np.asarray(stripe.count)
+    segs = [np.asarray(stripe.seg_local[k, : int(counts[k])])
+            for k in range(stripe.seg_local.shape[0]) if int(counts[k])]
+    if not segs:
+        return 1
+    deg = np.bincount(np.concatenate(segs))
+    return max(int(deg.max()), 1)
+
+
+def _classify(
+    rec: dict, i: int, j: int, n_local: int, boundaries: tuple[int, ...],
+    mxu_advantage: float,
+) -> BlockPlan:
+    if rec["nnz"] == 0:
+        return BlockPlan(i=i, j=j, tactic="skip", nnz=0, rows=0, d_max=0,
+                         occupancy=0.0, cost=0.0)
+    bounds = np.asarray(boundaries, dtype=np.int64)
+    widths = bounds[np.searchsorted(bounds, rec["deg"], side="left")]
+    ell_cost = cost_model.ell_block_cost(int(widths.sum()))
+    dense_cost = cost_model.dense_block_cost(n_local, mxu_advantage)
+    tactic = "dense" if dense_cost < ell_cost else "ell"
+    occ = rec["nnz"] / float(rec["rows"] * rec["d_max"])
+    return BlockPlan(i=i, j=j, tactic=tactic, nnz=rec["nnz"], rows=rec["rows"],
+                     d_max=rec["d_max"], occupancy=round(occ, 4),
+                     cost=min(ell_cost, dense_cost))
+
+
+def plan_execution(
+    pm,
+    hm,
+    *,
+    strategy: str,
+    mode: str,
+    theta: float | None = None,
+    capacity: int | None = None,
+    scatter: str = "auto",
+    max_buckets: int = 8,
+    mxu_advantage: float = cost_model.MXU_SLOT_ADVANTAGE,
+    interpret: bool = False,
+) -> ExecutionPlan:
+    """Measure + classify every sub-block of the strategy's stripes.
+
+    pm / hm: PartitionedMatrix / HybridMatrix | None from partition_graph.
+    For 'hybrid' the table covers the sparse-region blocks (the dense region
+    is a region-level dense tactic by construction, paper §3.5).  The tactic
+    table is always built — forced modes ('xla' / 'pallas') carry it for
+    ``explain()`` even though their executors ignore it.
+    """
+    assert mode in MODES, mode
+    if strategy == "hybrid":
+        assert hm is not None
+        stripes, axis = hm.sparse_vertical, "gat"
+    elif strategy == "vertical":
+        stripes, axis = pm.vertical, "gat"
+    else:
+        stripes, axis = pm.horizontal, "seg"
+    b = pm.part.b
+    n_local = pm.part.n_local
+
+    recs = measure_blocks(stripes, b, stripe_axis=axis)
+    if strategy == "horizontal":
+        # merged layout: a destination row's ELL slots merge ALL its source
+        # blocks, so buckets size to the full per-row in-degree, not the
+        # per-block maximum.
+        d_max = max((_merged_d_max(s) for s in stripes), default=1)
+    else:
+        d_max = max((r["d_max"] for r in recs), default=1)
+    boundaries = bucket_boundaries(d_max, max_buckets=max_buckets)
+    blocks = tuple(
+        _classify(recs[i * b + j], i, j, n_local, boundaries, mxu_advantage)
+        for i in range(b) for j in range(b))
+
+    if scatter == "auto":
+        # The one-hot scatter-combine kernel only pays on real TPU hardware;
+        # interpret mode (CPU hosts) keeps the XLA segment lowering.
+        scatter = "kernel" if (mode == "planned" and not interpret) else "segment"
+    return ExecutionPlan(
+        strategy=strategy, mode=mode, b=b, n_local=n_local, theta=theta,
+        capacity=capacity, boundaries=boundaries, blocks=blocks, scatter=scatter)
+
+
+def format_plan(plan: ExecutionPlan, *, extra: dict | None = None) -> str:
+    """Human-readable plan report (PMVEngine.explain)."""
+    lines = [
+        f"ExecutionPlan: strategy={plan.strategy} mode={plan.mode}"
+        + (f" theta={plan.theta}" if plan.theta is not None else "")
+        + (f" capacity={plan.capacity}" if plan.capacity is not None else "")
+        + f" scatter={plan.scatter}",
+        f"  b={plan.b} n_local={plan.n_local} ell_buckets={plan.boundaries}",
+    ]
+    for k, v in (extra or {}).items():
+        lines.append(f"  {k}={v}")
+    counts = plan.tactic_counts()
+    lines.append("  tactics: " + " ".join(f"{t}={counts[t]}" for t in TACTICS))
+    flat, planned = plan.flat_padded_slots, plan.planned_slots
+    if flat:
+        lines.append(
+            f"  ELL padded slots: flat {flat} -> planned {planned:.0f}"
+            f" ({flat / max(planned, 1.0):.2f}x fewer)")
+    hdr = f"  {'block':>8}  {'tactic':<6} {'nnz':>8} {'rows':>6} {'d_max':>6} {'occ':>6} {'cost':>10}"
+    lines.append(hdr)
+    for bp in plan.blocks:
+        lines.append(
+            f"  ({bp.i:>2},{bp.j:>2})  {bp.tactic:<6} {bp.nnz:>8} {bp.rows:>6}"
+            f" {bp.d_max:>6} {bp.occupancy:>6.3f} {bp.cost:>10.0f}")
+    return "\n".join(lines)

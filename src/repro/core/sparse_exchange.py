@@ -125,15 +125,44 @@ def compact_partials(spec: GimvSpec, partials: jnp.ndarray, capacity: int, axis_
     return idx, val, overflow, logical
 
 
-def scatter_partials(spec: GimvSpec, idx: jnp.ndarray, val: jnp.ndarray, n_local: int) -> jnp.ndarray:
-    """combineAll of received compact partials: [b, cap] x2 -> r [n_local].
+SCATTER_METHODS = ("segment", "kernel")
 
-    A trailing query axis on ``val`` ([b, cap, Q] with idx [b, cap]) combines
-    columnwise and returns r [n_local, Q].
+
+def scatter_partials(spec: GimvSpec, idx: jnp.ndarray, val: jnp.ndarray, n_local: int, *,
+                     method: str = "segment", interpret: bool = False) -> jnp.ndarray:
+    """combineAll of received compact partials: [..., b, cap] x2 -> r [..., n_local].
+
+    A trailing query axis on ``val`` ([..., b, cap, Q] with idx [..., b, cap])
+    combines columnwise and returns r [..., n_local, Q].
+
+    method selects the receive-side tactic (planner.ExecutionPlan.scatter):
+    'segment' — the XLA segment-combine lowering; 'kernel' — the Pallas
+    one-hot scatter-combine kernel (kernels/scatter_combine), numerically
+    identical for the selection semirings and allclose for plus_times.
+    Leading dims beyond [b, cap] (the emulation worker axis) are folded by
+    offsetting each set into its own (n_local + 1)-wide output segment, so
+    the kernel is never vmapped.
     """
-    if val.ndim == idx.ndim + 1:
-        q = val.shape[-1]
-        r = segment_combine(spec, val.reshape(-1, q), idx.reshape(-1), n_local + 1)
+    assert method in SCATTER_METHODS, method
+    batched = val.ndim == idx.ndim + 1
+    q = val.shape[-1] if batched else None
+    lead = idx.shape[:-2]
+    n_sets = math.prod(lead) if lead else 1
+    seg_w = n_local + 1                     # per-set drop slot at n_local
+    idx2 = idx.reshape(n_sets, -1)
+    off = jnp.arange(n_sets, dtype=jnp.int32)[:, None] * seg_w
+    flat_idx = (idx2.astype(jnp.int32) + off).reshape(-1)
+    flat_val = val.reshape((flat_idx.shape[0], q) if batched else (-1,))
+    if method == "kernel":
+        from repro.kernels.block_gimv import semiring_of
+        from repro.kernels.scatter_combine import (
+            scatter_combine_gimv, scatter_combine_gimv_multi)
+
+        semiring = semiring_of(spec.combine2, spec.combine_all)
+        fn = scatter_combine_gimv_multi if batched else scatter_combine_gimv
+        out = fn(flat_idx, flat_val, n_sets * seg_w, semiring=semiring,
+                 interpret=interpret)
     else:
-        r = segment_combine(spec, val.reshape(-1), idx.reshape(-1), n_local + 1)
-    return r[:n_local]
+        out = segment_combine(spec, flat_val, flat_idx, n_sets * seg_w)
+    out = out.reshape(lead + ((seg_w, q) if batched else (seg_w,)))
+    return out[..., :n_local, :] if batched else out[..., :n_local]

@@ -1,0 +1,74 @@
+"""Jit'd public wrappers for the scatter-combine kernel (pad + dispatch)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scatter_combine.scatter_combine import (
+    SEMIRINGS,
+    scatter_combine_multi_pallas,
+    scatter_combine_pallas,
+)
+
+__all__ = ["scatter_combine_gimv", "scatter_combine_gimv_multi"]
+
+
+@partial(jax.jit, static_argnames=("n_out", "semiring", "tile_n", "tile_t", "interpret"))
+def scatter_combine_gimv(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    n_out: int,
+    *,
+    semiring: str,
+    tile_n: int = 128,
+    tile_t: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Scatter-combine with automatic tile padding.  idx/val: [T] -> [n_out].
+
+    Pad entries (idx < 0 or idx >= n_out) contribute the combineAll identity.
+    """
+    assert semiring in SEMIRINGS
+    (T,) = idx.shape
+    Tp = max(-(-T // tile_t) * tile_t, tile_t)
+    Np = -(-n_out // tile_n) * tile_n
+    if Tp != T:
+        idx = jnp.pad(idx, (0, Tp - T), constant_values=-1)
+        val = jnp.pad(val, (0, Tp - T))
+    out = scatter_combine_pallas(
+        idx.astype(jnp.int32), val, Np, semiring=semiring, out_dtype=val.dtype,
+        tile_n=tile_n, tile_t=tile_t, interpret=interpret)
+    return out[:n_out]
+
+
+@partial(jax.jit, static_argnames=("n_out", "semiring", "tile_n", "tile_t", "tile_q", "interpret"))
+def scatter_combine_gimv_multi(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    n_out: int,
+    *,
+    semiring: str,
+    tile_n: int = 128,
+    tile_t: int = 128,
+    tile_q: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Multi-query scatter-combine with automatic tile padding.
+
+    idx: [T], val: [T, Q] -> r [n_out, Q]."""
+    assert semiring in SEMIRINGS
+    T, Q = val.shape
+    Tp = max(-(-T // tile_t) * tile_t, tile_t)
+    Np = -(-n_out // tile_n) * tile_n
+    Qp = -(-Q // tile_q) * tile_q
+    if Tp != T:
+        idx = jnp.pad(idx, (0, Tp - T), constant_values=-1)
+        val = jnp.pad(val, ((0, Tp - T), (0, 0)))
+    if Qp != Q:
+        val = jnp.pad(val, ((0, 0), (0, Qp - Q)))
+    out = scatter_combine_multi_pallas(
+        idx.astype(jnp.int32), val, Np, semiring=semiring, out_dtype=val.dtype,
+        tile_n=tile_n, tile_t=tile_t, tile_q=tile_q, interpret=interpret)
+    return out[:n_out, :Q]

@@ -1,0 +1,19 @@
+"""Reference (XLA segment-op) implementations for kernel parity tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_combine_ref(idx: jnp.ndarray, val: jnp.ndarray, n_out: int, *,
+                        semiring: str) -> jnp.ndarray:
+    """Segment-op reference of scatter_combine_gimv[_multi]: out-of-range idx
+    (including < 0) is dropped; empty outputs get the combineAll identity."""
+    seg = jnp.where((idx >= 0) & (idx < n_out), idx, n_out)
+    if semiring == "plus_times":
+        op = jax.ops.segment_sum
+    elif semiring in ("min_plus", "min_src"):
+        op = jax.ops.segment_min
+    else:
+        op = jax.ops.segment_max
+    return op(val, seg, num_segments=n_out + 1)[:n_out]

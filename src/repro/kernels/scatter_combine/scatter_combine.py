@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: scatter-combine for the sparse-exchange receive side.
+
+``sparse_exchange.scatter_partials`` folds the received compact partials
+(idx, val) into the owner's result vector r[n_local] with the semiring's
+combineAll.  The XLA lowering is a segment op — serial scatter traffic on
+TPU.  This kernel recasts it as tiled one-hot reduction work:
+
+    onehot[n, t] = (idx[t] == n)            over a (TN, TI) tile
+    r[n]        = combineAll_t where(onehot[n, t], val[t], identity)
+
+For plus_times the inner reduce IS a matmul (onehot @ val) and runs on the
+MXU; the tropical semirings reduce on the VPU.  The output tile is revisited
+along the idx-tile grid axis and accumulated in place — the same pattern as
+the dense / ELL kernels.
+
+Pad entries use idx = -1 (or any index outside the covered range): they
+match no one-hot row and contribute the identity.  Compare-and-reduce work
+is O(T * n_out / tile) — worth it when the serial scatter dominates (large
+fan-in partials on real hardware); interpret mode is for parity tests only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.block_gimv.block_gimv import SEMIRINGS, _combine_all, _identity
+
+
+def _scatter_combine_kernel(idx_ref, val_ref, o_ref, *, semiring: str, tile_n: int):
+    t = pl.program_id(1)
+    base = pl.program_id(0) * tile_n
+    idx = idx_ref[...]                       # (1, TI) int32; <0 or out-of-tile = no-op
+    targets = base + jax.lax.broadcasted_iota(jnp.int32, (tile_n, 1), 0)
+    onehot = idx == targets                  # (TN, TI)
+    ident = _identity(semiring, o_ref.dtype)
+    if semiring == "plus_times":
+        part = jax.lax.dot_general(
+            onehot.astype(o_ref.dtype), val_ref[...].astype(o_ref.dtype),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=o_ref.dtype,
+        )                                    # (TN, 1) — MXU
+    else:
+        x = jnp.where(onehot, val_ref[...].astype(o_ref.dtype), ident)
+        if semiring in ("min_plus", "min_src"):
+            part = jnp.min(x, axis=1, keepdims=True)
+        else:
+            part = jnp.max(x, axis=1, keepdims=True)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(t != 0)
+    def _acc():
+        o_ref[...] = _combine_all(semiring, o_ref[...], part)
+
+
+def scatter_combine_pallas(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    n_out: int,
+    *,
+    semiring: str,
+    out_dtype=None,
+    tile_n: int = 128,
+    tile_t: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """r[n] = combineAll_{t : idx[t] == n} val[t]; empty n -> identity.
+
+    idx/val: [T]; T % tile_t == 0 and n_out % tile_n == 0 (ops.py pads).
+    """
+    assert semiring in SEMIRINGS
+    (T,) = idx.shape
+    assert T % tile_t == 0 and n_out % tile_n == 0, (T, n_out, tile_t, tile_n)
+    out_dtype = out_dtype or val.dtype
+
+    grid = (n_out // tile_n, T // tile_t)
+    out = pl.pallas_call(
+        functools.partial(_scatter_combine_kernel, semiring=semiring, tile_n=tile_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_t), lambda i, t: (0, t)),
+            pl.BlockSpec((1, tile_t), lambda i, t: (0, t)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), lambda i, t: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, 1), out_dtype),
+        interpret=interpret,
+    )(idx[None, :], val[None, :])
+    return out[:, 0]
+
+
+def _scatter_combine_multi_kernel(idx_ref, val_ref, o_ref, *, semiring: str, tile_n: int):
+    t = pl.program_id(2)
+    base = pl.program_id(0) * tile_n
+    idx = idx_ref[...]                       # (1, TI)
+    targets = base + jax.lax.broadcasted_iota(jnp.int32, (tile_n, 1), 0)
+    onehot = idx == targets                  # (TN, TI)
+    ident = _identity(semiring, o_ref.dtype)
+    val = val_ref[...]                       # (TI, TQ)
+    if semiring == "plus_times":
+        part = jax.lax.dot_general(
+            onehot.astype(o_ref.dtype), val.astype(o_ref.dtype),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=o_ref.dtype,
+        )                                    # (TN, TQ) — MXU at full width
+    else:
+        x = jnp.where(onehot[:, :, None], val[None, :, :].astype(o_ref.dtype), ident)
+        if semiring in ("min_plus", "min_src"):
+            part = jnp.min(x, axis=1)
+        else:
+            part = jnp.max(x, axis=1)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(t != 0)
+    def _acc():
+        o_ref[...] = _combine_all(semiring, o_ref[...], part)
+
+
+def scatter_combine_multi_pallas(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    n_out: int,
+    *,
+    semiring: str,
+    out_dtype=None,
+    tile_n: int = 128,
+    tile_t: int = 128,
+    tile_q: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Multi-query scatter-combine: idx [T], val [T, Q] -> r [n_out, Q] (the
+    serving wire format — Q values ride each shipped index).  The (TN, TI,
+    TQ) tropical temporary bounds TQ; plus_times is a pure MXU matmul."""
+    assert semiring in SEMIRINGS
+    T, Q = val.shape
+    assert idx.shape == (T,), (idx.shape, val.shape)
+    assert T % tile_t == 0 and n_out % tile_n == 0 and Q % tile_q == 0, (
+        T, n_out, Q, tile_t, tile_n, tile_q)
+    out_dtype = out_dtype or val.dtype
+
+    grid = (n_out // tile_n, Q // tile_q, T // tile_t)
+    return pl.pallas_call(
+        functools.partial(_scatter_combine_multi_kernel, semiring=semiring, tile_n=tile_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_t), lambda i, q, t: (0, t)),
+            pl.BlockSpec((tile_t, tile_q), lambda i, q, t: (t, q)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, tile_q), lambda i, q, t: (i, q)),
+        out_shape=jax.ShapeDtypeStruct((n_out, Q), out_dtype),
+        interpret=interpret,
+    )(idx[None, :], val)

@@ -206,6 +206,7 @@ class PMVServer:
         slack: float = 1.5,
         payload_dtype: str | None = None,
         backend: str = "xla",
+        scatter: str = "auto",
         pallas_interpret: bool | None = None,
         base_weights: np.ndarray | None = None,
         buckets: tuple[int, ...] = DEFAULT_BUCKETS,
@@ -222,7 +223,7 @@ class PMVServer:
         self._engine_kwargs = dict(
             b=b, strategy=strategy, theta=theta, psi=psi, exchange=exchange,
             capacity=capacity, slack=slack, payload_dtype=payload_dtype,
-            backend=backend, pallas_interpret=pallas_interpret,
+            backend=backend, scatter=scatter, pallas_interpret=pallas_interpret,
             base_weights=base_weights, mesh=mesh, axis_name=axis_name,
         )
         self._batcher = QueryBatcher(buckets)

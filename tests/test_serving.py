@@ -186,3 +186,43 @@ def test_batcher_bucket_policy_and_fifo():
     key2, batch2 = qb.next_batch()
     assert key2 == ("sssp",) and batch2[0].source == 2
     assert qb.next_batch() is None
+
+
+@pytest.mark.slow
+def test_serving_spmd_batched_matches_emulation():
+    """make_batched_step's SPMD shard_map path on an 8-device emulated mesh:
+    the batched serving answers (pagerank / rwr / sssp / cc families, i.e.
+    three kernel semirings, through the planner's backend='auto') match the
+    emulation-mode server bitwise-tolerably (ROADMAP follow-up shipped)."""
+    import os
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.graph import erdos_renyi
+from repro.serving import PMVServer, Query
+n = 128
+edges = erdos_renyi(n, 700, seed=9)
+def queries():
+    return ([Query("rwr", source=s, tol=1e-7) for s in (3, 50, 101)]
+            + [Query("sssp", source=2), Query("cc"), Query("pagerank", tol=1e-7)])
+res = {}
+for key, kw in {
+    "emul": dict(backend="auto"),
+    "spmd": dict(backend="auto", mesh=jax.make_mesh((8,), ("workers",))),
+    "xla": dict(),
+}.items():
+    srv = PMVServer(edges, n, b=8, strategy="hybrid", theta=8.0, buckets=(4,), **kw)
+    res[key] = srv.serve(queries())
+for re_, rs, rx in zip(res["emul"], res["spmd"], res["xla"]):
+    np.testing.assert_allclose(rs.vector, re_.vector, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(re_.vector, rx.vector, rtol=1e-5, atol=1e-7)
+print("SERVING-SPMD-OK")
+"""
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=560,
+                         env={**os.environ, "PYTHONPATH": "src"}, cwd="/root/repo")
+    assert "SERVING-SPMD-OK" in out.stdout, (out.stdout, out.stderr[-2000:])
