@@ -46,7 +46,9 @@ __all__ = [
     "PlannedStripe",
     "pack_bucketed_ell",
     "pack_planned_stripe",
+    "pack_streamed_stripe",
     "stack_planned",
+    "stack_streamed",
     "planned_to_edges",
 ]
 
@@ -614,6 +616,129 @@ def stack_planned(stripes: list[PlannedStripe], semiring: str) -> PlannedStripe:
         dense = DenseGroup(matrix=np.stack(mats), index=np.stack(idxs))
     return PlannedStripe(buckets=tuple(out_buckets), dense=dense,
                          rows_out=stripes[0].rows_out, layout=layout)
+
+
+def pack_streamed_stripe(
+    stripe: BlockEdges,
+    tactics: tuple[str, ...],
+    n_local: int,
+    *,
+    boundaries: tuple[int, ...],
+    semiring: str,
+) -> PlannedStripe:
+    """Bucketed-ELL slices REGROUPED PER DESTINATION BLOCK for the streamed
+    executor (planner.ExecutionPlan.stream='on', the per-destination-block
+    launch schedule of ``ExecutionPlan.launch_schedule``).
+
+    Where ``pack_planned_stripe(layout='vertical')`` fuses all ell-tactic
+    blocks of a worker's stripe into stripe-wide buckets over the flat
+    [b * n_local] output space, this packer keeps a leading destination-block
+    axis so ``lax.scan`` can run one block's launches at a time: bucket k is
+    rows [b, R_k] (block-LOCAL destination rows, -1 = pad; R_k = the max row
+    count of bucket k over the b blocks) with cols [b, R_k, boundaries[k]]
+    (worker-local sources, -1 = pad).  Dense-tactic blocks keep the
+    'vertical' DenseGroup layout (matrix [k, n_local, n_local], index [k]) —
+    they run as per-block MXU launches outside the scan.  rows_out stays
+    b * n_local (the flat partial space both schedules feed the exchange
+    from), layout='streamed'.
+    """
+    b = stripe.seg_local.shape[0]
+    counts = np.asarray(stripe.count)
+    has_w = stripe.w is not None
+    empty = np.zeros(0, np.int64)
+
+    per_block: list[tuple] = []
+    dense_mats: list[np.ndarray] = []
+    dense_index: list[int] = []
+    for k in range(b):
+        cnt = int(counts[k])
+        seg = np.asarray(stripe.seg_local[k, :cnt], dtype=np.int64)
+        gat = np.asarray(stripe.gat_local[k, :cnt], dtype=np.int64)
+        wk = np.asarray(stripe.w[k, :cnt]) if has_w else None
+        if tactics[k] == "dense" and cnt:
+            dense_mats.append(materialize_dense_block(seg, gat, wk, n_local, semiring))
+            dense_index.append(k)
+            seg, gat, wk = empty, empty, (empty.astype(np.float32) if has_w else None)
+        elif tactics[k] == "skip" or cnt == 0:
+            seg, gat, wk = empty, empty, (empty.astype(np.float32) if has_w else None)
+        per_block.append(pack_bucketed_ell(seg, gat, wk, boundaries))
+
+    out_buckets = []
+    for kk, cap_k in enumerate(boundaries):
+        bs = [pb[kk] for pb in per_block]
+        r_max = max(x.rows.shape[0] for x in bs)
+        rows = np.stack([_pad_to(x.rows, r_max, -1) for x in bs])
+        cols = np.stack([
+            np.concatenate([x.cols, np.full((r_max - x.rows.shape[0], cap_k), -1, np.int32)])
+            for x in bs])
+        w = None
+        if has_w:
+            w = np.stack([
+                np.concatenate([x.w, np.zeros((r_max - x.rows.shape[0], cap_k), np.float32)])
+                for x in bs])
+        out_buckets.append(EllBucket(rows=rows, cols=cols, w=w))
+
+    dense = None
+    if dense_mats:
+        dense = DenseGroup(matrix=np.stack(dense_mats),
+                           index=np.asarray(dense_index, np.int32))
+    return PlannedStripe(buckets=tuple(out_buckets), dense=dense,
+                         rows_out=b * n_local, layout="streamed")
+
+
+def stack_streamed(
+    stripes: list[PlannedStripe], semiring: str, *, worker_axis: int = 0
+) -> PlannedStripe:
+    """b per-worker streamed stripes -> one stripe with a worker axis.
+
+    worker_axis=0 stacks bucket arrays [b_w, b, R, D] for shard_map (the
+    leading axis is what the mesh splits); worker_axis=1 stacks them
+    scan-major [b, b_w, R, D] for emulation mode, so the executor's
+    ``lax.scan`` over destination blocks slices the leading axis without a
+    whole-table transpose temporary.  Buckets pad R to the cross-worker max
+    (rows/cols = -1) and are dropped when empty on EVERY (worker, block);
+    dense groups stay worker-leading in both modes (the executor unrolls
+    them per worker) and pad like ``stack_planned``'s vertical layout."""
+    assert worker_axis in (0, 1), worker_axis
+    n_buckets = len(stripes[0].buckets)
+    fill, _ = SEMIRING_FILL_FOLD[semiring]
+
+    out_buckets = []
+    for k in range(n_buckets):
+        bs = [s.buckets[k] for s in stripes]
+        r_max = max(x.rows.shape[-1] for x in bs)
+        if r_max == 0:
+            continue
+        has_w = bs[0].w is not None
+        rows = np.stack([
+            np.pad(x.rows, ((0, 0), (0, r_max - x.rows.shape[-1])), constant_values=-1)
+            for x in bs], axis=worker_axis)
+        cols = np.stack([
+            np.pad(x.cols, ((0, 0), (0, r_max - x.rows.shape[-1]), (0, 0)),
+                   constant_values=-1)
+            for x in bs], axis=worker_axis)
+        w = None
+        if has_w:
+            w = np.stack([
+                np.pad(x.w, ((0, 0), (0, r_max - x.rows.shape[-1]), (0, 0)))
+                for x in bs], axis=worker_axis)
+        out_buckets.append(EllBucket(rows=rows, cols=cols, w=w))
+
+    k_max = max((0 if s.dense is None else s.dense.index.shape[0]) for s in stripes)
+    dense = None
+    if k_max:
+        nl = _dense_nl(stripes)
+        mats, idxs = [], []
+        for s in stripes:
+            k_s = 0 if s.dense is None else s.dense.index.shape[0]
+            m = s.dense.matrix if k_s else np.zeros((0, nl, nl), np.float32)
+            pad = np.full((k_max - k_s, nl, nl), fill, np.float32)
+            mats.append(np.concatenate([m, pad]) if k_max - k_s else m)
+            idx = s.dense.index if k_s else np.zeros(0, np.int32)
+            idxs.append(_pad_to(idx, k_max, -1))
+        dense = DenseGroup(matrix=np.stack(mats), index=np.stack(idxs))
+    return PlannedStripe(buckets=tuple(out_buckets), dense=dense,
+                         rows_out=stripes[0].rows_out, layout="streamed")
 
 
 def _dense_nl(stripes: list[PlannedStripe]) -> int:

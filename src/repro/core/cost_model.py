@@ -28,6 +28,12 @@ __all__ = [
     "theta_star",
     "ici_seconds",
     "HW",
+    "materialized_partial_elems",
+    "streamed_partial_elems",
+    "prefer_streamed",
+    "kernel_scatter_cost",
+    "segment_scatter_cost",
+    "prefer_kernel_scatter",
 ]
 
 
@@ -149,6 +155,87 @@ def dense_block_cost(n_local: int, mxu_advantage: float = MXU_SLOT_ADVANTAGE) ->
     """Per-iteration compute cost of a dense-tactic block: the MXU streams
     all n_local^2 cells, each ~1/mxu_advantage of a gather slot."""
     return n_local * n_local / mxu_advantage
+
+
+# ---------------------------------------------------------------------------
+# Streamed vs materialized planned execution (planner.ExecutionPlan.stream).
+#
+# The paper's Alg. 2 never holds all b partial vectors v^(i,j) at once — each
+# is stored to distributed storage as it is produced.  The planned executor
+# can either materialize all partials before compaction (one fused launch per
+# bucket, the fastest schedule when everything fits) or scan destination
+# blocks and compact each partial immediately (O(n_local + b*cap) live
+# memory, the paper's headline scalability property).  Streaming pays b
+# sequential launch groups, so tiny b — where the materialized buffer is only
+# a small multiple of the streamed one — keeps the fused fast path.
+# ---------------------------------------------------------------------------
+
+# Minimum live-memory reduction factor before the planner trades the fused
+# launch schedule for the b-step streamed scan.
+STREAM_MIN_SAVINGS = 2.0
+
+
+def materialized_partial_elems(b: int, n_local: int) -> int:
+    """Live partial-buffer elements (per worker) of the fused planned
+    executor: all b destination-block partials at once."""
+    return b * n_local
+
+
+def streamed_partial_elems(b: int, n_local: int, capacity: int) -> int:
+    """Live partial-buffer elements (per worker) of the bucket-streamed
+    executor: one [n_local] partial in flight + the fixed [b, cap] compact
+    exchange buffer."""
+    return n_local + b * min(capacity, n_local)
+
+
+def prefer_streamed(b: int, n_local: int, capacity: int) -> bool:
+    """stream='auto' crossover: stream only when the materialized buffer is
+    at least STREAM_MIN_SAVINGS x the streamed profile, so small-b solves
+    keep the fused fast path and web-scale b gets Alg. 2's memory bound."""
+    mat = materialized_partial_elems(b, n_local)
+    return mat >= STREAM_MIN_SAVINGS * streamed_partial_elems(b, n_local, capacity)
+
+
+# ---------------------------------------------------------------------------
+# Receive-side scatter tactic (planner.ExecutionPlan.scatter).
+#
+# The Pallas scatter-combine kernel recasts the serial segment scatter as
+# tiled one-hot reduction work: T received slots x n_out output rows on the
+# MXU/VPU, vs T serial random-access writes for the XLA segment op.  The
+# kernel's work grows with n_out while the segment op's does not, so the
+# crossover is a pure n_out threshold (T divides out).  Interpret mode
+# (CPU hosts) executes the tiles scalar-wise — the slot advantage becomes a
+# penalty and the segment op always wins there.
+# ---------------------------------------------------------------------------
+
+# One serial random-access scatter write costs ~16 gather-slot units (read +
+# write + address dependency stall), vs the MXU streaming n_out one-hot
+# slots at 1/MXU_SLOT_ADVANTAGE each.  Calibrate on hardware like
+# MXU_SLOT_ADVANTAGE; the crossover n_out = 16 * 8 = 128 only needs to be
+# right within ~2x.
+SERIAL_SCATTER_SLOT_COST = 16.0
+
+# Interpret mode emulates the kernel's tiles with scalar host ops — the MXU
+# advantage inverts into a large penalty, so the crossover never fires.
+INTERPRET_SLOT_PENALTY = 64.0
+
+
+def kernel_scatter_cost(t: float, n_out: int, *, interpret: bool = False,
+                        mxu_advantage: float = MXU_SLOT_ADVANTAGE) -> float:
+    """One-hot scatter-combine kernel cost: T x n_out slots on the MXU."""
+    adv = mxu_advantage / INTERPRET_SLOT_PENALTY if interpret else mxu_advantage
+    return t * n_out / adv
+
+
+def segment_scatter_cost(t: float) -> float:
+    """XLA segment-op cost: T serial random-access scatter writes."""
+    return t * SERIAL_SCATTER_SLOT_COST
+
+
+def prefer_kernel_scatter(t: float, n_out: int, *, interpret: bool = False) -> bool:
+    """scatter='auto' crossover: take the one-hot kernel only while its
+    T*n_out streamed work undercuts T serial scatter writes."""
+    return kernel_scatter_cost(t, n_out, interpret=interpret) < segment_scatter_cost(t)
 
 
 def capacity_from_cost_model(

@@ -51,6 +51,7 @@ class StepConfig:
     payload_dtype: str | None = None  # e.g. 'bfloat16' wire values (§Perf)
     backend: str = "xla"     # resolved mode: 'xla' | 'pallas' | 'planned'
     interpret: bool = False  # Pallas interpret mode (CPU hosts / debugging)
+    stream: str = "off"      # resolved partial schedule: 'on' | 'off'
     plan: planner.ExecutionPlan | None = None
 
 
@@ -81,6 +82,7 @@ def placement_call(spec: GimvSpec, cfg: StepConfig, matrix, v, ctx, mask, axis):
             spec, matrix["stripe"], v, ctx, mask, n_local=n_local, axis_name=axis,
             exchange=cfg.exchange, capacity=cfg.capacity, payload_dtype=pd,
             ell=matrix.get("ell"), planned=matrix.get("planned"),
+            streamed=matrix.get("streamed"),
             backend=cfg.backend, scatter=scatter, interpret=cfg.interpret)
     if cfg.strategy == "hybrid":
         pd = jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
@@ -89,6 +91,7 @@ def placement_call(spec: GimvSpec, cfg: StepConfig, matrix, v, ctx, mask, axis):
             v, ctx, mask, n_local=n_local, axis_name=axis, capacity=cfg.capacity,
             payload_dtype=pd, sparse_ell=matrix.get("sparse_ell"),
             planned_sparse=matrix.get("planned_sparse"),
+            streamed_sparse=matrix.get("streamed_sparse"),
             dense_matrix=matrix.get("dense_matrix"), backend=cfg.backend,
             scatter=scatter, interpret=cfg.interpret)
     raise ValueError(cfg.strategy)
@@ -177,7 +180,18 @@ class PMVEngine:
       meta['plan'] and pretty-prints it via ``explain()``.
     scatter: receive-side tactic of the sparse exchange — 'segment' (XLA
       segment op), 'kernel' (Pallas scatter-combine kernel), or 'auto'
-      (kernel only for planned mode on real TPU hardware).
+      (gated on the cost model's T*n_out-vs-serial-scatter crossover,
+      cost_model.prefer_kernel_scatter; interpret mode's slot penalty keeps
+      the segment op on CPU hosts).
+    stream: partial-vector schedule of the planned vertical/hybrid compact
+      path — 'off' materializes all b destination-block partials before
+      compaction (fused same-tactic launches), 'on' scans destination blocks
+      and compacts each partial immediately (paper Alg. 2's
+      O(n_local + b*cap) live memory, bitwise identical results), 'auto'
+      picks by the cost model's memory crossover (cost_model.prefer_streamed
+      — tiny b keeps the fused fast path).  Applies to planned mode with a
+      compact exchange; the forced 'xla'/'pallas' backends already stream
+      (their scan paths), and the dense exchange ships full partials.
     pallas_interpret: force the kernels' interpret mode; default None runs
       interpret on non-TPU hosts and compiled kernels on TPU.
     """
@@ -197,6 +211,7 @@ class PMVEngine:
         payload_dtype: str | None = None,
         backend: str = "xla",
         scatter: str = "auto",
+        stream: str = "auto",
         pallas_interpret: bool | None = None,
         symmetrize: bool = False,
         base_weights: np.ndarray | None = None,
@@ -205,6 +220,7 @@ class PMVEngine:
     ):
         assert backend in ("xla", "pallas", "auto"), backend
         assert scatter in ("auto",) + sparse_exchange.SCATTER_METHODS, scatter
+        assert stream in ("auto",) + planner.STREAM_MODES, stream
         if symmetrize:
             edges = symmetrize_edges(edges)
         self.edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
@@ -219,6 +235,7 @@ class PMVEngine:
         self.payload_dtype = payload_dtype
         self.backend = backend
         self.scatter = scatter
+        self.stream = stream
         self.pallas_interpret = pallas_interpret
         self.base_weights = base_weights
         self.mesh = mesh
@@ -332,11 +349,30 @@ class PMVEngine:
         # mirroring the backend fallback.
         scatter = (self.scatter
                    if has_semiring(spec.combine2, spec.combine_all) else "segment")
+        stream = self._resolve_stream(strategy, backend, capacity, part)
         plan = planner.plan_execution(
             pm, hm, strategy=strategy, mode=backend, theta=theta,
-            capacity=capacity, scatter=scatter, interpret=interpret)
+            capacity=capacity, scatter=scatter, stream=stream, interpret=interpret)
         if backend == "planned":
             semiring = semiring_of(spec.combine2, spec.combine_all)
+            # emulation packs the streamed layout scan-major so the executor's
+            # lax.scan over destination blocks never transposes the tables;
+            # SPMD keeps the worker axis leading for shard_map to split.
+            w_axis = 0 if self.mesh is not None else 1
+
+            def _pack_vertical(stripes):
+                if stream == "on":
+                    return "streamed", blocks_lib.stack_streamed([
+                        blocks_lib.pack_streamed_stripe(
+                            s, plan.tactics_for_worker(j, "vertical"), part.n_local,
+                            boundaries=plan.boundaries, semiring=semiring)
+                        for j, s in enumerate(stripes)], semiring, worker_axis=w_axis)
+                return "planned", blocks_lib.stack_planned([
+                    blocks_lib.pack_planned_stripe(
+                        s, plan.tactics_for_worker(j, "vertical"), part.n_local,
+                        layout="vertical", boundaries=plan.boundaries, semiring=semiring)
+                    for j, s in enumerate(stripes)], semiring)
+
             if strategy == "horizontal":
                 matrix["planned"] = blocks_lib.stack_planned([
                     blocks_lib.pack_planned_stripe(
@@ -344,24 +380,19 @@ class PMVEngine:
                         layout="merged", boundaries=plan.boundaries, semiring=semiring)
                     for i, s in enumerate(pm.horizontal)], semiring)
             elif strategy == "vertical":
-                matrix["planned"] = blocks_lib.stack_planned([
-                    blocks_lib.pack_planned_stripe(
-                        s, plan.tactics_for_worker(j, "vertical"), part.n_local,
-                        layout="vertical", boundaries=plan.boundaries, semiring=semiring)
-                    for j, s in enumerate(pm.vertical)], semiring)
+                key, packed = _pack_vertical(pm.vertical)
+                matrix[key] = packed
             else:
-                matrix["planned_sparse"] = blocks_lib.stack_planned([
-                    blocks_lib.pack_planned_stripe(
-                        s, plan.tactics_for_worker(j, "vertical"), part.n_local,
-                        layout="vertical", boundaries=plan.boundaries, semiring=semiring)
-                    for j, s in enumerate(hm.sparse_vertical)], semiring)
+                key, packed = _pack_vertical(hm.sparse_vertical)
+                matrix[key + "_sparse"] = packed
 
         real_mask = part.global_ids_grid() < self.n
 
         cfg = StepConfig(strategy=strategy, n_local=part.n_local,
                          exchange=self.exchange, capacity=capacity,
                          payload_dtype=self.payload_dtype,
-                         backend=backend, interpret=interpret, plan=plan)
+                         backend=backend, interpret=interpret, stream=stream,
+                         plan=plan)
         step = make_step(spec, cfg, self.mesh, self.axis_name)
         donate = (1,)
         step_jit = jax.jit(step, donate_argnums=donate)
@@ -381,6 +412,24 @@ class PMVEngine:
             "n_dense": int(hm.dense.d_count.sum()) if hm is not None else 0,
         }
         return step_jit, matrix, real_mask_dev, meta
+
+    def _resolve_stream(self, strategy: str, backend: str, capacity: int | None,
+                        part: Partition) -> str:
+        """Resolve the streaming knob for this prepared solve.  Only the
+        planned vertical/hybrid COMPACT path has partials to stream: the
+        horizontal step never materializes partials, the dense exchange
+        ships them whole, and the forced backends' scan paths already
+        stream — a forced 'on' degrades to 'off' there.  'auto' asks the
+        cost model's memory crossover (tiny b keeps the fused launches)."""
+        streamable = (backend == "planned" and capacity is not None and
+                      (strategy == "hybrid" or
+                       (strategy == "vertical" and self.exchange in ("sparse", "hier"))))
+        if not streamable:
+            return "off"
+        if self.stream == "auto":
+            return ("on" if cost_model.prefer_streamed(self.b, part.n_local, capacity)
+                    else "off")
+        return self.stream
 
     def _resolve_backend(self, spec: GimvSpec) -> str:
         """Resolve the execution mode: 'auto' -> 'planned' (the per-block
@@ -505,7 +554,7 @@ class PMVEngine:
             b=self.b, strategy=meta["strategy"], theta=meta["theta"], psi=self.psi,
             exchange=self.exchange, capacity=self.capacity_mode, slack=self.slack,
             payload_dtype=self.payload_dtype, backend=self.backend,
-            scatter=self.scatter,
+            scatter=self.scatter, stream=self.stream,
             pallas_interpret=self.pallas_interpret, base_weights=self.base_weights,
             mesh=self.mesh, axis_name=self.axis_name,
         )

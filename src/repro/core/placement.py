@@ -37,6 +37,11 @@ Execution modes (planner.ExecutionPlan.mode, forced via StepConfig.backend):
   destination row lives in exactly one group, so plain ``set`` suffices).
   The plan's ``scatter`` field additionally picks the receive side of the
   sparse exchange: the XLA segment op or the Pallas scatter-combine kernel.
+  With ``plan.stream='on'`` the vertical/hybrid compact path trades the
+  fused launches for ``_streamed_planned_compact``: a ``lax.scan`` over
+  destination blocks that compacts each [n_local] partial into its fixed
+  [cap] exchange slot as it is produced (paper Alg. 2's schedule), keeping
+  live memory at O(n_local + b*cap) instead of O(b*n_local).
 """
 from __future__ import annotations
 
@@ -446,6 +451,96 @@ def _planned_vertical_partials(spec: GimvSpec, planned: PlannedStripe, v_local,
     return out[:drop].reshape((b, n_local) + tail)
 
 
+def _streamed_planned_compact(spec: GimvSpec, streamed: PlannedStripe, v_local,
+                              n_local: int, capacity: int, axis_name,
+                              interpret: bool):
+    """Bucket-streamed planned vertical compute (plan.stream='on').
+
+    The fused ``_planned_vertical_partials`` materializes all b
+    destination-block partials ([b, n_local(, Q)] live) before compaction;
+    this executor restores the paper Alg. 2's store-as-produced schedule:
+    ``lax.scan`` over destination blocks runs each block's bucketed-ELL
+    launches (``blocks.pack_streamed_stripe``'s per-block slices — the
+    plan's ``launch_schedule``), then immediately
+    ``sparse_exchange.compact_chunk``s the [n_local(, Q)] partial into its
+    fixed [cap] exchange slot, so live memory is O(n_local + b*cap) instead
+    of O(b * n_local).  Dense-tactic blocks run as per-block MXU launches
+    after the scan and overwrite their (tactic-exclusive, hence disjoint)
+    compact rows.  Handles the emulation worker axis internally (the
+    streamed pack is scan-major there, so no transpose temp); returns
+    (idx, val, overflow, logical) exactly like the fused path + compaction.
+    """
+    ident = jnp.asarray(spec.identity, spec.dtype)
+    emulation = axis_name is None
+    batched = v_local.ndim == (3 if emulation else 2)
+    b = streamed.rows_out // n_local
+
+    def bucket_xs():
+        # pytree of per-bucket arrays; scan slices the leading (block) axis.
+        return tuple((bk.rows, bk.cols, bk.w) for bk in streamed.buckets)
+
+    if emulation:
+        b_w = v_local.shape[0]
+        tail = v_local.shape[2:]
+        v_flat = v_local.reshape((b_w * n_local,) + tail)
+        coff = (jnp.arange(b_w, dtype=jnp.int32) * n_local)[:, None, None]
+        roff = (jnp.arange(b_w, dtype=jnp.int32) * n_local)[:, None]
+        drop = b_w * n_local
+
+        def body(_, bks):
+            out = jnp.full((drop + 1,) + tail, ident, spec.dtype)
+            for rows, cols, w in bks:            # [b_w, R(, D)] per bucket
+                cols2 = jnp.where(cols >= 0, cols + coff, -1)
+                cols2 = cols2.reshape((-1,) + cols2.shape[-1:])
+                w2 = None if w is None else w.reshape(cols2.shape)
+                rows2 = jnp.where(rows >= 0, rows + roff, -1).reshape(-1)
+                r = ell_gimv_call(spec, cols2, w2, v_flat, interpret)
+                out = _scatter_set(out, rows2, r, drop)
+            partial_ = out[:drop].reshape((b_w, n_local) + tail)
+            return None, sparse_exchange.compact_chunk(
+                spec, partial_, capacity, batched=batched)
+
+        _, (idx, val, over, logical) = lax.scan(body, None, bucket_xs(), length=b)
+        idx = jnp.swapaxes(idx, 0, 1)            # [b, b_w, cap] -> [b_w, b, cap]
+        val = jnp.swapaxes(val, 0, 1)
+        over, logical = jnp.sum(over), jnp.sum(logical)
+        if streamed.dense is not None:
+            for wk in range(b_w):
+                for t in range(streamed.dense.index.shape[-1]):
+                    r_d = _planned_dense_call(
+                        spec, streamed.dense.matrix[wk, t], v_local[wk], interpret)
+                    idx_d, val_d, ov_d, lg_d = sparse_exchange.compact_chunk(
+                        spec, r_d, capacity, batched=batched)
+                    i = streamed.dense.index[wk, t]
+                    safe_i = jnp.where(i >= 0, i, b)   # -1 stacking pads drop
+                    idx = idx.at[wk, safe_i].set(idx_d, mode="drop")
+                    val = val.at[wk, safe_i].set(val_d, mode="drop")
+                    over, logical = over + ov_d, logical + lg_d
+        return idx, val, over, logical
+
+    def body(_, bks):
+        out = jnp.full((n_local + 1,) + v_local.shape[1:], ident, spec.dtype)
+        for rows, cols, w in bks:                # [R(, D)] per bucket
+            r = ell_gimv_call(spec, cols, w, v_local, interpret)
+            out = _scatter_set(out, rows, r, n_local)
+        return None, sparse_exchange.compact_chunk(
+            spec, out[:n_local], capacity, batched=batched)
+
+    _, (idx, val, over, logical) = lax.scan(body, None, bucket_xs(), length=b)
+    over, logical = jnp.sum(over), jnp.sum(logical)
+    if streamed.dense is not None:
+        for t in range(streamed.dense.index.shape[-1]):
+            r_d = _planned_dense_call(spec, streamed.dense.matrix[t], v_local, interpret)
+            idx_d, val_d, ov_d, lg_d = sparse_exchange.compact_chunk(
+                spec, r_d, capacity, batched=batched)
+            i = streamed.dense.index[t]
+            safe_i = jnp.where(i >= 0, i, b)
+            idx = idx.at[safe_i].set(idx_d, mode="drop")
+            val = val.at[safe_i].set(val_d, mode="drop")
+            over, logical = over + ov_d, logical + lg_d
+    return idx, val, over, logical
+
+
 def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name, *,
                           scatter: str = "segment", interpret: bool = False):
     """Two-hop topology-aware exchange (beyond-paper, DESIGN §6 / §Perf).
@@ -571,6 +666,7 @@ def vertical_step(
     payload_dtype=None,
     ell: EllStripe | None = None,
     planned: PlannedStripe | None = None,
+    streamed: PlannedStripe | None = None,
     backend: str = "xla",
     scatter: str = "segment",
     interpret: bool = False,
@@ -587,14 +683,21 @@ def vertical_step(
     index set per hop, like the flat sparse exchange).
 
     backend='planned' computes the partials through the ExecutionPlan's
-    per-block tactics (``planned``) and compacts them in one vectorized pass;
-    ``scatter`` picks the receive-side combine (segment op | Pallas kernel).
+    per-block tactics: ``planned`` is the fused same-tactic packing
+    (materialize all partials, compact once), ``streamed`` the
+    per-destination-block packing the bucket-streamed executor scans
+    (plan.stream='on'; compact exchanges only — the dense exchange ships the
+    full partials and keeps the fused layout); ``scatter`` picks the
+    receive-side combine (segment op | Pallas kernel).
     """
     nq = _num_queries(v_local, axis_name)
     use_pallas = backend == "pallas" and ell is not None
-    use_planned = backend == "planned" and planned is not None
+    use_planned = backend == "planned" and (planned is not None or streamed is not None)
 
     def _planned_compact(v_):
+        if streamed is not None:
+            return _streamed_planned_compact(
+                spec, streamed, v_, n_local, capacity, axis_name, interpret)
         partials_ = _planned_vertical_partials(
             spec, planned, v_, n_local, axis_name, interpret)
         return sparse_exchange.compact_partials(
@@ -628,6 +731,9 @@ def vertical_step(
         return v_new, r, stats
     if exchange == "dense":
         if use_planned:
+            # the dense exchange all_to_alls the FULL partials — there is
+            # nothing to stream; the engine packs the fused layout for it.
+            assert planned is not None, "dense exchange needs the fused planned layout"
             partials = _planned_vertical_partials(
                 spec, planned, v_local, n_local, axis_name, interpret)
         elif use_pallas:
@@ -709,6 +815,7 @@ def hybrid_step(
     payload_dtype=None,
     sparse_ell: EllStripe | None = None,
     planned_sparse: PlannedStripe | None = None,
+    streamed_sparse: PlannedStripe | None = None,
     dense_matrix=None,
     backend: str = "xla",
     scatter: str = "segment",
@@ -722,14 +829,17 @@ def hybrid_step(
     it with (block, slot) pairs.  backend='pallas' runs the sparse region
     through the ELL kernel and the dense region as a semiring matmul against
     the materialized ``dense_matrix`` [n_local, b*d_cap]; backend='planned'
-    runs the sparse region per the ExecutionPlan's block tactics
-    (``planned_sparse``) and keeps the kernelized dense region (it IS the
-    region-level dense tactic).  ``scatter`` picks the receive-side combine.
+    runs the sparse region per the ExecutionPlan's block tactics — fused
+    (``planned_sparse``) or bucket-streamed per destination block
+    (``streamed_sparse``, plan.stream='on') — and keeps the kernelized dense
+    region (it IS the region-level dense tactic).  ``scatter`` picks the
+    receive-side combine.
     """
     # -- dense region: extract + all_gather the (small) dense sub-vector.
     # gather_idx is per-worker in SPMD ([d_cap]) / [b, d_cap] in emulation.
     nq = _num_queries(v_local, axis_name)
-    use_planned = backend == "planned" and planned_sparse is not None
+    use_planned = backend == "planned" and (
+        planned_sparse is not None or streamed_sparse is not None)
     use_dense_kernel = backend in ("pallas", "planned") and dense_matrix is not None
     use_pallas = backend == "pallas" and sparse_ell is not None and dense_matrix is not None
     if axis_name is not None:
@@ -750,7 +860,10 @@ def hybrid_step(
                 dense_stripe, v_d_all)
 
     # -- sparse region: vertical partials + compact exchange.
-    if use_planned:
+    if use_planned and streamed_sparse is not None:
+        idx, val, overflow, logical = _streamed_planned_compact(
+            spec, streamed_sparse, v_local, n_local, capacity, axis_name, interpret)
+    elif use_planned:
         partials = _planned_vertical_partials(
             spec, planned_sparse, v_local, n_local, axis_name, interpret)
         idx, val, overflow, logical = sparse_exchange.compact_partials(

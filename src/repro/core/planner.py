@@ -27,8 +27,16 @@ overrides, recorded as plan modes; ``backend='auto'`` engages the planner).
 
 The plan also carries the receive-side tactic of the sparse exchange
 (``scatter``): 'segment' (the XLA segment-combine) or 'kernel' (the Pallas
-scatter-combine kernel, kernels/scatter_combine) — 'auto' resolves to the
-kernel only for planned mode on real TPU hardware.
+scatter-combine kernel, kernels/scatter_combine) — 'auto' resolves through
+the cost model's T*n_out-vs-serial-scatter crossover
+(cost_model.prefer_kernel_scatter) — and the partial-vector schedule of the
+vertical/hybrid step (``stream``): 'off' materializes all b destination-block
+partials before compaction (fused same-tactic launches), 'on' scans
+destination blocks per the plan's launch schedule and compacts each partial
+immediately, restoring the paper Alg. 2's O(n_local + b*cap) live-memory
+profile — 'auto' resolves via cost_model.prefer_streamed, so tiny b keeps
+the fused fast path.  ``memory_profile()`` reports both estimates and
+``format_plan`` / ``PMVEngine.explain()`` print them.
 """
 from __future__ import annotations
 
@@ -49,10 +57,12 @@ __all__ = [
     "format_plan",
     "TACTICS",
     "MODES",
+    "STREAM_MODES",
 ]
 
 TACTICS = ("skip", "ell", "dense")
 MODES = ("xla", "pallas", "planned")
+STREAM_MODES = ("on", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +77,7 @@ class BlockPlan:
     d_max: int           # max in-degree within the block
     occupancy: float     # nnz / (rows * d_max): flat-ELL slot occupancy
     cost: float          # predicted per-iteration compute cost (slot units)
+    bucket_rows: tuple[int, ...] = ()  # rows per ELL degree bucket (ell tactic)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,10 +98,12 @@ class ExecutionPlan:
     boundaries: tuple[int, ...]     # bucket width boundaries (ascending)
     blocks: tuple[BlockPlan, ...]   # b*b entries, row-major (i, j)
     scatter: str = "segment"        # receive-side tactic: 'segment' | 'kernel'
+    stream: str = "off"             # partial schedule: 'on' (bucket-streamed) | 'off'
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
         assert self.scatter in SCATTER_METHODS, self.scatter
+        assert self.stream in STREAM_MODES, self.stream
         assert len(self.blocks) == self.b * self.b, (len(self.blocks), self.b)
 
     def block(self, i: int, j: int) -> BlockPlan:
@@ -111,6 +124,44 @@ class ExecutionPlan:
         for bp in self.blocks:
             out[bp.tactic] += 1
         return out
+
+    def launch_schedule(self, worker: int) -> tuple[tuple, ...]:
+        """Per-DESTINATION-block launch schedule of one worker's vertical
+        stripe — what the streamed executor runs per scan step, and what
+        ``blocks.pack_streamed_stripe`` packs against.
+
+        Entry i describes destination block M^(i, worker):
+        ('skip',) | ('dense', n_local) | ('ell', rows_per_bucket) where
+        rows_per_bucket[k] is the number of destination rows bucket k's
+        [R_k, boundaries[k]] table holds for this block.
+        """
+        sched = []
+        for i in range(self.b):
+            bp = self.block(i, worker)
+            if bp.tactic == "skip":
+                sched.append(("skip",))
+            elif bp.tactic == "dense":
+                sched.append(("dense", self.n_local))
+            else:
+                sched.append(("ell", bp.bucket_rows))
+        return tuple(sched)
+
+    def memory_profile(self) -> dict:
+        """Estimated live partial-buffer elements per worker of the
+        vertical/hybrid step: 'materialized' holds all b destination-block
+        partials before compaction (O(b * n_local)); 'streamed' holds one
+        partial in flight plus the fixed compact exchange buffer
+        (O(n_local + b * cap), the paper Alg. 2's profile).  'savings' is
+        their ratio; 'stream' echoes the plan's resolved schedule."""
+        cap = self.capacity if self.capacity is not None else self.n_local
+        mat = cost_model.materialized_partial_elems(self.b, self.n_local)
+        strm = cost_model.streamed_partial_elems(self.b, self.n_local, cap)
+        return {
+            "materialized_elems": mat,
+            "streamed_elems": strm,
+            "savings": mat / max(strm, 1),
+            "stream": self.stream,
+        }
 
     @property
     def flat_padded_slots(self) -> int:
@@ -189,14 +240,17 @@ def _classify(
         return BlockPlan(i=i, j=j, tactic="skip", nnz=0, rows=0, d_max=0,
                          occupancy=0.0, cost=0.0)
     bounds = np.asarray(boundaries, dtype=np.int64)
-    widths = bounds[np.searchsorted(bounds, rec["deg"], side="left")]
+    bucket_of = np.searchsorted(bounds, rec["deg"], side="left")
+    widths = bounds[bucket_of]
     ell_cost = cost_model.ell_block_cost(int(widths.sum()))
     dense_cost = cost_model.dense_block_cost(n_local, mxu_advantage)
     tactic = "dense" if dense_cost < ell_cost else "ell"
     occ = rec["nnz"] / float(rec["rows"] * rec["d_max"])
+    bucket_rows = (tuple(np.bincount(bucket_of, minlength=len(boundaries)).tolist())
+                   if tactic == "ell" else ())
     return BlockPlan(i=i, j=j, tactic=tactic, nnz=rec["nnz"], rows=rec["rows"],
                      d_max=rec["d_max"], occupancy=round(occ, 4),
-                     cost=min(ell_cost, dense_cost))
+                     cost=min(ell_cost, dense_cost), bucket_rows=bucket_rows)
 
 
 def plan_execution(
@@ -208,6 +262,7 @@ def plan_execution(
     theta: float | None = None,
     capacity: int | None = None,
     scatter: str = "auto",
+    stream: str = "off",
     max_buckets: int = 8,
     mxu_advantage: float = cost_model.MXU_SLOT_ADVANTAGE,
     interpret: bool = False,
@@ -219,8 +274,13 @@ def plan_execution(
     is a region-level dense tactic by construction, paper §3.5).  The tactic
     table is always built — forced modes ('xla' / 'pallas') carry it for
     ``explain()`` even though their executors ignore it.
+
+    ``stream`` is the RESOLVED partial schedule ('on' | 'off'; the engine
+    resolves its 'auto' knob via cost_model.prefer_streamed before planning);
+    ``scatter='auto'`` resolves here via the T*n_out-vs-serial crossover.
     """
     assert mode in MODES, mode
+    assert stream in STREAM_MODES, stream
     if strategy == "hybrid":
         assert hm is not None
         stripes, axis = hm.sparse_vertical, "gat"
@@ -245,12 +305,20 @@ def plan_execution(
         for i in range(b) for j in range(b))
 
     if scatter == "auto":
-        # The one-hot scatter-combine kernel only pays on real TPU hardware;
-        # interpret mode (CPU hosts) keeps the XLA segment lowering.
-        scatter = "kernel" if (mode == "planned" and not interpret) else "segment"
+        # Gate the one-hot scatter-combine kernel on the measured crossover:
+        # T = b*cap received slots, each either one serial segment write or
+        # n_local+1 streamed one-hot slots.  Interpret mode's slot penalty
+        # keeps the segment op on CPU hosts; plans without a compact
+        # exchange (horizontal) never scatter.
+        t = b * capacity if capacity is not None else 0
+        scatter = ("kernel" if (mode == "planned" and capacity is not None and
+                                cost_model.prefer_kernel_scatter(
+                                    t, n_local + 1, interpret=interpret))
+                   else "segment")
     return ExecutionPlan(
         strategy=strategy, mode=mode, b=b, n_local=n_local, theta=theta,
-        capacity=capacity, boundaries=boundaries, blocks=blocks, scatter=scatter)
+        capacity=capacity, boundaries=boundaries, blocks=blocks,
+        scatter=scatter, stream=stream)
 
 
 def format_plan(plan: ExecutionPlan, *, extra: dict | None = None) -> str:
@@ -259,13 +327,22 @@ def format_plan(plan: ExecutionPlan, *, extra: dict | None = None) -> str:
         f"ExecutionPlan: strategy={plan.strategy} mode={plan.mode}"
         + (f" theta={plan.theta}" if plan.theta is not None else "")
         + (f" capacity={plan.capacity}" if plan.capacity is not None else "")
-        + f" scatter={plan.scatter}",
+        + f" scatter={plan.scatter} stream={plan.stream}",
         f"  b={plan.b} n_local={plan.n_local} ell_buckets={plan.boundaries}",
     ]
     for k, v in (extra or {}).items():
         lines.append(f"  {k}={v}")
     counts = plan.tactic_counts()
     lines.append("  tactics: " + " ".join(f"{t}={counts[t]}" for t in TACTICS))
+    if plan.capacity is not None and plan.strategy != "horizontal":
+        # only the vertical/hybrid compact path materializes partials —
+        # horizontal (no partials, no capacity) has nothing to stream and
+        # the ratio would be meaningless there.
+        mp = plan.memory_profile()
+        lines.append(
+            f"  memory profile: materialized {mp['materialized_elems']} elems"
+            f" -> streamed {mp['streamed_elems']} elems"
+            f" ({mp['savings']:.2f}x) [stream={mp['stream']}]")
     flat, planned = plan.flat_padded_slots, plan.planned_slots
     if flat:
         lines.append(

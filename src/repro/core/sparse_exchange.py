@@ -36,7 +36,7 @@ from jax import lax
 
 from repro.core.gimv import GimvSpec, segment_combine
 
-__all__ = ["compact_partials", "scatter_partials", "count_non_identity"]
+__all__ = ["compact_partials", "compact_chunk", "scatter_partials", "count_non_identity"]
 
 COMPACT_METHODS = ("scan", "topk")
 
@@ -123,6 +123,25 @@ def compact_partials(spec: GimvSpec, partials: jnp.ndarray, capacity: int, axis_
     overflow = _reduce_sum(jnp.sum((counts > capacity).astype(jnp.float32)), axis_name)
     logical = _reduce_sum(jnp.sum(valid_q.astype(jnp.float32)), axis_name)
     return idx, val, overflow, logical
+
+
+def compact_chunk(spec: GimvSpec, partial: jnp.ndarray, capacity: int, *,
+                  batched: bool = False, method: str = "scan"):
+    """Incremental compaction of ONE destination block's partial chunk.
+
+    The streamed planned executor (placement, plan.stream='on') scans over
+    destination blocks and calls this per chunk, filling the fixed [b, cap]
+    exchange buffer one row at a time instead of compacting all b partials
+    at once — the paper Alg. 2's store-as-produced schedule.  ``partial`` is
+    [n_local(, Q)] (or with leading emulation-worker dims); returns
+    (idx [..., cap], val [..., cap(, Q)], overflow_rows, logical_elems) with
+    the counters as UNREDUCED scalars — the caller accumulates them across
+    chunks, which sums to exactly what one fused ``compact_partials`` over
+    the stacked [b, n_local] partials would have reported (per-row
+    compaction is independent, so the streamed buffer is bitwise identical
+    to the materialized one)."""
+    return compact_partials(spec, partial, capacity, None,
+                            batched=batched, method=method)
 
 
 SCATTER_METHODS = ("segment", "kernel")

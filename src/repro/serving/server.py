@@ -207,6 +207,7 @@ class PMVServer:
         payload_dtype: str | None = None,
         backend: str = "xla",
         scatter: str = "auto",
+        stream: str = "auto",
         pallas_interpret: bool | None = None,
         base_weights: np.ndarray | None = None,
         buckets: tuple[int, ...] = DEFAULT_BUCKETS,
@@ -223,7 +224,8 @@ class PMVServer:
         self._engine_kwargs = dict(
             b=b, strategy=strategy, theta=theta, psi=psi, exchange=exchange,
             capacity=capacity, slack=slack, payload_dtype=payload_dtype,
-            backend=backend, scatter=scatter, pallas_interpret=pallas_interpret,
+            backend=backend, scatter=scatter, stream=stream,
+            pallas_interpret=pallas_interpret,
             base_weights=base_weights, mesh=mesh, axis_name=axis_name,
         )
         self._batcher = QueryBatcher(buckets)

@@ -92,3 +92,65 @@ def test_measured_exchange_tracks_lemma32_on_er():
     logical = res.per_iter[-1]["logical_elems"]       # counts all b*b partials
     expected = b * b * cost_model.expected_partial_nnz(b, n, m)
     assert abs(logical - expected) / expected < 0.15, (logical, expected)
+
+
+# ---------------------------------------------------------------------------
+# Streamed-vs-materialized crossover (planner.ExecutionPlan.stream='auto').
+# ---------------------------------------------------------------------------
+
+def test_prefer_streamed_tiny_b_keeps_fused_path():
+    """b=2: the materialized buffer is at most 2x the streamed one, below
+    STREAM_MIN_SAVINGS — the fused launch schedule stays."""
+    assert cost_model.STREAM_MIN_SAVINGS == 2.0
+    assert not cost_model.prefer_streamed(2, 1024, 64)
+    assert not cost_model.prefer_streamed(4, 16, 16)   # cap ~ n_local: no win
+
+
+def test_prefer_streamed_web_scale_b_streams():
+    assert cost_model.prefer_streamed(32, 1024, 64)
+    assert cost_model.prefer_streamed(512, 4096, 256)  # ClueWeb12-ish shape
+
+
+def test_prefer_streamed_pins_threshold_both_sides():
+    """Exactly at the crossover: materialized == SAVINGS * streamed streams
+    (>=); one element under it does not."""
+    # b*n = 2*(n + b*cap)  =>  n = 2*b*cap / (b - 2); b=10, cap=16 -> n=40 exactly
+    b, cap = 10, 16
+    n_local = 2 * b * cap // (b - 2)  # 40: 10*40=400 == 2*(40+160)=400
+    assert cost_model.materialized_partial_elems(b, n_local) == 400
+    assert cost_model.streamed_partial_elems(b, n_local, cap) == 200
+    assert cost_model.prefer_streamed(b, n_local, cap)
+    # one row fewer: the n_local*(b-2) margin shrinks below 2*b*cap
+    assert not cost_model.prefer_streamed(b, n_local - 1, cap)
+
+
+def test_streamed_partial_elems_clamps_capacity():
+    """capacity > n_local never happens on the wire (compact_partials
+    clamps), so the estimate clamps too."""
+    assert (cost_model.streamed_partial_elems(4, 32, 1000)
+            == cost_model.streamed_partial_elems(4, 32, 32))
+
+
+# ---------------------------------------------------------------------------
+# Kernel-vs-segment scatter crossover (planner.ExecutionPlan.scatter='auto').
+# ---------------------------------------------------------------------------
+
+def test_prefer_kernel_scatter_crossover_both_sides():
+    """The one-hot kernel streams T*n_out slots at 1/MXU_SLOT_ADVANTAGE; the
+    segment op pays SERIAL_SCATTER_SLOT_COST per received slot.  T divides
+    out, so the crossover is n_out = 16 * 8 = 128 exactly."""
+    xover = int(cost_model.SERIAL_SCATTER_SLOT_COST * cost_model.MXU_SLOT_ADVANTAGE)
+    assert xover == 128
+    assert cost_model.prefer_kernel_scatter(1000, xover - 1)
+    assert not cost_model.prefer_kernel_scatter(1000, xover)
+    assert not cost_model.prefer_kernel_scatter(1000, 4096)
+    # T scales both sides identically
+    assert cost_model.prefer_kernel_scatter(1, xover - 1)
+    assert not cost_model.prefer_kernel_scatter(10**9, xover)
+
+
+def test_prefer_kernel_scatter_interpret_penalty():
+    """Interpret mode executes tiles scalar-wise: the advantage inverts and
+    the kernel never wins, at any size."""
+    assert not cost_model.prefer_kernel_scatter(1000, 4, interpret=True)
+    assert not cost_model.prefer_kernel_scatter(1000, 127, interpret=True)

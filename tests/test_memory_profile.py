@@ -1,0 +1,74 @@
+"""Memory-regression harness (ISSUE 4): the bucket-streamed planned executor
+must restore the paper Alg. 2's live-memory bound.
+
+PR 3's fused planned executor materializes all b destination-block partials
+([b_w, b, n_local] live in emulation) before compaction — O(b * n_local) per
+worker.  The streamed executor (plan.stream='on') scans destination blocks
+and compacts each partial into its fixed [cap] exchange slot immediately —
+O(n_local + b * cap).  XLA's buffer assignment sees exactly that difference
+as peak temp-buffer bytes of the jitted step, which
+``repro.launch.hlo_analysis.compiled_memory_stats`` extracts; the acceptance
+bar is a >=4x reduction at b=32 on a sparse graph (cap << n_local).
+"""
+import numpy as np
+
+from repro.core import PMVEngine, pagerank
+from repro.graph import erdos_renyi
+from repro.launch.hlo_analysis import compiled_memory_stats
+
+N, B = 4096, 32
+M_EDGES = 8192
+
+
+def _compiled_step(stream: str, strategy: str = "vertical"):
+    eng = PMVEngine(erdos_renyi(N, M_EDGES, seed=5), N, b=B, strategy=strategy,
+                    backend="auto", stream=stream)
+    step, matrix, v0, ctx, mask, meta = eng.prepare(pagerank(N))
+    compiled = step.lower(matrix, v0, ctx, mask).compile()
+    return compiled, meta
+
+
+def test_streamed_vertical_step_cuts_peak_temp_bytes_4x():
+    """Acceptance: >= 4x lower peak temp-buffer bytes at b=32 with
+    stream='on' vs the materialized plan, same graph and semiring."""
+    compiled_off, meta_off = _compiled_step("off")
+    compiled_on, meta_on = _compiled_step("on")
+    assert meta_off["plan"].stream == "off"
+    assert meta_on["plan"].stream == "on"
+    off = compiled_memory_stats(compiled_off)
+    on = compiled_memory_stats(compiled_on)
+    assert on["temp_bytes"] > 0 and off["temp_bytes"] > 0
+    reduction = off["temp_bytes"] / on["temp_bytes"]
+    assert reduction >= 4.0, (off["temp_bytes"], on["temp_bytes"], reduction)
+
+
+def test_streamed_temp_savings_cover_the_partial_buffer():
+    """The bytes streaming saves must at least cover the materialized
+    partial buffer itself (b_w * b * n_local f32 in emulation) — i.e. the
+    O(b * n_local) term really left the temp footprint, it didn't just move
+    — and the plan's own memory_profile estimate agrees on the direction."""
+    compiled_off, _meta_off = _compiled_step("off")
+    compiled_on, meta_on = _compiled_step("on")
+    off = compiled_memory_stats(compiled_off)
+    on = compiled_memory_stats(compiled_on)
+    n_local = meta_on["part"].n_local
+    materialized_partials_bytes = B * B * n_local * 4  # b_w * b * n_local f32
+    assert off["temp_bytes"] - on["temp_bytes"] >= materialized_partials_bytes
+    mp = meta_on["plan"].memory_profile()
+    assert mp["savings"] >= 4.0
+    assert mp["stream"] == "on"
+
+
+def test_compiled_memory_stats_fields():
+    """compiled_memory_stats exposes XLA buffer-assignment totals for any
+    jitted program (temp/argument/output >= 0, peak = their sum)."""
+    import jax
+    import jax.numpy as jnp
+
+    compiled = jax.jit(lambda x: (x @ x.T).sum()).lower(
+        jnp.zeros((64, 64), jnp.float32)).compile()
+    ms = compiled_memory_stats(compiled)
+    assert ms["argument_bytes"] == 64 * 64 * 4
+    assert ms["temp_bytes"] > 0
+    assert ms["peak_bytes"] == (ms["temp_bytes"] + ms["argument_bytes"]
+                                + ms["output_bytes"])

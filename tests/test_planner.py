@@ -7,6 +7,7 @@ kernel semirings x {single, batched Q} x {emulation, shard_map}, the planner
 output matches backend='xla' and backend='pallas' results (exact for the
 selection semirings, allclose for plus_times whose reduction order moves).
 """
+import dataclasses
 import os
 import subprocess
 import sys
@@ -22,6 +23,9 @@ from repro.core.engine import placement_call
 from repro.core.gimv import GimvSpec
 from repro.core.sparse_exchange import scatter_partials
 from repro.graph import erdos_renyi
+
+# Planner/fuzz suites run with warnings promoted to errors (CI gate).
+pytestmark = pytest.mark.filterwarnings("error")
 
 STRATEGIES = ["horizontal", "vertical", "hybrid"]
 
@@ -344,17 +348,37 @@ def test_forced_kernel_scatter_degrades_without_kernel_semiring():
 
 
 def test_scatter_auto_resolution():
-    """'auto' keeps the segment op in interpret mode (CPU hosts) and takes
-    the kernel only for planned mode on compiled-TPU runs."""
+    """'auto' is gated on the cost model's T*n_out-vs-serial-scatter
+    crossover (cost_model.prefer_kernel_scatter), not a bare interpret
+    flag: small receive widths take the one-hot kernel on compiled runs,
+    wide outputs keep the segment op even on hardware, and interpret
+    mode's slot penalty keeps the segment op on CPU hosts."""
     n = 64
     edges = erdos_renyi(n, 300, seed=1)
     eng = PMVEngine(edges, n, b=4, strategy="vertical", backend="auto")
     _, _m, _v0, _c, _mask, meta = eng.prepare(pagerank(n))
-    assert meta["plan"].scatter == "segment"  # interpret on CPU
+    assert meta["plan"].scatter == "segment"  # interpret penalty on CPU
+    # compiled, n_local+1 = 17 < 128 crossover: the kernel pays
     plan = planner.plan_execution(
         meta["pm"], None, strategy="vertical", mode="planned",
         capacity=meta["capacity"], scatter="auto", interpret=False)
     assert plan.scatter == "kernel"
+    # compiled but WIDE output: n_local + 1 >= 128 — one-hot work loses to
+    # the serial scatter even on hardware (the ROADMAP fix this pins)
+    n2 = 1024
+    eng2 = PMVEngine(erdos_renyi(n2, 2000, seed=2), n2, b=4,
+                     strategy="vertical", backend="auto")
+    _, _m2, _v02, _c2, _mask2, meta2 = eng2.prepare(pagerank(n2))
+    assert meta2["part"].n_local + 1 >= 128
+    plan2 = planner.plan_execution(
+        meta2["pm"], None, strategy="vertical", mode="planned",
+        capacity=meta2["capacity"], scatter="auto", interpret=False)
+    assert plan2.scatter == "segment"
+    # horizontal plans have no compact exchange to scatter
+    plan3 = planner.plan_execution(
+        meta["pm"], None, strategy="horizontal", mode="planned",
+        capacity=None, scatter="auto", interpret=False)
+    assert plan3.scatter == "segment"
 
 
 # ---------------------------------------------------------------------------
@@ -452,3 +476,218 @@ def test_explain_reports_tactics_and_padding():
     assert "dense" in report and "skip" in report and "ell" in report
     assert "ELL padded slots" in report
     assert "( 0, 0)" in report  # per-block table rows
+
+
+# ---------------------------------------------------------------------------
+# Bucket-streamed planned execution (plan.stream, ISSUE 4 tentpole).
+# ---------------------------------------------------------------------------
+
+def test_stream_auto_keeps_fused_path_at_tiny_b():
+    """b=4 / n_local=16: the materialized buffer is under the cost model's
+    STREAM_MIN_SAVINGS crossover — 'auto' keeps the fused launches."""
+    n = 64
+    eng = PMVEngine(erdos_renyi(n, 300, seed=1), n, b=4, strategy="vertical",
+                    backend="auto")
+    _, matrix, _v0, _c, _mask, meta = eng.prepare(pagerank(n))
+    assert meta["plan"].stream == "off"
+    assert "planned" in matrix and "streamed" not in matrix
+
+
+def test_stream_auto_streams_at_large_b():
+    """b=32 on a sparse graph clears the crossover: 'auto' packs the
+    per-destination-block layout and the plan records stream='on'."""
+    n = 2048
+    eng = PMVEngine(erdos_renyi(n, 4096, seed=5), n, b=32, strategy="vertical",
+                    backend="auto")
+    _, matrix, _v0, _c, _mask, meta = eng.prepare(pagerank(n))
+    assert meta["plan"].stream == "on"
+    assert "streamed" in matrix and "planned" not in matrix
+    mp = meta["plan"].memory_profile()
+    assert mp["savings"] >= 4.0
+
+
+def test_stream_forced_on_degrades_where_nothing_streams():
+    """The dense exchange ships full partials and horizontal never
+    materializes any — a forced stream='on' resolves to 'off' there."""
+    n = 64
+    edges = erdos_renyi(n, 300, seed=1)
+    for kw in (dict(strategy="vertical", exchange="dense"),
+               dict(strategy="horizontal")):
+        eng = PMVEngine(edges, n, b=4, backend="auto", stream="on", **kw)
+        _, matrix, _v0, _c, _mask, meta = eng.prepare(pagerank(n))
+        assert meta["plan"].stream == "off", kw
+        assert "streamed" not in matrix
+
+
+def test_streamed_step_bitwise_matches_materialized():
+    """stream='on' vs 'off' on the tactic-mix graph (all three tactics):
+    bitwise-identical outputs and identical logical/overflow counters for
+    single and batched steps, vertical and hybrid."""
+    n, b = 64, 4
+    edges = _tactic_mix_edges(n, b)
+    rng = np.random.default_rng(7)
+    for strategy in ("vertical", "hybrid"):
+        outs = {}
+        vs = {}
+        for stream in ("off", "on"):
+            spec = pagerank(n)
+            eng = PMVEngine(edges, n, b=b, strategy=strategy, theta=40.0,
+                            backend="auto", stream=stream)
+            _, matrix, _v0, _c, mask, meta = eng.prepare(spec)
+            assert meta["plan"].stream == stream
+            assert meta["plan"].tactic_counts()["dense"] > 0  # dense streamed too
+            nl = meta["part"].n_local
+            for q in (None, 3):
+                shape = (b, nl) if q is None else (b, nl, q)
+                if q not in vs:
+                    vs[q] = rng.random(shape).astype(np.float32)
+                o, _r, s = placement_call(
+                    spec, meta["cfg"], matrix, jnp.asarray(vs[q]), {}, mask, None)
+                outs[(stream, q)] = (np.asarray(o), s)
+        for q in (None, 3):
+            off_v, off_s = outs[("off", q)]
+            on_v, on_s = outs[("on", q)]
+            np.testing.assert_array_equal(on_v, off_v)
+            for k in ("logical_elems", "overflow"):
+                assert float(np.asarray(on_s[k])) == float(np.asarray(off_s[k]))
+
+
+def test_streamed_engine_run_parity():
+    """Full solves under stream='on' converge identically to 'off' and to
+    the forced xla baseline."""
+    n = 96
+    edges = erdos_renyi(n, 420, seed=3)
+    for strategy in ("vertical", "hybrid"):
+        kw = dict(b=4, strategy=strategy, theta=4.0)
+        rx = PMVEngine(edges, n, **kw).run(pagerank(n), max_iters=25, tol=1e-9)
+        r_on = PMVEngine(edges, n, backend="auto", stream="on", **kw).run(
+            pagerank(n), max_iters=25, tol=1e-9)
+        r_off = PMVEngine(edges, n, backend="auto", stream="off", **kw).run(
+            pagerank(n), max_iters=25, tol=1e-9)
+        assert rx.iterations == r_on.iterations == r_off.iterations
+        np.testing.assert_array_equal(r_on.v, r_off.v)
+        np.testing.assert_allclose(r_on.v, rx.v, rtol=1e-5, atol=1e-7)
+
+
+def test_launch_schedule_matches_tactics_and_bucket_rows():
+    """launch_schedule(worker) covers every destination block of the
+    worker's stripe: entry tactic mirrors the block table, and an ell
+    block's per-bucket row counts sum to its non-empty rows (what
+    pack_streamed_stripe packs per scan step)."""
+    n, b = 64, 4
+    eng = PMVEngine(_tactic_mix_edges(n, b), n, b=b, strategy="vertical",
+                    backend="auto", stream="on")
+    _, _m, _v0, _c, _mask, meta = eng.prepare(pagerank(n))
+    plan = meta["plan"]
+    for j in range(b):
+        sched = plan.launch_schedule(j)
+        assert len(sched) == b
+        for i, entry in enumerate(sched):
+            bp = plan.block(i, j)
+            assert entry[0] == bp.tactic
+            if bp.tactic == "ell":
+                assert len(entry[1]) == len(plan.boundaries)
+                assert sum(entry[1]) == bp.rows
+            elif bp.tactic == "dense":
+                assert entry[1] == plan.n_local
+
+
+# ---------------------------------------------------------------------------
+# format_plan / explain golden strings.
+# ---------------------------------------------------------------------------
+
+def _golden_plan():
+    blocks = (
+        planner.BlockPlan(i=0, j=0, tactic="dense", nnz=200, rows=16, d_max=16,
+                          occupancy=0.7812, cost=32.0),
+        planner.BlockPlan(i=0, j=1, tactic="ell", nnz=12, rows=8, d_max=3,
+                          occupancy=0.5, cost=20.0, bucket_rows=(5, 2, 1)),
+        planner.BlockPlan(i=1, j=0, tactic="skip", nnz=0, rows=0, d_max=0,
+                          occupancy=0.0, cost=0.0),
+        planner.BlockPlan(i=1, j=1, tactic="ell", nnz=6, rows=4, d_max=2,
+                          occupancy=0.75, cost=7.0, bucket_rows=(2, 2, 0)),
+    )
+    return planner.ExecutionPlan(
+        strategy="vertical", mode="planned", b=2, n_local=16, theta=None,
+        capacity=8, boundaries=(1, 2, 4), blocks=blocks, scatter="segment",
+        stream="on")
+
+
+def test_format_plan_golden_header_and_tactics():
+    lines = planner.format_plan(_golden_plan()).splitlines()
+    assert lines[0] == ("ExecutionPlan: strategy=vertical mode=planned"
+                        " capacity=8 scatter=segment stream=on")
+    assert lines[1] == "  b=2 n_local=16 ell_buckets=(1, 2, 4)"
+    assert lines[2] == "  tactics: skip=1 ell=2 dense=1"
+
+
+def test_format_plan_golden_memory_profile_line():
+    """The memory_profile line: materialized b*n_local=32 elems vs streamed
+    n_local + b*cap = 32... use numbers where they differ."""
+    plan = _golden_plan()
+    mp = plan.memory_profile()
+    assert mp == {"materialized_elems": 32, "streamed_elems": 32,
+                  "savings": 1.0, "stream": "on"}
+    report = planner.format_plan(plan)
+    assert ("  memory profile: materialized 32 elems -> streamed 32 elems"
+            " (1.00x) [stream=on]") in report
+    # horizontal plans (no compact exchange, nothing to stream) omit the line
+    hplan = dataclasses.replace(plan, strategy="horizontal", capacity=None)
+    assert "memory profile" not in planner.format_plan(hplan)
+
+
+def test_format_plan_golden_block_rows():
+    report = planner.format_plan(_golden_plan())
+    assert "  ( 0, 0)  dense       200     16     16  0.781         32" in report
+    assert "  ( 1, 0)  skip          0      0      0  0.000          0" in report
+
+
+def test_tactic_counts_invariant_sums_to_b_squared():
+    """skip + ell + dense == b^2 on every prepared plan."""
+    n = 64
+    for strategy, edges in (("vertical", _tactic_mix_edges(n, 4)),
+                            ("hybrid", _tactic_mix_edges(n, 4)),
+                            ("horizontal", erdos_renyi(n, 300, seed=1))):
+        eng = PMVEngine(edges, n, b=4, strategy=strategy, theta=40.0,
+                        backend="auto")
+        _, _m, _v0, _c, _mask, meta = eng.prepare(pagerank(n))
+        counts = meta["plan"].tactic_counts()
+        assert counts["skip"] + counts["ell"] + counts["dense"] == 16
+
+
+def test_explain_reports_memory_profile_and_stream():
+    n = 64
+    eng = PMVEngine(_tactic_mix_edges(n, 4), n, b=4, strategy="vertical",
+                    backend="auto", stream="on")
+    report = eng.explain(pagerank(n))
+    assert "stream=on" in report
+    assert "memory profile: materialized" in report
+
+
+@pytest.mark.slow
+def test_streamed_spmd_matches_emulation():
+    """stream='on' under shard_map (8 fake devices) == streamed emulation ==
+    fused emulation, vertical + hybrid (subprocess forces host devices)."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.core import PMVEngine, pagerank, sssp
+from repro.graph import erdos_renyi
+n = 128
+edges = erdos_renyi(n, 700, seed=21)
+mesh = jax.make_mesh((8,), ("workers",))
+for strategy, spec in (("vertical", pagerank(n)), ("hybrid", sssp(0))):
+    kw = dict(b=8, strategy=strategy, theta=4.0)
+    r_off = PMVEngine(edges, n, backend="auto", stream="off", **kw).run(spec, max_iters=5, tol=0.0)
+    r_on = PMVEngine(edges, n, backend="auto", stream="on", **kw).run(spec, max_iters=5, tol=0.0)
+    r_spmd = PMVEngine(edges, n, backend="auto", stream="on", mesh=mesh, **kw).run(spec, max_iters=5, tol=0.0)
+    np.testing.assert_array_equal(r_on.v, r_off.v)
+    np.testing.assert_allclose(r_spmd.v, r_on.v, rtol=1e-6, atol=1e-9)
+print("STREAMED-SPMD-OK")
+"""
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=560,
+                         env={**os.environ, "PYTHONPATH": "src"}, cwd=repo_root)
+    assert "STREAMED-SPMD-OK" in out.stdout, (out.stdout, out.stderr[-2000:])
