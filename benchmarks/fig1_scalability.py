@@ -1,5 +1,8 @@
 """Figure 1 analog: running time vs graph size, PMV vs a PEGASUS-like
-baseline.
+baseline — plus the paper's actual scalability story: an OUT-OF-CORE series
+(graphs whose block set exceeds a simulated device-memory budget) through
+``repro.store``'s disk residency, reporting bytes-read-per-iteration and the
+prefetch-overlap ratio into ``BENCH_store.json``.
 
 PEGASUS (and every iterative MapReduce GIM-V) re-shuffles the whole matrix
 every iteration; PMV shuffles it once at pre-partitioning and moves only
@@ -9,18 +12,26 @@ per-iteration wall time and the modeled shuffled-element counts
 (PMV: O(|v|); baseline: O(|M|+|v|), paper §3.1)."""
 from __future__ import annotations
 
+import json
+import os
+import tempfile
 import time
 
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import PMVEngine, pagerank
+from repro.core import PMVEngine, cost_model, pagerank
 from repro.core.partition import partition_graph
 from repro.graph import rmat
 
 SIZES = [(9, 8_000), (10, 16_000), (11, 32_000), (12, 64_000)]
 ITERS = 8
 B = 8
+
+# Out-of-core series: sizes run against a residency budget of half the
+# vertical block set — every point's "graph" is larger than its "device".
+STORE_SIZES = [(10, 16_000), (11, 32_000), (12, 64_000)]
+STORE_JSON = "BENCH_store.json"
 
 
 def run():
@@ -51,6 +62,65 @@ def run():
              f"shuffled_elems={io:.0f}")
         emit(f"fig1/pegasus_like/n={n}/m={m}", baseline_per_iter * 1e6,
              f"shuffled_elems={m + n};speedup={speedup:.1f}x;io_ratio={(m + n) / io:.1f}x")
+
+    run_store()
+
+
+def run_store(out_json: str = STORE_JSON) -> dict:
+    """Out-of-core series: ingest each graph into a block store, cap the
+    residency budget below the block-set bytes (the paper's 'graph larger
+    than memory' regime), solve PageRank with residency='disk', and record
+    bytes-read-per-iteration + prefetch overlap vs the resident engine."""
+    from repro.store import ingest_edges
+
+    results = []
+    for log2n, m_edges in STORE_SIZES:
+        n = 1 << log2n
+        edges = rmat(log2n, m_edges, seed=7)
+        spec = pagerank(n)
+        with tempfile.TemporaryDirectory() as tmp:
+            root = os.path.join(tmp, "store")
+            t0 = time.perf_counter()
+            man = ingest_edges(edges, n, B, root, chunk_edges=1 << 14)
+            ingest_s = time.perf_counter() - t0
+            total_bytes = man.total_shard_bytes("vertical")
+            slice_bytes = cost_model.stripe_slice_bytes(B, man.e_cap, has_w=True)
+            budget = max(total_bytes // 2, 3 * slice_bytes)
+
+            eng_disk = PMVEngine(None, store=root, residency="disk",
+                                 strategy="vertical",
+                                 store_budget_bytes=budget)
+            res_disk = eng_disk.run(spec, max_iters=ITERS, tol=0.0)
+            eng_dev = PMVEngine(edges, n, b=B, strategy="vertical")
+            res_dev = eng_dev.run(spec, max_iters=ITERS, tol=0.0)
+            assert np.array_equal(res_disk.v, res_dev.v), "disk != device"
+
+            tail = res_disk.per_iter[1:]
+            rec = {
+                "n": n, "m": len(edges), "b": B,
+                "budget_bytes": int(budget),
+                "block_set_bytes": int(total_bytes),
+                "exceeds_budget": bool(total_bytes > budget),
+                "ingest_s": ingest_s,
+                "bytes_read_per_iter": float(np.median(
+                    [r["store_bytes_read"] for r in tail])),
+                "prefetch_overlap": float(np.median(
+                    [r["store_overlap"] for r in tail])),
+                "disk_iter_us": float(np.median(
+                    [r["wall_s"] for r in tail])) * 1e6,
+                "device_iter_us": float(np.median(
+                    [r["wall_s"] for r in res_dev.per_iter[1:]])) * 1e6,
+                "bitwise_equal": True,
+            }
+            results.append(rec)
+            emit(f"fig1/store_disk/n={n}/m={len(edges)}", rec["disk_iter_us"],
+                 f"bytes_per_iter={rec['bytes_read_per_iter']:.0f};"
+                 f"overlap={rec['prefetch_overlap']:.2f};"
+                 f"budget_frac={budget / total_bytes:.2f}")
+    doc = {"series": results, "iters": ITERS}
+    with open(out_json, "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc
 
 
 if __name__ == "__main__":

@@ -34,6 +34,12 @@ __all__ = [
     "kernel_scatter_cost",
     "segment_scatter_cost",
     "prefer_kernel_scatter",
+    "RESIDENCY_MODES",
+    "EDGE_SLOT_BYTES",
+    "disk_block_io_cost",
+    "disk_io_seconds",
+    "stripe_slice_bytes",
+    "prefer_disk_residency",
 ]
 
 
@@ -236,6 +242,68 @@ def prefer_kernel_scatter(t: float, n_out: int, *, interpret: bool = False) -> b
     """scatter='auto' crossover: take the one-hot kernel only while its
     T*n_out streamed work undercuts T serial scatter writes."""
     return kernel_scatter_cost(t, n_out, interpret=interpret) < segment_scatter_cost(t)
+
+
+# ---------------------------------------------------------------------------
+# Disk-residency I/O leg (paper §3.4: PMV's costs were *disk* I/O counts in
+# the original system; the TPU adaptation re-grows that leg for the
+# out-of-core block store, repro.store).  residency='disk' keeps the
+# pre-partitioned shards on disk and streams one destination block's slices
+# per launch-schedule step, so every non-skip block pays a sequential read of
+# its padded e_cap slots on top of its compute tactic.
+# ---------------------------------------------------------------------------
+
+RESIDENCY_MODES = ("device", "host", "disk")
+
+# Bytes per padded edge slot in a shard slice: int32 seg + int32 gat + f32 w.
+EDGE_SLOT_BYTES = 12
+
+# Modeled sequential-read bandwidth for the shard memmaps (NVMe-class).
+# Like MXU_SLOT_ADVANTAGE this is a calibrate-on-hardware constant; the
+# planner only needs the ordering (disk slots are far slower than gather
+# slots) to be right within ~2x.
+DISK_READ_BW = 2e9  # B/s
+
+# One gather/ELL compute slot expressed in disk bytes: with double-buffered
+# prefetch the read overlaps compute, so the planner charges the *excess*
+# of I/O over compute per block; 32 streamed bytes per slot-unit keeps small
+# blocks I/O-bound and dense blocks compute-bound, matching the measured
+# shapes in the store bench.
+DISK_SLOT_BYTES_EQUIV = 32.0
+
+
+def _slot_bytes(has_w: bool) -> int:
+    """Bytes per padded edge slot: the full EDGE_SLOT_BYTES when the f32
+    weight array is materialized, the int32 seg+gat pair otherwise (shards
+    never store weights — they are recomputed host-side)."""
+    return EDGE_SLOT_BYTES if has_w else EDGE_SLOT_BYTES - 4
+
+
+def stripe_slice_bytes(workers: int, e_cap: int, *, has_w: bool = False) -> int:
+    """Bytes of ONE destination (or source) block's shard slice across all
+    workers: [workers, e_cap] seg + gat plus the counts.  ``has_w=True``
+    adds the recomputed f32 weight array — RESIDENT bytes (the budget
+    metric), not disk-read bytes."""
+    return workers * (e_cap * _slot_bytes(has_w) + 4)
+
+
+def disk_block_io_cost(e_cap: int, *, has_w: bool = False) -> float:
+    """Per-iteration slot-unit cost of streaming one block's shard slice
+    from disk (the I/O term added to every non-skip tactic cost when
+    residency='disk').  Weights are recomputed host-side, never read, so
+    the default charges only the seg+gat stream."""
+    return e_cap * _slot_bytes(has_w) / DISK_SLOT_BYTES_EQUIV
+
+
+def disk_io_seconds(bytes_read: float) -> float:
+    """Model time for streaming ``bytes_read`` shard bytes from disk."""
+    return bytes_read / DISK_READ_BW
+
+
+def prefer_disk_residency(shard_bytes: int, budget_bytes: int | None) -> bool:
+    """residency='auto' helper: spill to disk only when the resident block
+    set does not fit the configured budget (no budget -> keep in memory)."""
+    return budget_bytes is not None and shard_bytes > budget_bytes
 
 
 def capacity_from_cost_model(

@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -194,17 +195,26 @@ class PMVEngine:
       (their scan paths), and the dense exchange ships full partials.
     pallas_interpret: force the kernels' interpret mode; default None runs
       interpret on non-TPU hosts and compiled kernels on TPU.
+    store / residency: run against an out-of-core pre-partitioned block
+      store (repro.store) instead of an in-memory edge list.  ``store`` is a
+      store directory path or Manifest; ``residency`` picks the matrix home:
+      'host'/'device' load the shards back (bitwise partition_graph) and run
+      the classic paths; 'disk' never materializes the stripes — the solve
+      walks the plan's launch schedule, fetching one block's shard slice at
+      a time with double-buffered prefetch (store/residency.py).  Vertical
+      disk execution is bitwise the resident vertical step.
+      ``store_budget_bytes`` bounds the resident slice bytes in 'disk' mode.
     """
 
     def __init__(
         self,
-        edges: np.ndarray,
-        n: int,
+        edges: np.ndarray | None,
+        n: int | None = None,
         *,
-        b: int,
+        b: int | None = None,
         strategy: str = "selective",
         theta: float | str = "auto",
-        psi: str = "cyclic",
+        psi: str | None = None,
         exchange: str = "sparse",
         capacity: str = "structural",
         slack: float = 1.5,
@@ -217,13 +227,53 @@ class PMVEngine:
         base_weights: np.ndarray | None = None,
         mesh: Mesh | None = None,
         axis_name: str = "workers",
+        store=None,
+        residency: str = "device",
+        store_budget_bytes: int | None = None,
     ):
+        # psi=None means "unspecified": 'cyclic' without a store, the
+        # manifest's ψ with one — an EXPLICIT psi must match the store.
         assert backend in ("xla", "pallas", "auto"), backend
         assert scatter in ("auto",) + sparse_exchange.SCATTER_METHODS, scatter
         assert stream in ("auto",) + planner.STREAM_MODES, stream
-        if symmetrize:
-            edges = symmetrize_edges(edges)
-        self.edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        assert residency in cost_model.RESIDENCY_MODES, residency
+        self.store = None
+        self.residency = residency
+        self.store_budget_bytes = store_budget_bytes
+        if store is not None:
+            from repro.store import open_store
+
+            self.store = open_store(store)
+            if edges is not None:
+                raise ValueError("pass either edges or store=, not both")
+            if n is not None and int(n) != self.store.n:
+                raise ValueError(f"n={n} does not match the store's n={self.store.n}")
+            if b is not None and int(b) != self.store.b:
+                raise ValueError(f"b={b} does not match the store's b={self.store.b}")
+            if psi is not None and psi != self.store.psi:
+                raise ValueError(
+                    f"psi={psi!r} does not match the store's psi={self.store.psi!r}")
+            psi = self.store.psi
+            if symmetrize and not self.store.symmetrized:
+                raise ValueError(
+                    "symmetrize=True but the store was ingested without "
+                    "symmetrize — re-ingest with ingest_edges(symmetrize=True)")
+            if base_weights is not None:
+                raise ValueError("base_weights are not persisted by the store")
+            n, b = self.store.n, self.store.b
+            edges = None
+        else:
+            if edges is None or n is None or b is None:
+                raise ValueError("PMVEngine needs (edges, n, b=) or store=")
+            if residency != "device":
+                raise ValueError(
+                    f"residency={residency!r} needs store= (an ingested "
+                    "block-store directory; see repro.store.ingest_edges)")
+            if symmetrize:
+                edges = symmetrize_edges(edges)
+            edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+            psi = psi or "cyclic"
+        self.edges = edges
         self.n = int(n)
         self.b = int(b)
         self.strategy = strategy
@@ -245,17 +295,31 @@ class PMVEngine:
     _PREP_CACHE_MAX = 8
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_store(cls, store, **kwargs) -> "PMVEngine":
+        """Engine over an ingested block store (path or Manifest); n/b/psi
+        come from the manifest.  ``residency`` defaults to 'host'."""
+        kwargs.setdefault("residency", "host")
+        return cls(None, store=store, **kwargs)
+
+    def _num_edges(self) -> int:
+        return self.store.m if self.store is not None else self.edges.shape[0]
+
+    def _graph_stats(self):
+        if self.store is not None:
+            return self.store.graph_stats()
+        from repro.graph.stats import compute_stats
+        return compute_stats(self.edges, self.n)
+
     def resolve_strategy(self) -> tuple[str, float | None]:
-        m = self.edges.shape[0]
+        m = self._num_edges()
         if self.strategy in ("horizontal", "vertical"):
             return self.strategy, None
         if self.strategy in ("auto", "selective"):
             return cost_model.select_strategy(self.b, self.n, m), None
         if self.strategy == "hybrid":
             if self.theta == "auto":
-                from repro.graph.stats import compute_stats
-                stats = compute_stats(self.edges, self.n)
-                theta, _ = cost_model.theta_star(self.b, self.n, stats)
+                theta, _ = cost_model.theta_star(self.b, self.n, self._graph_stats())
             else:
                 theta = float(self.theta)
             return "hybrid", theta
@@ -293,11 +357,20 @@ class PMVEngine:
     def _prepare_static(self, spec: GimvSpec):
         """Partition + device matrix + jitted step (the per-spec cacheable part)."""
         strategy, theta = self.resolve_strategy()
-        pm, hm = partition_graph(
-            self.edges, self.n, self.b, spec,
-            psi=self.psi, base_weights=self.base_weights,
-            theta=theta if strategy == "hybrid" else None,
-        )
+        if self.store is not None and self.residency == "disk":
+            return self._prepare_disk(spec, strategy, theta)
+        if self.store is not None:
+            from repro.store import load_partitioned
+
+            pm, hm = load_partitioned(
+                self.store, spec,
+                theta=theta if strategy == "hybrid" else None)
+        else:
+            pm, hm = partition_graph(
+                self.edges, self.n, self.b, spec,
+                psi=self.psi, base_weights=self.base_weights,
+                theta=theta if strategy == "hybrid" else None,
+            )
         part = pm.part
 
         backend = self._resolve_backend(spec)
@@ -352,7 +425,8 @@ class PMVEngine:
         stream = self._resolve_stream(strategy, backend, capacity, part)
         plan = planner.plan_execution(
             pm, hm, strategy=strategy, mode=backend, theta=theta,
-            capacity=capacity, scatter=scatter, stream=stream, interpret=interpret)
+            capacity=capacity, scatter=scatter, stream=stream,
+            interpret=interpret, residency=self.residency)
         if backend == "planned":
             semiring = semiring_of(spec.combine2, spec.combine_all)
             # emulation packs the streamed layout scan-major so the executor's
@@ -398,9 +472,19 @@ class PMVEngine:
         step_jit = jax.jit(step, donate_argnums=donate)
 
         if self.mesh is not None:
+            if self.residency == "host":
+                raise NotImplementedError(
+                    "residency='host' under SPMD needs per-host shard "
+                    "serving; use residency='device' with a mesh")
             shard = NamedSharding(self.mesh, P(self.axis_name))
             matrix = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), shard), matrix)
             real_mask_dev = jax.device_put(jnp.asarray(real_mask), shard)
+        elif self.residency == "host":
+            # host residency: stripes stay as host numpy — the jitted step
+            # transfers them per call (HBM is never committed to the full
+            # block set; on CPU hosts the transfer is a no-op).
+            matrix = jax.tree.map(np.asarray, matrix)
+            real_mask_dev = jnp.asarray(real_mask)
         else:
             matrix = jax.tree.map(jnp.asarray, matrix)
             real_mask_dev = jnp.asarray(real_mask)
@@ -408,10 +492,77 @@ class PMVEngine:
         meta = {
             "strategy": strategy, "theta": theta, "capacity": capacity,
             "part": part, "pm": pm, "hm": hm, "cfg": cfg, "backend": backend,
-            "plan": plan,
+            "plan": plan, "residency": self.residency,
             "n_dense": int(hm.dense.d_count.sum()) if hm is not None else 0,
         }
         return step_jit, matrix, real_mask_dev, meta
+
+    def _prepare_disk(self, spec: GimvSpec, strategy: str, theta: float | None):
+        """residency='disk': never materialize the stripes — plan from the
+        manifest's persisted measurements and build the schedule-driven
+        executor (repro.store.residency) that streams shard slices per
+        launch-schedule step with double-buffered prefetch."""
+        from repro.store import DiskBlockStore, DiskExecutor, make_disk_step
+        from repro.store import plan_from_manifest
+
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "residency='disk' runs in emulation mode (mesh=None); SPMD "
+                "disk residency needs per-host shard serving")
+        if strategy == "hybrid":
+            raise NotImplementedError(
+                "residency='disk' supports the basic strategies; use "
+                "strategy='vertical' (bitwise) or 'horizontal' (streamed "
+                "gather), or residency='host' for hybrid")
+        if self.backend == "pallas":
+            raise ValueError(
+                "residency='disk' runs the streamed per-block xla path; "
+                "backend='pallas' is not available out of core")
+        if strategy == "vertical" and self.exchange != "sparse":
+            raise ValueError(
+                "residency='disk' streams through the compact sparse "
+                f"exchange; exchange={self.exchange!r} is not supported")
+        if self.payload_dtype is not None:
+            raise ValueError("payload_dtype is not supported out of core")
+        part = Partition(n=self.n, b=self.b, psi=self.psi)
+        interpret = (jax.default_backend() != "tpu"
+                     if self.pallas_interpret is None else self.pallas_interpret)
+        capacity = None
+        if strategy == "vertical":
+            if self.capacity_mode == "structural":
+                capacity = self.store.partial_cap
+            else:
+                capacity = cost_model.capacity_from_cost_model(
+                    self.b, self.n, self._num_edges(),
+                    stats=self.store.graph_stats(), theta=None,
+                    slack=self.slack)
+        scatter = (self.scatter
+                   if has_semiring(spec.combine2, spec.combine_all) else "segment")
+        plan = plan_from_manifest(
+            self.store, strategy=strategy, mode="xla", theta=theta,
+            capacity=capacity, scatter=scatter,
+            stream="on" if strategy == "vertical" else "off",
+            interpret=interpret, residency="disk")
+        striping = "vertical" if strategy == "vertical" else "horizontal"
+        dstore = DiskBlockStore(self.store, striping, spec,
+                                budget_bytes=self.store_budget_bytes)
+        executor = DiskExecutor(spec, part, plan, dstore, capacity=capacity,
+                                scatter=plan.scatter, interpret=interpret)
+        step = make_disk_step(spec, executor)
+        cfg = StepConfig(strategy=strategy, n_local=part.n_local,
+                         exchange=self.exchange, capacity=capacity,
+                         payload_dtype=None, backend="xla",
+                         interpret=interpret,
+                         stream="on" if strategy == "vertical" else "off",
+                         plan=plan)
+        real_mask_dev = jnp.asarray(part.global_ids_grid() < self.n)
+        meta = {
+            "strategy": strategy, "theta": theta, "capacity": capacity,
+            "part": part, "pm": None, "hm": None, "cfg": cfg,
+            "backend": "xla", "plan": plan, "residency": "disk",
+            "store": dstore, "executor": executor, "n_dense": 0,
+        }
+        return step, dstore, real_mask_dev, meta
 
     def _resolve_stream(self, strategy: str, backend: str, capacity: int | None,
                         part: Partition) -> str:
@@ -456,7 +607,7 @@ class PMVEngine:
     def _capacity(self, pm: PartitionedMatrix, hm: HybridMatrix | None) -> int:
         if self.capacity_mode == "structural":
             return hm.sparse_partial_cap if hm is not None else pm.partial_cap
-        m = self.edges.shape[0]
+        m = self._num_edges()
         return cost_model.capacity_from_cost_model(
             self.b, self.n, m,
             stats=pm.stats, theta=hm.theta if hm is not None else None,
@@ -481,9 +632,18 @@ class PMVEngine:
 
         start_iter = 0
         if resume and checkpoint_dir and os.path.exists(_ckpt_path(checkpoint_dir)):
-            v_np, start_iter = _ckpt_load(checkpoint_dir)
-            v = jnp.asarray(v_np) if self.mesh is None else jax.device_put(
-                jnp.asarray(v_np), NamedSharding(self.mesh, P(self.axis_name)))
+            try:
+                v_np, start_iter = _ckpt_load(checkpoint_dir)
+            except CheckpointCorruptError as e:
+                # _ckpt_save commits atomically (tmp + os.replace), so a
+                # corrupt state file means external truncation/disk fault —
+                # restart from v0 rather than crash the solve.
+                warnings.warn(f"ignoring corrupt checkpoint: {e}",
+                              CheckpointCorruptWarning, stacklevel=2)
+                start_iter = 0
+            else:
+                v = jnp.asarray(v_np) if self.mesh is None else jax.device_put(
+                    jnp.asarray(v_np), NamedSharding(self.mesh, P(self.axis_name)))
 
         per_iter: list[dict] = []
         converged = False
@@ -543,6 +703,12 @@ class PMVEngine:
         documented fallback); hybrid -> structural capacity (its compact
         exchange has no dense variant).  Public: repro.serving uses the same
         table for its requeue-on-overflow path."""
+        if strategy == "vertical" and self.residency == "disk":
+            # the disk executor only streams the compact exchange, so the
+            # overflow-free retry is the structural capacity, not 'dense'
+            if self.capacity_mode != "structural":
+                return "structural_capacity", {"capacity": "structural"}
+            return None
         if strategy == "vertical" and self.exchange != "dense":
             return "dense", {"exchange": "dense"}
         if strategy == "hybrid" and self.capacity_mode != "structural":
@@ -551,7 +717,7 @@ class PMVEngine:
 
     def _fallback_engine(self, meta, overrides: dict) -> "PMVEngine":
         kwargs = dict(
-            b=self.b, strategy=meta["strategy"], theta=meta["theta"], psi=self.psi,
+            strategy=meta["strategy"], theta=meta["theta"], psi=self.psi,
             exchange=self.exchange, capacity=self.capacity_mode, slack=self.slack,
             payload_dtype=self.payload_dtype, backend=self.backend,
             scatter=self.scatter, stream=self.stream,
@@ -559,8 +725,11 @@ class PMVEngine:
             mesh=self.mesh, axis_name=self.axis_name,
         )
         kwargs.update(overrides)
+        if self.store is not None:
+            return PMVEngine(None, store=self.store, residency=self.residency,
+                             store_budget_bytes=self.store_budget_bytes, **kwargs)
         # edges were already symmetrized in __init__ if requested
-        return PMVEngine(self.edges, self.n, **kwargs)
+        return PMVEngine(self.edges, self.n, b=self.b, **kwargs)
 
     def _paper_io(self, meta, rec) -> float:
         """Per-iteration I/O in vector elements, the paper's metric:
@@ -580,11 +749,23 @@ class PMVEngine:
 
 
 # ---------------------------------------------------------------------------
+class CheckpointCorruptError(RuntimeError):
+    """The on-disk resume state is unreadable (truncated / not an npz)."""
+
+
+class CheckpointCorruptWarning(UserWarning):
+    """Raised-to-warning form: the solve restarted from v0."""
+
+
 def _ckpt_path(d: str) -> str:
     return os.path.join(d, "pmv_state.npz")
 
 
 def _ckpt_save(d: str, v: np.ndarray, it: int) -> None:
+    """Atomic checkpoint commit: the full npz is written to a temp file and
+    ``os.replace``d over the live one, so a crash mid-write leaves either
+    the previous complete checkpoint or the new complete one — never a
+    truncated file."""
     os.makedirs(d, exist_ok=True)
     tmp = os.path.join(d, "pmv_state.tmp.npz")
     np.savez(tmp, v=v, it=it)
@@ -592,5 +773,11 @@ def _ckpt_save(d: str, v: np.ndarray, it: int) -> None:
 
 
 def _ckpt_load(d: str) -> tuple[np.ndarray, int]:
-    with np.load(_ckpt_path(d)) as z:
-        return z["v"], int(z["it"])
+    import zipfile
+
+    path = _ckpt_path(d)
+    try:
+        with np.load(path) as z:
+            return z["v"], int(z["it"])
+    except (zipfile.BadZipFile, ValueError, EOFError, OSError, KeyError) as e:
+        raise CheckpointCorruptError(f"{path}: {e}") from e

@@ -19,7 +19,15 @@ from repro.core import blocks as blocks_lib
 from repro.core.gimv import GimvSpec
 from repro.graph.stats import GraphStats, compute_stats
 
-__all__ = ["Partition", "PartitionedMatrix", "HybridMatrix", "partition_graph"]
+__all__ = [
+    "Partition",
+    "PartitionedMatrix",
+    "HybridMatrix",
+    "partition_graph",
+    "edge_weights_for",
+    "dense_region_of",
+    "build_hybrid",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +138,43 @@ def _edge_weights(spec: GimvSpec, out_deg: np.ndarray, src: np.ndarray, base_w) 
     return w
 
 
+def edge_weights_for(spec: GimvSpec, out_deg: np.ndarray, src: np.ndarray) -> np.ndarray | None:
+    """Per-edge matrix values for sources ``src`` (elementwise, so computing
+    them per stripe at store-load time is bitwise what partitioning computes
+    globally then slices).  Used by repro.store to keep shards spec-free."""
+    return _edge_weights(spec, out_deg, src, None)
+
+
+def dense_region_of(
+    part: Partition, is_dense_vertex: np.ndarray, theta: float
+) -> tuple[blocks_lib.DenseRegion, np.ndarray]:
+    """Compacted dense-region layout (paper §3.5) from the θ mask.
+
+    Returns the DenseRegion plus ``slot_of`` [n_pad] mapping each dense
+    vertex's global id to its slot in its block's compact row (-1 for sparse
+    vertices).  Shared by ``build_hybrid`` and the out-of-core store loader.
+    """
+    b = part.b
+    dense_ids = np.nonzero(is_dense_vertex)[0]
+    dblk = part.block_of(dense_ids)
+    dloc = part.local_of(dense_ids)
+    order = np.lexsort((dloc, dblk))
+    dblk, dloc, dense_ids_sorted = dblk[order], dloc[order], dense_ids[order]
+    d_count = np.bincount(dblk, minlength=b).astype(np.int32)
+    d_cap = max(int(d_count.max()), 1)
+    gather_idx = np.zeros((b, d_cap), dtype=np.int32)
+    slot_of = np.full(part.n_pad, -1, dtype=np.int64)  # global id -> slot
+    starts = np.zeros(b + 1, dtype=np.int64)
+    np.cumsum(d_count, out=starts[1:])
+    for k in range(b):
+        lo, hi = starts[k], starts[k + 1]
+        gather_idx[k, : hi - lo] = dloc[lo:hi]
+        slot_of[dense_ids_sorted[lo:hi]] = np.arange(hi - lo)
+    region = blocks_lib.DenseRegion(
+        gather_idx=gather_idx, d_count=d_count, d_cap=d_cap, theta=theta)
+    return region, slot_of
+
+
 def partition_graph(
     edges: np.ndarray,
     n: int,
@@ -189,22 +234,7 @@ def build_hybrid(
     is_dense_vertex = stats.out_deg >= theta  # [n]
 
     # --- compacted dense vector region -------------------------------------
-    dense_ids = np.nonzero(is_dense_vertex)[0]
-    dblk = part.block_of(dense_ids)
-    dloc = part.local_of(dense_ids)
-    order = np.lexsort((dloc, dblk))
-    dblk, dloc, dense_ids_sorted = dblk[order], dloc[order], dense_ids[order]
-    d_count = np.bincount(dblk, minlength=b).astype(np.int32)
-    d_cap = max(int(d_count.max()), 1)
-    gather_idx = np.zeros((b, d_cap), dtype=np.int32)
-    slot_of = np.full(part.n_pad, -1, dtype=np.int64)  # global id -> slot
-    starts = np.zeros(b + 1, dtype=np.int64)
-    np.cumsum(d_count, out=starts[1:])
-    for k in range(b):
-        lo, hi = starts[k], starts[k + 1]
-        gather_idx[k, : hi - lo] = dloc[lo:hi]
-        slot_of[dense_ids_sorted[lo:hi]] = np.arange(hi - lo)
-    dense = blocks_lib.DenseRegion(gather_idx=gather_idx, d_count=d_count, d_cap=d_cap, theta=theta)
+    dense, slot_of = dense_region_of(part, is_dense_vertex, theta)
 
     # --- edge split ----------------------------------------------------------
     edge_dense = is_dense_vertex[src]

@@ -65,6 +65,9 @@ __all__ = [
     "block_gimv_partials",
     "gathered_gimv",
     "ell_gimv_call",
+    "single_block_compact",
+    "single_block_contrib",
+    "apply_assign",
 ]
 
 
@@ -135,6 +138,48 @@ def block_gimv_partials(spec: GimvSpec, stripe: BlockEdges, v_local: jnp.ndarray
     return flat.reshape(b, n_local)
 
 
+def _single_block_x(spec: GimvSpec, seg, gat, w, cnt, v_rows, batched: bool):
+    """combine2 + padding mask for ONE block's edge arrays ([E_cap])."""
+    ident = jnp.asarray(spec.identity, spec.dtype)
+    e_cap = seg.shape[0]
+    vj = v_rows[gat]
+    if batched:
+        w = None if w is None else w[:, None]
+    if spec.needs_weights:
+        x = combine2(spec, w, vj)
+    else:
+        x = combine2(spec, None, vj)
+    mask = jnp.arange(e_cap, dtype=jnp.int32) < cnt
+    return jnp.where(mask[:, None] if batched else mask, x, ident)
+
+
+def single_block_compact(spec: GimvSpec, seg, gat, w, cnt, v_local,
+                         n_local: int, capacity: int):
+    """One destination block's vertical sub-multiplication + immediate
+    compaction: seg/gat/w [E_cap] edge arrays against the worker-local
+    vector v_local [n_local(, Q)] -> (idx [cap], val [cap(, Q)], overflow,
+    logical).  This is the per-step body of the Alg. 2 streaming scan below
+    — shared verbatim with the disk-residency executor (repro.store), which
+    fetches each block's shard slice from disk and must stay bitwise
+    identical to the resident path."""
+    batched = v_local.ndim == 2
+    x = _single_block_x(spec, seg, gat, w, cnt, v_local, batched)
+    partial = segment_combine(spec, x, seg, n_local)
+    return sparse_exchange.compact_partials(
+        spec, partial, capacity, None, batched=batched)
+
+
+def single_block_contrib(spec: GimvSpec, seg, gat, w, cnt, v_src, n_local: int):
+    """One source block's horizontal contribution: combine2 over the block's
+    edges against the SOURCE block's vector v_src [n_local(, Q)], segment-
+    combined into the destination rows [n_local(, Q)].  The disk-residency
+    horizontal executor streams these per source block and folds them with
+    combineAll — the ROADMAP 'stream the horizontal gather' schedule."""
+    batched = v_src.ndim == 2
+    x = _single_block_x(spec, seg, gat, w, cnt, v_src, batched)
+    return segment_combine(spec, x, seg, n_local)
+
+
 def block_gimv_partials_compact(
     spec: GimvSpec, stripe: BlockEdges, v_local: jnp.ndarray, n_local: int, capacity: int
 ):
@@ -151,24 +196,11 @@ def block_gimv_partials_compact(
     a trailing query axis on v_local ([n_local, Q]) val becomes [b, cap, Q]
     sharing one index set per partial row (wire format (idx, val[Q])).
     """
-    ident = jnp.asarray(spec.identity, spec.dtype)
-    batched = v_local.ndim == 2
 
     def body(_, blk):
         seg, gat, w, cnt = blk
-        e_cap = seg.shape[0]
-        vj = v_local[gat]
-        if batched:
-            w = None if w is None else w[:, None]
-        if spec.needs_weights:
-            x = combine2(spec, w, vj)
-        else:
-            x = combine2(spec, None, vj)
-        mask = jnp.arange(e_cap, dtype=jnp.int32) < cnt
-        x = jnp.where(mask[:, None] if batched else mask, x, ident)
-        partial = segment_combine(spec, x, seg, n_local)
-        idx, val, over, logical = sparse_exchange.compact_partials(
-            spec, partial, capacity, None, batched=batched)
+        idx, val, over, logical = single_block_compact(
+            spec, seg, gat, w, cnt, v_local, n_local, capacity)
         return None, (idx, val, over, logical)
 
     xs = (stripe.seg_local, stripe.gat_local,
@@ -606,6 +638,11 @@ def _apply_assign(spec, v_local, r_local, ctx_local, real_mask):
     if v_new.ndim > real_mask.ndim:  # multi-query: broadcast over Q
         real_mask = real_mask[..., None]
     return jnp.where(real_mask, v_new, v_local)  # padding ids frozen
+
+
+# Public alias: the disk-residency executor (repro.store.residency) applies
+# the identical assign + padding-freeze as the resident placements.
+apply_assign = _apply_assign
 
 
 def _num_queries(v_local, axis_name) -> int | None:

@@ -54,15 +54,18 @@ __all__ = [
     "bucket_boundaries",
     "measure_blocks",
     "plan_execution",
+    "plan_from_stats",
     "format_plan",
     "TACTICS",
     "MODES",
     "STREAM_MODES",
+    "RESIDENCY_MODES",
 ]
 
 TACTICS = ("skip", "ell", "dense")
 MODES = ("xla", "pallas", "planned")
 STREAM_MODES = ("on", "off")
+RESIDENCY_MODES = cost_model.RESIDENCY_MODES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,11 +102,14 @@ class ExecutionPlan:
     blocks: tuple[BlockPlan, ...]   # b*b entries, row-major (i, j)
     scatter: str = "segment"        # receive-side tactic: 'segment' | 'kernel'
     stream: str = "off"             # partial schedule: 'on' (bucket-streamed) | 'off'
+    residency: str = "device"       # matrix home: 'device' | 'host' | 'disk'
+    e_cap: int | None = None        # padded edge capacity of the shard slices
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
         assert self.scatter in SCATTER_METHODS, self.scatter
         assert self.stream in STREAM_MODES, self.stream
+        assert self.residency in RESIDENCY_MODES, self.residency
         assert len(self.blocks) == self.b * self.b, (len(self.blocks), self.b)
 
     def block(self, i: int, j: int) -> BlockPlan:
@@ -162,6 +168,21 @@ class ExecutionPlan:
             "savings": mat / max(strm, 1),
             "stream": self.stream,
         }
+
+    def io_bytes_per_iter(self, *, has_w: bool = False) -> int:
+        """Modeled shard bytes READ per iteration under residency='disk':
+        one [b, e_cap] seg+gat slice per scheduled (non-empty) destination
+        block (vertical/hybrid) or source block (horizontal); 0 when
+        resident.  Matches the executor's measured ``store_bytes_read`` —
+        weights are recomputed, never read."""
+        if self.residency != "disk" or self.e_cap is None:
+            return 0
+        active = set()
+        for bp in self.blocks:
+            if bp.nnz:
+                active.add(bp.i if self.strategy != "horizontal" else bp.j)
+        return len(active) * cost_model.stripe_slice_bytes(
+            self.b, self.e_cap, has_w=has_w)
 
     @property
     def flat_padded_slots(self) -> int:
@@ -232,25 +253,59 @@ def _merged_d_max(stripe: BlockEdges) -> int:
     return max(int(deg.max()), 1)
 
 
+DEG_HIST_BINS = 64  # power-of-two degree histogram width (degrees < 2^63)
+
+
+def deg_hist_of(deg: np.ndarray) -> np.ndarray:
+    """Per-block power-of-two degree histogram: hist[k] = destination rows
+    with in-degree in (2^(k-1), 2^k] (k=0: degree exactly 1; the last bin
+    catches everything above 2^62 — 2^63 would overflow the int64 boundary
+    table).  The store manifest persists these so plans rebuilt from a
+    manifest classify blocks bitwise-identically to plans measured from
+    in-memory stripes."""
+    edges = 1 << np.arange(DEG_HIST_BINS - 1, dtype=np.int64)
+    bins = np.searchsorted(edges, np.asarray(deg, dtype=np.int64), side="left")
+    return np.bincount(bins, minlength=DEG_HIST_BINS)
+
+
+def _bucket_rows_of(rec: dict, boundaries: tuple[int, ...]) -> np.ndarray:
+    """Rows per ELL degree bucket, from either the measured per-row degrees
+    ('deg') or the manifest's power-of-two histogram ('deg_hist').
+
+    The two agree exactly: every degree inside one histogram bin maps to the
+    same bucket because the boundary list contains only powers of two plus
+    the final d_max, so no boundary falls strictly inside a bin below d_max.
+    """
+    bounds = np.asarray(boundaries, dtype=np.int64)
+    if "deg" in rec:
+        bucket_of = np.searchsorted(bounds, rec["deg"], side="left")
+        return np.bincount(bucket_of, minlength=len(boundaries))
+    hist = np.asarray(rec["deg_hist"], dtype=np.int64)
+    out = np.zeros(len(boundaries), dtype=np.int64)
+    for k in np.nonzero(hist)[0]:
+        rep = min(int(1) << int(k), int(bounds[-1]))  # bin's top degree, capped
+        out[int(np.searchsorted(bounds, rep, side="left"))] += int(hist[k])
+    return out
+
+
 def _classify(
     rec: dict, i: int, j: int, n_local: int, boundaries: tuple[int, ...],
-    mxu_advantage: float,
+    mxu_advantage: float, io_cost: float = 0.0,
 ) -> BlockPlan:
     if rec["nnz"] == 0:
         return BlockPlan(i=i, j=j, tactic="skip", nnz=0, rows=0, d_max=0,
                          occupancy=0.0, cost=0.0)
     bounds = np.asarray(boundaries, dtype=np.int64)
-    bucket_of = np.searchsorted(bounds, rec["deg"], side="left")
-    widths = bounds[bucket_of]
-    ell_cost = cost_model.ell_block_cost(int(widths.sum()))
+    rows_per_bucket = _bucket_rows_of(rec, boundaries)
+    ell_cost = cost_model.ell_block_cost(int((rows_per_bucket * bounds).sum()))
     dense_cost = cost_model.dense_block_cost(n_local, mxu_advantage)
     tactic = "dense" if dense_cost < ell_cost else "ell"
     occ = rec["nnz"] / float(rec["rows"] * rec["d_max"])
-    bucket_rows = (tuple(np.bincount(bucket_of, minlength=len(boundaries)).tolist())
-                   if tactic == "ell" else ())
+    bucket_rows = tuple(rows_per_bucket.tolist()) if tactic == "ell" else ()
     return BlockPlan(i=i, j=j, tactic=tactic, nnz=rec["nnz"], rows=rec["rows"],
                      d_max=rec["d_max"], occupancy=round(occ, 4),
-                     cost=min(ell_cost, dense_cost), bucket_rows=bucket_rows)
+                     cost=min(ell_cost, dense_cost) + io_cost,
+                     bucket_rows=bucket_rows)
 
 
 def plan_execution(
@@ -266,6 +321,7 @@ def plan_execution(
     max_buckets: int = 8,
     mxu_advantage: float = cost_model.MXU_SLOT_ADVANTAGE,
     interpret: bool = False,
+    residency: str = "device",
 ) -> ExecutionPlan:
     """Measure + classify every sub-block of the strategy's stripes.
 
@@ -279,8 +335,6 @@ def plan_execution(
     resolves its 'auto' knob via cost_model.prefer_streamed before planning);
     ``scatter='auto'`` resolves here via the T*n_out-vs-serial crossover.
     """
-    assert mode in MODES, mode
-    assert stream in STREAM_MODES, stream
     if strategy == "hybrid":
         assert hm is not None
         stripes, axis = hm.sparse_vertical, "gat"
@@ -292,16 +346,65 @@ def plan_execution(
     n_local = pm.part.n_local
 
     recs = measure_blocks(stripes, b, stripe_axis=axis)
+    merged_d_max = None
     if strategy == "horizontal":
+        merged_d_max = max((_merged_d_max(s) for s in stripes), default=1)
+    return plan_from_stats(
+        recs, b=b, n_local=n_local, strategy=strategy, mode=mode, theta=theta,
+        capacity=capacity, scatter=scatter, stream=stream,
+        max_buckets=max_buckets, mxu_advantage=mxu_advantage,
+        interpret=interpret, residency=residency, merged_d_max=merged_d_max)
+
+
+def plan_from_stats(
+    recs: list[dict],
+    *,
+    b: int,
+    n_local: int,
+    strategy: str,
+    mode: str,
+    theta: float | None = None,
+    capacity: int | None = None,
+    scatter: str = "auto",
+    stream: str = "off",
+    max_buckets: int = 8,
+    mxu_advantage: float = cost_model.MXU_SLOT_ADVANTAGE,
+    interpret: bool = False,
+    residency: str = "device",
+    merged_d_max: int | None = None,
+) -> ExecutionPlan:
+    """Build an ExecutionPlan from per-block measurement records.
+
+    ``recs`` is the b*b row-major list from :func:`measure_blocks` — or its
+    persisted form reconstructed from a store manifest, where each record
+    carries the power-of-two degree histogram ('deg_hist', deg_hist_of)
+    instead of the raw per-row degrees; both classify identically
+    (_bucket_rows_of), so a plan rebuilt from a manifest equals the plan
+    measured from the in-memory stripes.  ``merged_d_max`` overrides the
+    bucket sizing for the horizontal merged layout (full per-row in-degree).
+    ``residency='disk'`` adds the shard-streaming I/O term
+    (cost_model.disk_block_io_cost) to every non-skip block's cost and
+    records e_cap so ``io_bytes_per_iter`` can model the per-iteration read
+    volume.
+    """
+    assert mode in MODES, mode
+    assert stream in STREAM_MODES, stream
+    assert residency in RESIDENCY_MODES, residency
+    if strategy == "horizontal" and merged_d_max is not None:
         # merged layout: a destination row's ELL slots merge ALL its source
         # blocks, so buckets size to the full per-row in-degree, not the
         # per-block maximum.
-        d_max = max((_merged_d_max(s) for s in stripes), default=1)
+        d_max = merged_d_max
     else:
         d_max = max((r["d_max"] for r in recs), default=1)
     boundaries = bucket_boundaries(d_max, max_buckets=max_buckets)
+    e_cap = max((r["nnz"] for r in recs), default=1)
+    e_cap = max(e_cap, 1)
+    io_cost = (cost_model.disk_block_io_cost(e_cap) if residency == "disk"
+               else 0.0)
     blocks = tuple(
-        _classify(recs[i * b + j], i, j, n_local, boundaries, mxu_advantage)
+        _classify(recs[i * b + j], i, j, n_local, boundaries, mxu_advantage,
+                  io_cost=io_cost)
         for i in range(b) for j in range(b))
 
     if scatter == "auto":
@@ -318,7 +421,8 @@ def plan_execution(
     return ExecutionPlan(
         strategy=strategy, mode=mode, b=b, n_local=n_local, theta=theta,
         capacity=capacity, boundaries=boundaries, blocks=blocks,
-        scatter=scatter, stream=stream)
+        scatter=scatter, stream=stream, residency=residency,
+        e_cap=e_cap)
 
 
 def format_plan(plan: ExecutionPlan, *, extra: dict | None = None) -> str:
@@ -327,9 +431,16 @@ def format_plan(plan: ExecutionPlan, *, extra: dict | None = None) -> str:
         f"ExecutionPlan: strategy={plan.strategy} mode={plan.mode}"
         + (f" theta={plan.theta}" if plan.theta is not None else "")
         + (f" capacity={plan.capacity}" if plan.capacity is not None else "")
-        + f" scatter={plan.scatter} stream={plan.stream}",
+        + f" scatter={plan.scatter} stream={plan.stream}"
+        + (f" residency={plan.residency}" if plan.residency != "device" else ""),
         f"  b={plan.b} n_local={plan.n_local} ell_buckets={plan.boundaries}",
     ]
+    if plan.residency == "disk":
+        lines.append(
+            f"  disk I/O: ~{plan.io_bytes_per_iter()} shard bytes/iter"
+            f" (e_cap={plan.e_cap},"
+            f" ~{cost_model.disk_io_seconds(plan.io_bytes_per_iter()) * 1e3:.2f}"
+            " ms modeled)")
     for k, v in (extra or {}).items():
         lines.append(f"  {k}={v}")
     counts = plan.tactic_counts()

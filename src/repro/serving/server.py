@@ -151,6 +151,27 @@ def make_batched_step(spec: GimvSpec, cfg: StepConfig, mesh=None, axis_name: str
     return jax.jit(step, donate_argnums=(1,))
 
 
+def _make_disk_batched_step(executor, *, delta_kind: str):
+    """Batched step over an out-of-core store (residency='disk'): the
+    DiskExecutor walks the launch schedule exactly as in the scalar path —
+    the trailing query axis rides through single_block_compact's batched
+    compaction — and only the active-column freeze + per-query deltas are
+    applied here."""
+
+    @partial(jax.jit, donate_argnums=())
+    def _freeze(v, v_cand, active):
+        v_new = jnp.where(active, v_cand, v)
+        return v_new, per_query_delta(v, v_new, delta_kind=delta_kind)
+
+    def step(matrix, v, ctx, mask, active):
+        del matrix
+        v_cand, _delta, stats = executor.iteration(v, ctx, mask)
+        v_new, deltas = _freeze(v, v_cand, active)
+        return v_new, deltas, stats
+
+    return step
+
+
 @partial(jax.jit, donate_argnums=(0, 1))
 def _admit_columns(v, ctx, slot_idx, v_cols, ctx_cols):
     """Admit one iteration's queries in a single donated scatter.
@@ -194,13 +215,13 @@ class PMVServer:
 
     def __init__(
         self,
-        edges: np.ndarray,
-        n: int,
+        edges: np.ndarray | None = None,
+        n: int | None = None,
         *,
-        b: int,
+        b: int | None = None,
         strategy: str = "selective",
         theta: float | str = "auto",
-        psi: str = "cyclic",
+        psi: str | None = None,  # None: 'cyclic', or the store's ψ
         exchange: str = "sparse",
         capacity: str = "structural",
         slack: float = 1.5,
@@ -214,15 +235,38 @@ class PMVServer:
         max_iters: int = 200,
         mesh=None,
         axis_name: str = "workers",
+        store=None,
+        residency: str = "device",
+        store_budget_bytes: int | None = None,
     ):
-        self.edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        self.store = None
+        self.residency = residency
+        self.store_budget_bytes = store_budget_bytes
+        if store is not None:
+            # manifest-backed serving: the resident matrix comes from an
+            # ingested block store (path or Manifest); n/b/psi are its.
+            from repro.store import open_store
+
+            self.store = open_store(store)
+            if edges is not None:
+                raise ValueError("pass either edges or store=, not both")
+            if n is not None and int(n) != self.store.n:
+                raise ValueError(f"n={n} does not match the store's n={self.store.n}")
+            if b is not None and int(b) != self.store.b:
+                raise ValueError(f"b={b} does not match the store's b={self.store.b}")
+            n, b = self.store.n, self.store.b
+            self.edges = None
+        else:
+            if edges is None or n is None or b is None:
+                raise ValueError("PMVServer needs (edges, n, b=) or store=")
+            self.edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
         self.n = int(n)
         self.b = int(b)
         self.max_iters = int(max_iters)
         self.mesh = mesh
         self.axis_name = axis_name
         self._engine_kwargs = dict(
-            b=b, strategy=strategy, theta=theta, psi=psi, exchange=exchange,
+            strategy=strategy, theta=theta, psi=psi, exchange=exchange,
             capacity=capacity, slack=slack, payload_dtype=payload_dtype,
             backend=backend, scatter=scatter, stream=stream,
             pallas_interpret=pallas_interpret,
@@ -283,11 +327,27 @@ class PMVServer:
             spec = family.make_spec(self.n, sample)
             kwargs = dict(self._engine_kwargs)
             kwargs.update(self._family_overrides.get(key, {}))
-            engine = PMVEngine(self.edges, self.n, symmetrize=family.symmetrize,
-                               **kwargs)
+            if self.store is not None:
+                if family.symmetrize and not self.store.symmetrized:
+                    raise ValueError(
+                        f"query family {family.kind!r} needs a symmetrized "
+                        "graph but the store was ingested without symmetrize "
+                        "— re-ingest with ingest_edges(symmetrize=True)")
+                engine = PMVEngine(
+                    None, store=self.store, residency=self.residency,
+                    store_budget_bytes=self.store_budget_bytes,
+                    symmetrize=family.symmetrize, **kwargs)
+            else:
+                engine = PMVEngine(self.edges, self.n, b=self.b,
+                                   symmetrize=family.symmetrize, **kwargs)
             _, matrix, _v0, _ctx, mask, meta = engine.prepare(spec)
-            step = make_batched_step(spec, meta["cfg"], self.mesh, self.axis_name,
-                                     delta_kind=family.delta_kind)
+            if meta.get("residency") == "disk":
+                step = _make_disk_batched_step(meta["executor"],
+                                               delta_kind=family.delta_kind)
+            else:
+                step = make_batched_step(spec, meta["cfg"], self.mesh,
+                                         self.axis_name,
+                                         delta_kind=family.delta_kind)
             self._families[key] = _FamilyState(
                 family=family, spec=spec, engine=engine, step=step,
                 matrix=matrix, mask=mask, part=meta["part"], meta=meta,

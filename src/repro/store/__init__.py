@@ -1,0 +1,35 @@
+"""repro.store: out-of-core pre-partitioned block store (paper §3.1's
+one-off pre-partitioning, persisted) with schedule-driven prefetch.
+
+    ingest_edges(...)            stream an edge list into a store directory
+    open_store(path)             -> Manifest
+    load_partitioned(store, spec)  bitwise partition_graph reconstruction
+    PMVEngine(..., store=..., residency='disk')  out-of-core execution
+"""
+from repro.store.ingest import ingest_edges
+from repro.store.manifest import (
+    Manifest,
+    load_partitioned,
+    open_store,
+    plan_from_manifest,
+)
+from repro.store.residency import (
+    RESIDENCY_MODES,
+    DiskBlockStore,
+    DiskExecutor,
+    ResidencyStats,
+    make_disk_step,
+)
+
+__all__ = [
+    "ingest_edges",
+    "Manifest",
+    "open_store",
+    "load_partitioned",
+    "plan_from_manifest",
+    "RESIDENCY_MODES",
+    "DiskBlockStore",
+    "DiskExecutor",
+    "ResidencyStats",
+    "make_disk_step",
+]

@@ -1,0 +1,282 @@
+"""Versioned manifest + loaders for the on-disk pre-partitioned block store.
+
+The manifest is a small JSON document describing one pre-partitioning (ψ, b,
+E_cap, degree/offset array shapes, ingest provenance); the payloads live in
+memmap-able ``.npy`` shards (format.py).  Loading is bitwise-faithful:
+``load_partitioned(manifest, spec)`` reconstructs exactly the
+``PartitionedMatrix`` / ``HybridMatrix`` that ``partition_graph`` builds in
+memory — matrix values are recomputed per spec from the stored out-degrees
+(partition.edge_weights_for), and the hybrid θ-split is rebuilt from the
+vertical shards (edge order within every (owner, inner, seg_local) group is
+preserved by the binning passes, which is the only order the packers see).
+
+``plan_from_manifest`` rebuilds the per-block ExecutionPlan from the
+persisted measurements (nnz / rows / d_max / pow2 degree histograms) without
+touching the shards — the disk-residency executor plans against it before
+fetching a single edge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core import planner
+from repro.core.blocks import BlockEdges
+from repro.core.partition import (
+    HybridMatrix,
+    Partition,
+    PartitionedMatrix,
+    build_hybrid,
+    edge_weights_for,
+)
+from repro.graph.stats import GraphStats
+from repro.store import format as fmt
+
+__all__ = ["Manifest", "open_store", "load_partitioned", "plan_from_manifest"]
+
+MANIFEST_FILE = "manifest.json"
+
+
+@dataclasses.dataclass
+class Manifest:
+    """Metadata of one ingested store directory (see module docstring)."""
+
+    root: str
+    n: int
+    m: int
+    b: int
+    psi: str
+    symmetrized: bool
+    e_cap: int
+    partial_cap: int
+    ingest: dict
+    version: int = fmt.FORMAT_VERSION
+
+    # ------------------------------------------------------------------
+    def save(self) -> None:
+        doc = {
+            "format": fmt.FORMAT_NAME,
+            "version": self.version,
+            "n": self.n, "m": self.m, "b": self.b, "psi": self.psi,
+            "symmetrized": self.symmetrized,
+            "e_cap": self.e_cap, "partial_cap": self.partial_cap,
+            "ingest": self.ingest,
+        }
+        tmp = os.path.join(self.root, MANIFEST_FILE + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, os.path.join(self.root, MANIFEST_FILE))  # atomic
+
+    @classmethod
+    def load(cls, root: str) -> "Manifest":
+        path = os.path.join(root, MANIFEST_FILE)
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"no {MANIFEST_FILE} under {root!r} — not a block-store "
+                "directory (create one with repro.store.ingest_edges)")
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("format") != fmt.FORMAT_NAME:
+            raise ValueError(
+                f"{path}: format {doc.get('format')!r} is not "
+                f"{fmt.FORMAT_NAME!r}")
+        if int(doc.get("version", -1)) > fmt.FORMAT_VERSION:
+            raise ValueError(
+                f"{path}: store version {doc.get('version')} is newer than "
+                f"this reader (supports <= {fmt.FORMAT_VERSION}) — upgrade "
+                "repro or re-ingest")
+        return cls(root=root, n=int(doc["n"]), m=int(doc["m"]),
+                   b=int(doc["b"]), psi=doc["psi"],
+                   symmetrized=bool(doc["symmetrized"]),
+                   e_cap=int(doc["e_cap"]),
+                   partial_cap=int(doc["partial_cap"]),
+                   ingest=doc.get("ingest", {}),
+                   version=int(doc.get("version", fmt.FORMAT_VERSION)))
+
+    # ------------------------------------------------------------------
+    @property
+    def part(self) -> Partition:
+        return Partition(n=self.n, b=self.b, psi=self.psi)
+
+    def array(self, name: str, *, mmap: bool = False) -> np.ndarray:
+        return fmt.open_array(fmt.array_path(self.root, name), mmap=mmap)
+
+    def graph_stats(self) -> GraphStats:
+        return GraphStats(
+            n=self.n, n_edges=self.m,
+            out_deg=np.asarray(self.array("out_deg")),
+            in_deg=np.asarray(self.array("in_deg")),
+            density=float(self.m) / float(self.n) ** 2,
+        )
+
+    def stripe_arrays(self, striping: str, worker: int, *, mmap: bool = False):
+        """(seg, gat, cnt) of one worker's stripe shard."""
+        return tuple(
+            fmt.open_array(fmt.stripe_path(self.root, striping, worker, a),
+                           mmap=mmap)
+            for a in fmt.STRIPE_ARRAYS)
+
+    def total_shard_bytes(self, striping: str) -> int:
+        """On-disk bytes of one striping's shard files (the block set a
+        disk-residency budget is compared against)."""
+        total = 0
+        for w in range(self.b):
+            for a in fmt.STRIPE_ARRAYS:
+                total += os.path.getsize(fmt.stripe_path(self.root, striping, w, a))
+        return total
+
+    def measured_records(self) -> list[dict]:
+        """Per-block planner measurement records (planner.plan_from_stats
+        input) reconstructed from the persisted arrays — b*b dicts,
+        row-major (i, j), classifying bitwise like measure_blocks."""
+        nnz = np.asarray(self.array("nnz"))
+        rows = np.asarray(self.array("rows"))
+        d_max = np.asarray(self.array("d_max"))
+        hist = np.asarray(self.array("deg_hist"))
+        out = []
+        for i in range(self.b):
+            for j in range(self.b):
+                out.append({"nnz": int(nnz[i, j]), "rows": int(rows[i, j]),
+                            "d_max": int(d_max[i, j]),
+                            "deg_hist": hist[i, j]})
+        return out
+
+    def merged_d_max(self) -> int:
+        """Horizontal merged-layout bucket bound: the max full per-row
+        in-degree (== max in_deg — a destination row's merged ELL slots span
+        every source block)."""
+        in_deg = np.asarray(self.array("in_deg"))
+        return max(int(in_deg.max(initial=0)), 1)
+
+
+def open_store(store) -> Manifest:
+    """Path or Manifest -> Manifest."""
+    if isinstance(store, Manifest):
+        return store
+    return Manifest.load(os.fspath(store))
+
+
+# ---------------------------------------------------------------------------
+# Bitwise loaders.
+# ---------------------------------------------------------------------------
+
+def row_weights(spec, part: Partition, src_block: int, gat_row: np.ndarray,
+                cnt: int, out_deg: np.ndarray) -> np.ndarray:
+    """Recompute one block row's BlockEdges.w slots ([e_cap] f32, zeros past
+    ``cnt``).  The source global id of every edge is recoverable from its
+    stripe coordinates (vertical worker j: src block == j; horizontal inner
+    k: src block == k), so weights need no storage.  This is the ONE site
+    of the bitwise-critical weight reconstruction — the full-stripe loader
+    and the disk-residency fetcher both call it."""
+    w = np.zeros(gat_row.shape, dtype=np.float32)
+    c = int(cnt)
+    if c:
+        src = part.global_of(src_block, gat_row[:c].astype(np.int64))
+        w[:c] = edge_weights_for(spec, out_deg, src)
+    return w
+
+
+def _stripe_weights(spec, part: Partition, striping: str, worker: int,
+                    gat: np.ndarray, cnt: np.ndarray, out_deg: np.ndarray):
+    """Recompute BlockEdges.w for one loaded stripe (see row_weights)."""
+    if not spec.needs_weights:
+        return None
+    b = gat.shape[0]
+    return np.stack([
+        row_weights(spec, part,
+                    worker if striping == "vertical" else k,
+                    gat[k], cnt[k], out_deg)
+        for k in range(b)])
+
+
+def load_stripe(manifest: Manifest, striping: str, worker: int, spec,
+                out_deg: np.ndarray) -> BlockEdges:
+    seg, gat, cnt = manifest.stripe_arrays(striping, worker)
+    seg = np.asarray(seg)
+    gat = np.asarray(gat)
+    cnt = np.asarray(cnt)
+    w = _stripe_weights(spec, manifest.part, striping, worker, gat, cnt, out_deg)
+    return BlockEdges(seg, gat, w, cnt)
+
+
+def _reconstruct_edges(part: Partition, vertical: list[BlockEdges]):
+    """Flat (src, dst) arrays from the vertical shards.  The order differs
+    from the original stream globally, but matches it within every
+    (owner, inner, seg_local) group — the only order build_stripes /
+    build_hybrid's stable sorts can observe — so downstream packing is
+    bitwise identical."""
+    srcs, dsts = [], []
+    for j, st in enumerate(vertical):
+        cnt = np.asarray(st.count)
+        for i in range(part.b):
+            c = int(cnt[i])
+            if not c:
+                continue
+            srcs.append(part.global_of(j, np.asarray(st.gat_local[i, :c], np.int64)))
+            dsts.append(part.global_of(i, np.asarray(st.seg_local[i, :c], np.int64)))
+    if not srcs:
+        return np.zeros((0, 2), dtype=np.int64)
+    return np.stack([np.concatenate(srcs), np.concatenate(dsts)], axis=1)
+
+
+def load_partitioned(
+    store, spec, *, theta: float | None = None
+) -> tuple[PartitionedMatrix, HybridMatrix | None]:
+    """Store -> (PartitionedMatrix, HybridMatrix | None), bitwise equal to
+    ``partition_graph(edges, n, b, spec, psi=psi, theta=theta)`` on the
+    ingested edge list (post-symmetrize when the store was ingested with
+    ``symmetrize=True``)."""
+    manifest = open_store(store)
+    part = manifest.part
+    stats = manifest.graph_stats()
+    out_deg = stats.out_deg
+    vertical = [load_stripe(manifest, "vertical", j, spec, out_deg)
+                for j in range(manifest.b)]
+    horizontal = [load_stripe(manifest, "horizontal", i, spec, out_deg)
+                  for i in range(manifest.b)]
+    partial_nnz = np.asarray(manifest.array("partial_nnz"))
+    pm = PartitionedMatrix(
+        part=part, stats=stats, vertical=vertical, horizontal=horizontal,
+        block_nnz=np.asarray(manifest.array("nnz")),
+        partial_nnz=partial_nnz,
+        partial_cap=max(int(partial_nnz.max()), 1),
+    )
+    hm = None
+    if theta is not None:
+        edges = _reconstruct_edges(part, vertical)
+        w = edge_weights_for(spec, out_deg, edges[:, 0]) if spec.needs_weights else None
+        hm = build_hybrid(part, stats, edges, w, theta)
+    return pm, hm
+
+
+def plan_from_manifest(
+    store,
+    *,
+    strategy: str,
+    mode: str = "xla",
+    theta: float | None = None,
+    capacity: int | None = None,
+    scatter: str = "auto",
+    stream: str = "off",
+    interpret: bool = False,
+    residency: str = "disk",
+) -> planner.ExecutionPlan:
+    """ExecutionPlan from the manifest's persisted per-block measurements —
+    no shard I/O.  Equals ``plan_execution`` on the loaded matrix for the
+    basic strategies ('hybrid' plans depend on the θ-split stripes, which
+    only exist after a full load)."""
+    manifest = open_store(store)
+    if strategy == "hybrid":
+        raise NotImplementedError(
+            "plan_from_manifest covers the basic strategies; load the store "
+            "(load_partitioned) and use plan_execution for hybrid plans")
+    return planner.plan_from_stats(
+        manifest.measured_records(), b=manifest.b,
+        n_local=manifest.part.n_local, strategy=strategy, mode=mode,
+        theta=theta, capacity=capacity, scatter=scatter, stream=stream,
+        interpret=interpret, residency=residency,
+        merged_d_max=(manifest.merged_d_max() if strategy == "horizontal"
+                      else None))

@@ -1,0 +1,349 @@
+"""Residency manager + schedule-driven prefetch for the block store.
+
+``PMVEngine(..., store=..., residency=...)`` picks where the pre-partitioned
+matrix lives:
+
+  'device'  load the store, ship every stripe to device memory (the classic
+            path — bitwise the in-memory engine).
+  'host'    same load, stripes stay host-side until the jitted step pulls
+            them (on CPU hosts this coincides with 'device'; on accelerators
+            it trades HBM for PCIe traffic).
+  'disk'    the stripes NEVER materialize: the executors below walk the
+            ExecutionPlan's per-block launch schedule, fetch each scheduled
+            block's shard slice from the memmap-backed store, run the exact
+            per-block kernels the resident path runs
+            (placement.single_block_compact / single_block_contrib), and
+            double-buffer the next scheduled block's fetch behind the
+            current block's compute — the paper's Alg. 2 store-as-produced
+            schedule with I/O overlapped, GraphD-style.
+
+The vertical executor is bitwise identical to the resident vertical step
+(same per-block jaxpr, same compact exchange, same scatter/assign tail).
+The horizontal executor streams the gather per SOURCE block (the ROADMAP
+"stream the horizontal gather" follow-up): selection semirings are exact;
+plus_times folds sequentially, so it matches the resident all-block
+reduction to float tolerance rather than bitwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model, placement, sparse_exchange
+from repro.core.gimv import GimvSpec, combine_elementwise
+from repro.core.partition import Partition
+from repro.core.planner import ExecutionPlan
+from repro.store.manifest import Manifest, open_store, row_weights
+
+__all__ = ["RESIDENCY_MODES", "DiskBlockStore", "DiskExecutor",
+           "ResidencyStats", "make_disk_step"]
+
+RESIDENCY_MODES = cost_model.RESIDENCY_MODES
+
+
+@dataclasses.dataclass
+class ResidencyStats:
+    """Per-iteration I/O accounting of the disk executor."""
+
+    bytes_read: int = 0
+    blocks_fetched: int = 0
+    blocks_skipped: int = 0
+    io_s: float = 0.0          # wall time spent inside fetches
+    wait_s: float = 0.0        # wall time the compute loop blocked on a fetch
+    compute_s: float = 0.0
+
+    @property
+    def overlap(self) -> float:
+        """Fraction of fetch time hidden behind compute by the double
+        buffer (1.0 = fully overlapped)."""
+        if self.io_s <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.wait_s / self.io_s)
+
+
+class DiskBlockStore:
+    """Memmap-backed shard access at block-slice granularity, with a
+    residency budget.
+
+    The fetch unit is one scheduled block's slice across all b workers:
+    vertical — destination block i's rows ([b, E_cap] seg/gat + counts, plus
+    the per-spec weights recomputed from the stored out-degrees); horizontal
+    — source block jj's rows.  Only the double buffer (current + prefetched
+    slice) is ever resident, so peak host bytes stay O(b * E_cap) no matter
+    how large the full block set is; ``budget_bytes`` makes that bound an
+    enforced contract.
+    """
+
+    def __init__(self, store, striping: str, spec: GimvSpec, *,
+                 budget_bytes: int | None = None):
+        assert striping in ("vertical", "horizontal"), striping
+        self.manifest: Manifest = open_store(store)
+        self.striping = striping
+        self.spec = spec
+        self.part: Partition = self.manifest.part
+        b = self.manifest.b
+        self._mm = [self.manifest.stripe_arrays(striping, w, mmap=True)
+                    for w in range(b)]
+        # counts are [b] int32 per worker — tiny; keep them resident so the
+        # schedule can skip empty blocks without touching the edge shards.
+        self._cnt = np.stack([np.asarray(mm[2]) for mm in self._mm])  # [b_w, b]
+        self.out_deg = np.asarray(self.manifest.array("out_deg"))
+        self.block_nnz = np.asarray(self.manifest.array("nnz"))
+        self.total_bytes = self.manifest.total_shard_bytes(striping)
+        # RESIDENT bytes per fetched slice: seg + gat read from disk plus the
+        # recomputed weight array when the spec needs one (in RAM, not read).
+        self.slice_bytes = cost_model.stripe_slice_bytes(
+            b, self.manifest.e_cap, has_w=spec.needs_weights)
+        self.budget_bytes = budget_bytes
+        if budget_bytes is not None and 2 * self.slice_bytes > budget_bytes:
+            raise ValueError(
+                f"residency budget {budget_bytes} B cannot hold the double "
+                f"buffer (2 x {self.slice_bytes} B block slices) — raise the "
+                "budget or increase b so block slices shrink")
+        self.peak_resident_bytes = 0
+        self.stats = ResidencyStats()
+
+    def begin_iteration(self) -> None:
+        self.stats = ResidencyStats()
+
+    def fetch(self, k: int) -> dict:
+        """Block k's shard slice across workers: seg/gat [b_w, E_cap] int32,
+        cnt [b_w] int32, w [b_w, E_cap] f32 | None."""
+        b = self.manifest.b
+        seg = np.stack([np.asarray(self._mm[w][0][k]) for w in range(b)])
+        gat = np.stack([np.asarray(self._mm[w][1][k]) for w in range(b)])
+        cnt = self._cnt[:, k]
+        w = None
+        if self.spec.needs_weights:
+            w = np.stack([
+                row_weights(self.spec, self.part,
+                            wk if self.striping == "vertical" else k,
+                            gat[wk], cnt[wk], self.out_deg)
+                for wk in range(b)])
+        self.stats.bytes_read += seg.nbytes + gat.nbytes + cnt.nbytes
+        self.stats.blocks_fetched += 1
+        resident = seg.nbytes + gat.nbytes + cnt.nbytes + (0 if w is None else w.nbytes)
+        self.peak_resident_bytes = max(self.peak_resident_bytes, 2 * resident)
+        return {"seg": seg, "gat": gat, "w": w, "cnt": cnt}
+
+
+def _prefetched(store: DiskBlockStore, schedule: list[int]):
+    """Iterate (block_id, slice) over the launch schedule, double-buffering
+    the NEXT scheduled block's fetch behind the current block's compute."""
+    stats = store.stats
+
+    def timed_fetch(k):
+        t0 = time.perf_counter()
+        sl = store.fetch(k)
+        return sl, time.perf_counter() - t0
+
+    if not schedule:
+        return
+    with ThreadPoolExecutor(max_workers=1) as ex:
+        fut = ex.submit(timed_fetch, schedule[0])
+        for t, k in enumerate(schedule):
+            t0 = time.perf_counter()
+            sl, io_s = fut.result()
+            stats.wait_s += time.perf_counter() - t0
+            stats.io_s += io_s
+            if t + 1 < len(schedule):
+                fut = ex.submit(timed_fetch, schedule[t + 1])
+            yield k, sl
+
+
+class DiskExecutor:
+    """Runs one prepared solve's per-iteration compute against a
+    DiskBlockStore, following ``plan.launch_schedule``'s block-at-a-time
+    cadence (the bucket-streamed scan of PR 4, now fed from disk)."""
+
+    def __init__(self, spec: GimvSpec, part: Partition, plan: ExecutionPlan,
+                 store: DiskBlockStore, *, capacity: int | None = None,
+                 scatter: str = "segment", interpret: bool = False):
+        self.spec = spec
+        self.part = part
+        self.plan = plan
+        self.store = store
+        self.capacity = capacity
+        self.scatter = scatter
+        self.interpret = interpret
+        b = part.b
+        nnz = store.block_nnz
+        if plan.strategy == "vertical":
+            assert capacity is not None
+            self.cap_eff = min(capacity, part.n_local)
+            # destination blocks with at least one edge anywhere; empty rows
+            # contribute the identity compact slice without any I/O.
+            self.schedule = [i for i in range(b) if nnz[i, :].any()]
+        else:
+            self.schedule = [jj for jj in range(b) if nnz[:, jj].any()]
+        self.skipped = b - len(self.schedule)
+        self._jits: dict = {}
+
+    # -- jitted bodies (built per (batched,) signature, cached) ----------
+    def _vertical_block_fn(self):
+        spec, n_local, cap = self.spec, self.part.n_local, self.capacity
+
+        @jax.jit
+        def block_fn(seg, gat, w, cnt, v):
+            return jax.vmap(
+                lambda s, g, ww, c, vl: placement.single_block_compact(
+                    spec, s, g, ww, c, vl, n_local, cap)
+            )(seg, gat, w, cnt, v)
+
+        return block_fn
+
+    def _vertical_tail_fn(self):
+        spec, n_local = self.spec, self.part.n_local
+        scatter, interpret = self.scatter, self.interpret
+
+        @jax.jit
+        def tail(idx, val, v, ctx, mask):
+            idx_x = jnp.swapaxes(idx, 0, 1)
+            val_x = jnp.swapaxes(val, 0, 1)
+            r = sparse_exchange.scatter_partials(
+                spec, idx_x.astype(jnp.int32), val_x.astype(spec.dtype),
+                n_local, method=scatter, interpret=interpret)
+            v_new = jax.vmap(partial(placement.apply_assign, spec))(v, r, ctx, mask)
+            return v_new, r, spec.default_delta(v, v_new)
+
+        return tail
+
+    def _horizontal_contrib_fn(self):
+        spec, n_local = self.spec, self.part.n_local
+
+        @jax.jit
+        def contrib_fn(seg, gat, w, cnt, v_src):
+            return jax.vmap(
+                lambda s, g, ww, c: placement.single_block_contrib(
+                    spec, s, g, ww, c, v_src, n_local)
+            )(seg, gat, w, cnt)
+
+        return contrib_fn
+
+    def _horizontal_tail_fn(self):
+        spec = self.spec
+
+        @jax.jit
+        def tail(r, v, ctx, mask):
+            v_new = jax.vmap(partial(placement.apply_assign, spec))(v, r, ctx, mask)
+            return v_new, spec.default_delta(v, v_new)
+
+        return tail
+
+    def _jit(self, name, build):
+        if name not in self._jits:
+            self._jits[name] = build()
+        return self._jits[name]
+
+    # -- per-iteration compute -------------------------------------------
+    def _identity_compact(self, b_w: int, tail_shape: tuple) -> tuple:
+        """The compact slice an all-identity (skipped) block produces: pure
+        padding — exactly what compacting its zero-edge partial yields."""
+        idx = jnp.full((b_w, self.cap_eff), jnp.int32(self.part.n_local))
+        val = jnp.full((b_w, self.cap_eff) + tail_shape,
+                       jnp.asarray(self.spec.identity, self.spec.dtype))
+        return idx, val
+
+    def vertical_iteration(self, v, ctx, mask):
+        """One vertical iteration: schedule-driven per-block compact compute
+        from disk, then the shared exchange/scatter/assign tail.  Returns
+        (v_new, r, overflow, logical)."""
+        store = self.store
+        store.begin_iteration()
+        store.stats.blocks_skipped = self.skipped
+        b, b_w = self.part.b, v.shape[0]
+        tail_shape = v.shape[2:]
+        block_fn = self._jit("vblock", self._vertical_block_fn)
+        idx_pad, val_pad = self._identity_compact(b_w, tail_shape)
+        idx_rows = [idx_pad] * b
+        val_rows = [val_pad] * b
+        over = jnp.zeros((), jnp.float32)
+        logical = jnp.zeros((), jnp.float32)
+        for i, sl in _prefetched(store, self.schedule):
+            t0 = time.perf_counter()
+            idx_i, val_i, ov_i, lg_i = block_fn(
+                sl["seg"], sl["gat"], sl["w"], sl["cnt"], v)
+            idx_rows[i], val_rows[i] = idx_i, val_i
+            over = over + jnp.sum(ov_i)
+            logical = logical + jnp.sum(lg_i)
+            store.stats.compute_s += time.perf_counter() - t0
+        idx = jnp.stack(idx_rows, axis=1)          # [b_w, b, cap]
+        val = jnp.stack(val_rows, axis=1)
+        tail = self._jit("vtail", self._vertical_tail_fn)
+        v_new, r, delta = tail(idx, val, v, ctx, mask)
+        return v_new, r, delta, over, logical
+
+    def horizontal_iteration(self, v, ctx, mask):
+        """One horizontal iteration streaming the gather per source block
+        (live buffer: one contribution [b_w, n_local(, Q)] + the running
+        combineAll fold — never the [b, n_local] gathered matrix)."""
+        store = self.store
+        store.begin_iteration()
+        store.stats.blocks_skipped = self.skipped
+        contrib_fn = self._jit("hcontrib", self._horizontal_contrib_fn)
+        r = jnp.full(v.shape, jnp.asarray(self.spec.identity, self.spec.dtype))
+        for jj, sl in _prefetched(store, self.schedule):
+            t0 = time.perf_counter()
+            c = contrib_fn(sl["seg"], sl["gat"], sl["w"], sl["cnt"], v[jj])
+            r = combine_elementwise(self.spec, r, c)
+            store.stats.compute_s += time.perf_counter() - t0
+        tail = self._jit("htail", self._horizontal_tail_fn)
+        v_new, delta = tail(r, v, ctx, mask)
+        return v_new, r, delta
+
+    def io_stats(self) -> dict:
+        s = self.store.stats
+        return {
+            "store_bytes_read": np.float32(s.bytes_read),
+            "store_blocks_fetched": np.float32(s.blocks_fetched),
+            "store_blocks_skipped": np.float32(s.blocks_skipped),
+            "store_io_s": np.float32(s.io_s),
+            "store_wait_s": np.float32(s.wait_s),
+            "store_overlap": np.float32(s.overlap),
+        }
+
+    def iteration(self, v, ctx, mask):
+        """One full out-of-core iteration (scalar or trailing-Q batched):
+        (v_new, delta, stats) with the same stats keys as the resident
+        placements plus the store_* I/O accounting."""
+        b, n_local = self.part.b, self.part.n_local
+        nq = v.shape[-1] if v.ndim == 3 else None
+        if self.plan.strategy == "vertical":
+            v_new, _r, delta, over, logical = self.vertical_iteration(v, ctx, mask)
+            stats = {
+                "gathered_elems": jnp.asarray(0.0, jnp.float32),
+                # unclamped capacity, matching the resident vertical_step's
+                # accounting (compact_partials clamps the actual buffers)
+                "exchanged_elems": jnp.asarray(
+                    b * (b - 1) * self.capacity * (1 + (nq or 1)), jnp.float32),
+                "logical_elems": logical,
+                "overflow": over,
+            }
+        else:
+            v_new, _r, delta = self.horizontal_iteration(v, ctx, mask)
+            stats = {
+                "gathered_elems": jnp.asarray(
+                    b * (b - 1) * n_local * (nq or 1), jnp.float32),
+                "exchanged_elems": jnp.asarray(0.0, jnp.float32),
+            }
+        stats.update(self.io_stats())
+        return v_new, delta, stats
+
+
+def make_disk_step(spec: GimvSpec, executor: DiskExecutor):
+    """Engine-compatible step(matrix, v, ctx, mask) -> (v_new, delta, stats)
+    for residency='disk' (emulation mode; ``matrix`` is the DiskBlockStore,
+    unused — the executor owns the shard access)."""
+    del spec  # carried by the executor
+
+    def step(matrix, v, ctx, mask):
+        del matrix
+        return executor.iteration(v, ctx, mask)
+
+    return step

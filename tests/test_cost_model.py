@@ -154,3 +154,59 @@ def test_prefer_kernel_scatter_interpret_penalty():
     the kernel never wins, at any size."""
     assert not cost_model.prefer_kernel_scatter(1000, 4, interpret=True)
     assert not cost_model.prefer_kernel_scatter(1000, 127, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Disk-residency I/O leg (ISSUE 5: repro.store).
+# ---------------------------------------------------------------------------
+
+def test_disk_block_io_cost_scales_with_slice_width():
+    """Streaming a block's shard slice costs bytes / DISK_SLOT_BYTES_EQUIV
+    slot units — linear in the padded edge capacity, independent of nnz
+    (padding is read too: the price of fixed-shape sequential shards).
+    Weights are recomputed host-side, so the default charges only seg+gat."""
+    c1 = cost_model.disk_block_io_cost(100)
+    c2 = cost_model.disk_block_io_cost(200)
+    assert c2 == 2 * c1 > 0
+    assert cost_model.disk_block_io_cost(100, has_w=True) > c1
+
+
+def test_stripe_slice_bytes_matches_fetch_unit():
+    """b workers x (e_cap int32 seg + int32 gat) + counts read from disk;
+    has_w=True adds the recomputed f32 weights (resident-bytes metric)."""
+    assert cost_model.stripe_slice_bytes(8, 100) == 8 * (100 * 8 + 4)
+    assert cost_model.stripe_slice_bytes(8, 100, has_w=True) == 8 * (100 * 12 + 4)
+
+
+def test_prefer_disk_residency_threshold():
+    assert not cost_model.prefer_disk_residency(10**9, None)   # no budget
+    assert cost_model.prefer_disk_residency(10**9, 10**6)
+    assert not cost_model.prefer_disk_residency(10**5, 10**6)
+
+
+def test_planner_disk_residency_adds_io_term():
+    """residency='disk' adds the same I/O term to every non-skip block and
+    records e_cap, so plan costs strictly dominate the resident plan's."""
+    import numpy as np
+
+    from repro.core import pagerank, planner
+    from repro.core.partition import partition_graph
+    from repro.graph.generators import erdos_renyi
+
+    n, b = 64, 4
+    edges = erdos_renyi(n, 400, seed=7)
+    pm, _ = partition_graph(edges, n, b, pagerank(n))
+    kw = dict(strategy="vertical", mode="xla", capacity=pm.partial_cap,
+              scatter="segment", stream="on")
+    p_dev = planner.plan_execution(pm, None, residency="device", **kw)
+    p_disk = planner.plan_execution(pm, None, residency="disk", **kw)
+    assert p_disk.residency == "disk" and p_dev.residency == "device"
+    assert p_dev.io_bytes_per_iter() == 0
+    assert p_disk.io_bytes_per_iter() > 0
+    io = cost_model.disk_block_io_cost(p_disk.e_cap)
+    for bp_dev, bp_disk in zip(p_dev.blocks, p_disk.blocks):
+        assert bp_dev.tactic == bp_disk.tactic
+        if bp_dev.tactic == "skip":
+            assert bp_disk.cost == 0.0
+        else:
+            np.testing.assert_allclose(bp_disk.cost, bp_dev.cost + io)

@@ -87,6 +87,47 @@ def test_overflow_without_fallback_still_raises():
         eng.run(pagerank(n), max_iters=10, tol=0.0, _allow_fallback=False)
 
 
+def test_checkpoint_save_is_atomic_commit(tmp_path):
+    """A crash mid-save leaves either the old or the new complete state:
+    _ckpt_save stages to a temp file and os.replace-commits, so a stale
+    truncated temp file never shadows the live checkpoint."""
+    from repro.core.engine import _ckpt_load, _ckpt_save
+
+    ck = str(tmp_path / "ck")
+    v = np.arange(12, dtype=np.float32).reshape(3, 4)
+    _ckpt_save(ck, v, 7)
+    # simulate a crash mid-write of the NEXT checkpoint: partial temp bytes
+    with open(tmp_path / "ck" / "pmv_state.tmp.npz", "wb") as f:
+        f.write(b"PK\x03\x04 truncated")
+    v_loaded, it = _ckpt_load(ck)
+    np.testing.assert_array_equal(v_loaded, v)
+    assert it == 7
+
+
+def test_truncated_checkpoint_resume_restarts_clean(tmp_path):
+    """A truncated/corrupt state file (external fault — the atomic save
+    itself can't produce one) is detected and the resumed run restarts from
+    v0, landing on the uninterrupted result instead of crashing."""
+    from repro.core.engine import CheckpointCorruptWarning, _ckpt_path
+
+    edges, n = _graph()
+    spec = pagerank(n)
+    ck = str(tmp_path / "ck")
+    eng = PMVEngine(edges, n, b=4, strategy="vertical")
+    full = eng.run(spec, max_iters=12, tol=0.0)
+
+    eng.run(spec, max_iters=6, tol=0.0, checkpoint_dir=ck, checkpoint_every=3)
+    path = _ckpt_path(ck)
+    data = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(data[: len(data) // 2])  # truncate mid-file
+    with pytest.warns(CheckpointCorruptWarning, match="corrupt checkpoint"):
+        resumed = eng.run(spec, max_iters=12, tol=0.0,
+                          checkpoint_dir=ck, checkpoint_every=3, resume=True)
+    assert len(resumed.per_iter) == 12            # restarted from iteration 0
+    np.testing.assert_array_equal(resumed.v, full.v)
+
+
 def test_prepare_is_cached_per_spec():
     edges, n = _graph()
     spec = pagerank(n)
