@@ -34,6 +34,8 @@ __all__ = [
     "kernel_scatter_cost",
     "segment_scatter_cost",
     "prefer_kernel_scatter",
+    "SLOT_TIME_S",
+    "slot_seconds",
     "RESIDENCY_MODES",
     "EDGE_SLOT_BYTES",
     "disk_block_io_cost",
@@ -149,6 +151,22 @@ def ici_seconds(elems: float, bytes_per_elem: int = 4, links: int | None = None)
 # unit + padding per slot.  Calibrate on hardware; the ordering the planner
 # needs (dense wins only on near-dense blocks) is insensitive to +-2x.
 MXU_SLOT_ADVANTAGE = 8.0
+
+
+# Modeled wall seconds per slot unit: one gather/ELL slot at HBM stream rate
+# (8 B per slot / hbm_bw ~ 1e-11 s on a v5e chip; the interpret-mode hosts
+# the tests run on land orders of magnitude above this).  This constant only
+# anchors predicted_s in the obs layer's predicted-vs-measured report — the
+# calibration residuals in BENCH_obs.json (repro.obs.report) are exactly the
+# correction ROADMAP item 5 folds back in, so its absolute value is a
+# starting point, not a claim.
+SLOT_TIME_S = 1e-8
+
+
+def slot_seconds(cost_slots: float) -> float:
+    """Model time for ``cost_slots`` slot units of tactic compute (the
+    predicted_s attached to launch spans by the obs layer)."""
+    return cost_slots * SLOT_TIME_S
 
 
 def ell_block_cost(bucketed_slots: int) -> float:

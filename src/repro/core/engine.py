@@ -32,6 +32,7 @@ from repro.kernels.block_gimv import has_semiring, semiring_of
 from repro.core.gimv import GimvSpec
 from repro.core.partition import HybridMatrix, Partition, PartitionedMatrix, partition_graph
 from repro.graph.generators import symmetrize_edges
+from repro.obs import as_recorder
 
 __all__ = ["PMVEngine", "PMVResult", "StepConfig", "make_step", "placement_call"]
 
@@ -156,6 +157,12 @@ class PMVResult:
         last = self.per_iter[-1]
         return float(last.get("gathered_elems", 0.0) + last.get("exchanged_elems", 0.0))
 
+    @property
+    def deltas(self) -> np.ndarray:
+        """Per-iteration convergence-delta trajectory (convergence curves
+        without a rerun)."""
+        return np.asarray([r["delta"] for r in self.per_iter])
+
 
 class PMVEngine:
     """Scalable GIM-V engine with pre-partitioning + placement selection.
@@ -230,6 +237,7 @@ class PMVEngine:
         store=None,
         residency: str = "device",
         store_budget_bytes: int | None = None,
+        obs=None,
     ):
         # psi=None means "unspecified": 'cyclic' without a store, the
         # manifest's ψ with one — an EXPLICIT psi must match the store.
@@ -290,6 +298,9 @@ class PMVEngine:
         self.base_weights = base_weights
         self.mesh = mesh
         self.axis_name = axis_name
+        # obs: None/False (the zero-overhead null recorder), True (a fresh
+        # repro.obs.Recorder), or a Recorder shared with a server / store.
+        self.obs = as_recorder(obs)
         self._prep_cache: dict = {}  # spec -> (step, matrix, mask, meta); FIFO-bounded
 
     _PREP_CACHE_MAX = 8
@@ -359,24 +370,30 @@ class PMVEngine:
         strategy, theta = self.resolve_strategy()
         if self.store is not None and self.residency == "disk":
             return self._prepare_disk(spec, strategy, theta)
-        if self.store is not None:
-            from repro.store import load_partitioned
+        rec = self.obs
+        with rec.span("prepare.partition") as sp:
+            sp.set("spec", spec.name)
+            sp.set("strategy", strategy)
+            if self.store is not None:
+                from repro.store import load_partitioned
 
-            pm, hm = load_partitioned(
-                self.store, spec,
-                theta=theta if strategy == "hybrid" else None)
-        else:
-            pm, hm = partition_graph(
-                self.edges, self.n, self.b, spec,
-                psi=self.psi, base_weights=self.base_weights,
-                theta=theta if strategy == "hybrid" else None,
-            )
+                pm, hm = load_partitioned(
+                    self.store, spec,
+                    theta=theta if strategy == "hybrid" else None)
+            else:
+                pm, hm = partition_graph(
+                    self.edges, self.n, self.b, spec,
+                    psi=self.psi, base_weights=self.base_weights,
+                    theta=theta if strategy == "hybrid" else None,
+                )
         part = pm.part
 
         backend = self._resolve_backend(spec)
         interpret = (jax.default_backend() != "tpu"
                      if self.pallas_interpret is None else self.pallas_interpret)
 
+        stripes_span = rec.span("prepare.stripes")
+        stripes_span.__enter__()
         if strategy == "horizontal":
             matrix = {"stripe": _stack_stripes(pm.horizontal)}
             capacity = None
@@ -417,16 +434,23 @@ class PMVEngine:
                         s, part.n_local, hm.dense.d_cap, semiring)
                     for s in hm.dense_horizontal])
 
+        stripes_span.__exit__(None, None, None)
         # the scatter-combine kernel shares the semiring table: a spec with
         # no kernel semiring degrades a forced 'kernel' to the segment op,
         # mirroring the backend fallback.
         scatter = (self.scatter
                    if has_semiring(spec.combine2, spec.combine_all) else "segment")
         stream = self._resolve_stream(strategy, backend, capacity, part)
-        plan = planner.plan_execution(
-            pm, hm, strategy=strategy, mode=backend, theta=theta,
-            capacity=capacity, scatter=scatter, stream=stream,
-            interpret=interpret, residency=self.residency)
+        with rec.span("prepare.plan") as sp:
+            plan = planner.plan_execution(
+                pm, hm, strategy=strategy, mode=backend, theta=theta,
+                capacity=capacity, scatter=scatter, stream=stream,
+                interpret=interpret, residency=self.residency)
+            sp.set("mode", backend)
+            sp.set("predicted_slots", plan.planned_slots)
+        self._record_plan_metrics(plan)
+        pack_span = rec.span("prepare.pack")
+        pack_span.__enter__()
         if backend == "planned":
             semiring = semiring_of(spec.combine2, spec.combine_all)
             # emulation packs the streamed layout scan-major so the executor's
@@ -460,6 +484,7 @@ class PMVEngine:
                 key, packed = _pack_vertical(hm.sparse_vertical)
                 matrix[key + "_sparse"] = packed
 
+        pack_span.__exit__(None, None, None)
         real_mask = part.global_ids_grid() < self.n
 
         cfg = StepConfig(strategy=strategy, n_local=part.n_local,
@@ -471,6 +496,8 @@ class PMVEngine:
         donate = (1,)
         step_jit = jax.jit(step, donate_argnums=donate)
 
+        device_span = rec.span("prepare.device_put")
+        device_span.__enter__()
         if self.mesh is not None:
             if self.residency == "host":
                 raise NotImplementedError(
@@ -488,6 +515,7 @@ class PMVEngine:
         else:
             matrix = jax.tree.map(jnp.asarray, matrix)
             real_mask_dev = jnp.asarray(real_mask)
+        device_span.__exit__(None, None, None)
 
         meta = {
             "strategy": strategy, "theta": theta, "capacity": capacity,
@@ -496,6 +524,23 @@ class PMVEngine:
             "n_dense": int(hm.dense.d_count.sum()) if hm is not None else 0,
         }
         return step_jit, matrix, real_mask_dev, meta
+
+    def _record_plan_metrics(self, plan: planner.ExecutionPlan) -> None:
+        """Plan-shape gauges: tactic mix, padding occupancy, predicted cost
+        (prepare-time; one write per gauge, nothing on the hot path)."""
+        rec = self.obs
+        if not rec.enabled:
+            return
+        rec.gauge("plan.predicted_slots").set(plan.planned_slots)
+        if plan.capacity is not None:
+            rec.gauge("plan.capacity").set(plan.capacity)
+        for tactic, count in plan.tactic_counts().items():
+            rec.gauge(f"plan.tactic.{tactic}").set(count)
+        occ = [bp.occupancy for bp in plan.blocks if bp.nnz]
+        if occ:
+            rec.gauge("plan.mean_occupancy").set(float(np.mean(occ)))
+        if plan.residency == "disk":
+            rec.gauge("plan.io_bytes_per_iter").set(plan.io_bytes_per_iter())
 
     def _prepare_disk(self, spec: GimvSpec, strategy: str, theta: float | None):
         """residency='disk': never materialize the stripes — plan from the
@@ -538,16 +583,25 @@ class PMVEngine:
                     slack=self.slack)
         scatter = (self.scatter
                    if has_semiring(spec.combine2, spec.combine_all) else "segment")
-        plan = plan_from_manifest(
-            self.store, strategy=strategy, mode="xla", theta=theta,
-            capacity=capacity, scatter=scatter,
-            stream="on" if strategy == "vertical" else "off",
-            interpret=interpret, residency="disk")
+        rec = self.obs
+        with rec.span("prepare.plan") as sp:
+            sp.set("spec", spec.name)
+            sp.set("strategy", strategy)
+            plan = plan_from_manifest(
+                self.store, strategy=strategy, mode="xla", theta=theta,
+                capacity=capacity, scatter=scatter,
+                stream="on" if strategy == "vertical" else "off",
+                interpret=interpret, residency="disk")
+            sp.set("predicted_slots", plan.planned_slots)
+        self._record_plan_metrics(plan)
         striping = "vertical" if strategy == "vertical" else "horizontal"
-        dstore = DiskBlockStore(self.store, striping, spec,
-                                budget_bytes=self.store_budget_bytes)
-        executor = DiskExecutor(spec, part, plan, dstore, capacity=capacity,
-                                scatter=plan.scatter, interpret=interpret)
+        with rec.span("prepare.store"):
+            dstore = DiskBlockStore(self.store, striping, spec,
+                                    budget_bytes=self.store_budget_bytes,
+                                    obs=rec)
+            executor = DiskExecutor(spec, part, plan, dstore, capacity=capacity,
+                                    scatter=plan.scatter, interpret=interpret,
+                                    obs=rec)
         step = make_disk_step(spec, executor)
         cfg = StepConfig(strategy=strategy, n_local=part.n_local,
                          exchange=self.exchange, capacity=capacity,
@@ -593,16 +647,46 @@ class PMVEngine:
             return "xla"
         return self.backend
 
-    def explain(self, spec: GimvSpec, ctx: dict | None = None) -> str:
+    def explain(self, spec: GimvSpec, ctx: dict | None = None, *,
+                live: bool = False, live_iters: int = 3) -> str:
         """Human-readable report of the prepared ExecutionPlan: per-block
         tactic, nnz, max in-degree, padding occupancy and predicted cost,
         plus plan-level aggregates (tactic counts, flat -> bucketed padded
-        slots).  Prepares (and caches) the solve as a side effect."""
+        slots).  Prepares (and caches) the solve as a side effect.
+
+        ``live=True`` additionally runs a short traced probe solve
+        (``live_iters`` iterations, convergence disabled) with a temporary
+        recorder swapped onto the engine (and the disk executor/store when
+        out of core) and appends measured-vs-predicted timings, per-iteration
+        wall/exchange series and I/O overlap to the report.  The engine's own
+        ``obs`` recorder is restored afterwards."""
         _step, _matrix, _v0, _ctx, _mask, meta = self.prepare(spec, ctx)
         extra = {"spec": spec.name, "exchange": self.exchange}
         if meta["hm"] is not None:
             extra["dense_region_vertices"] = meta["n_dense"]
-        return planner.format_plan(meta["plan"], extra=extra)
+        text = planner.format_plan(meta["plan"], extra=extra)
+        if not live:
+            return text
+        from repro.obs import Recorder
+        from repro.obs.report import format_live_report
+
+        probe = Recorder()
+        targets = [self]
+        if meta["residency"] == "disk":
+            targets += [meta["executor"], meta["store"]]
+        saved = [(t, t.obs) for t in targets]
+        try:
+            for t in targets:
+                t.obs = probe
+            # tol=0.0 never converges, so the probe runs exactly live_iters
+            # iterations; overflow fallback is disabled — a probe should
+            # report the configured path, not silently measure another one.
+            self.run(spec, ctx, max_iters=live_iters, tol=0.0,
+                     _allow_fallback=False)
+        finally:
+            for t, o in saved:
+                t.obs = o
+        return text + "\n" + format_live_report(probe, plan=meta["plan"])
 
     def _capacity(self, pm: PartitionedMatrix, hm: HybridMatrix | None) -> int:
         if self.capacity_mode == "structural":
@@ -648,20 +732,38 @@ class PMVEngine:
         per_iter: list[dict] = []
         converged = False
         it = start_iter
+        obs = self.obs
         for it in range(start_iter, max_iters):
             t0 = time.perf_counter()
-            v_new, delta, stats = step(matrix, v, ctx_b, mask)
-            delta = float(delta)
+            with obs.span("pmv.iteration") as sp:
+                v_new, delta, stats = step(matrix, v, ctx_b, mask)
+                # the fence makes the span cover the device work, not just
+                # the dispatch; the null recorder's fence is identity, so the
+                # untraced path keeps XLA's async schedule untouched.
+                v_new = obs.fence(v_new)
+                delta = float(delta)
+                sp.set("iteration", it)
+                sp.set("delta", delta)
             wall = time.perf_counter() - t0
             rec = {k: float(np.asarray(x)) for k, x in stats.items()}
             rec.update(delta=delta, wall_s=wall, iteration=it)
             rec["io_elems"] = self._paper_io(meta, rec)
             per_iter.append(rec)
+            if obs.enabled:
+                obs.counter("pmv.iterations").add(1)
+                obs.series("pmv.delta").append(delta)
+                obs.series("pmv.iter_wall_s").append(wall)
+                obs.series("pmv.exchanged_bytes").append(rec.get("exchanged_bytes", 0.0))
+                obs.series("pmv.gathered_bytes").append(rec.get("gathered_bytes", 0.0))
+                if "store_bytes_read" in rec:  # disk residency: per-iter I/O
+                    obs.series("pmv.io_bytes").append(rec["store_bytes_read"])
+                    obs.series("pmv.io_overlap").append(rec["store_overlap"])
             v = v_new
             if rec.get("overflow", 0.0) > 0:
                 fb = self.fallback_overrides(meta["strategy"]) if _allow_fallback else None
                 if fb is not None:
                     label, overrides = fb
+                    obs.counter("pmv.fallbacks").add(1)
                     result = self._fallback_engine(meta, overrides).run(
                         spec, ctx,
                         max_iters=max_iters, tol=tol,
@@ -688,13 +790,32 @@ class PMVEngine:
             "physical_elems": sum(r.get("gathered_elems", 0.0) + r.get("exchanged_elems", 0.0) for r in per_iter),
             "logical_elems": sum(r.get("logical_elems", 0.0) for r in per_iter),
             "wall_s": sum(r["wall_s"] for r in per_iter),
+            "exchanged_bytes": sum(r.get("exchanged_bytes", 0.0) for r in per_iter),
+            "gathered_bytes": sum(r.get("gathered_bytes", 0.0) for r in per_iter),
         }
+        totals.update(self._io_totals(per_iter))
         return PMVResult(
             v=v_np, iterations=it, converged=converged,
             strategy=meta["strategy"], theta=meta["theta"], capacity=meta["capacity"],
             per_iter=per_iter, totals=totals,
         )
 
+
+    _IO_TOTAL_KEYS = ("store_bytes_read", "store_blocks_fetched",
+                      "store_blocks_skipped", "store_io_s", "store_wait_s")
+
+    @classmethod
+    def _io_totals(cls, per_iter: list[dict]) -> dict:
+        """Uniform disk-I/O leg of ``PMVResult.totals``: the DiskExecutor's
+        per-iteration ``io_stats()`` summed over the run, and the same keys
+        zeroed (overlap = 1.0, nothing to hide) for resident runs — callers
+        never branch on residency to read them."""
+        totals = {k: sum(r.get(k, 0.0) for r in per_iter)
+                  for k in cls._IO_TOTAL_KEYS}
+        io_s, wait_s = totals["store_io_s"], totals["store_wait_s"]
+        totals["store_overlap"] = (max(0.0, 1.0 - wait_s / io_s)
+                                   if io_s > 0.0 else 1.0)
+        return totals
 
     def fallback_overrides(self, strategy: str) -> tuple[str, dict] | None:
         """Overflow recovery (optimistic execution, sparse_exchange.py): the
@@ -722,7 +843,7 @@ class PMVEngine:
             payload_dtype=self.payload_dtype, backend=self.backend,
             scatter=self.scatter, stream=self.stream,
             pallas_interpret=self.pallas_interpret, base_weights=self.base_weights,
-            mesh=self.mesh, axis_name=self.axis_name,
+            mesh=self.mesh, axis_name=self.axis_name, obs=self.obs,
         )
         kwargs.update(overrides)
         if self.store is not None:

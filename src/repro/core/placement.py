@@ -682,9 +682,13 @@ def horizontal_step(spec: GimvSpec, stripe: BlockEdges, v_local, ctx_local, real
         fn = compute if axis_name is not None else jax.vmap(compute)
         v_new, r = fn(stripe, v_all, v_local, ctx_local, real_mask)
     b = stripe.count.shape[-1]
+    vb = jnp.dtype(spec.dtype).itemsize
     stats = {  # GLOBAL elements per iteration (all workers)
         "gathered_elems": jnp.asarray(b * (b - 1) * n_local * (nq or 1), jnp.float32),
         "exchanged_elems": jnp.asarray(0.0, jnp.float32),
+        "gathered_bytes": jnp.asarray(
+            b * (b - 1) * n_local * (nq or 1) * vb, jnp.float32),
+        "exchanged_bytes": jnp.asarray(0.0, jnp.float32),
     }
     return v_new, r, stats
 
@@ -758,10 +762,17 @@ def vertical_step(
         r, hstats = hierarchical_exchange(spec, idx, val, n_local, axis_name,
                                           scatter=scatter, interpret=interpret)
         v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
+        # wire bytes: intra slots ship an int32 index + payload values, the
+        # inter hop ships combined dense partials in the spec dtype.
+        intra_slots = hstats["intra_pod_elems"] / (1.0 + (nq or 1))
         stats = {
             "gathered_elems": jnp.asarray(0.0, jnp.float32),
             "exchanged_elems": hstats["intra_pod_elems"] + hstats["inter_pod_elems"],
             **hstats,
+            "gathered_bytes": jnp.asarray(0.0, jnp.float32),
+            "exchanged_bytes": (
+                intra_slots * (4.0 + (nq or 1) * val.dtype.itemsize)
+                + hstats["inter_pod_elems"] * jnp.dtype(spec.dtype).itemsize),
             "logical_elems": logical,
             "overflow": overflow,
         }
@@ -795,6 +806,10 @@ def vertical_step(
         stats = {  # GLOBAL elements per iteration
             "gathered_elems": jnp.asarray(0.0, jnp.float32),
             "exchanged_elems": jnp.asarray(b * (b - 1) * n_local * (nq or 1), jnp.float32),
+            "gathered_bytes": jnp.asarray(0.0, jnp.float32),
+            "exchanged_bytes": jnp.asarray(
+                b * (b - 1) * n_local * (nq or 1) * partials.dtype.itemsize,
+                jnp.float32),
             "logical_elems": logical,
         }
     else:
@@ -826,6 +841,10 @@ def vertical_step(
         stats = {  # GLOBAL elements; idx word + (1 or Q) value words per slot
             "gathered_elems": jnp.asarray(0.0, jnp.float32),
             "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * (1 + (nq or 1)), jnp.float32),
+            "gathered_bytes": jnp.asarray(0.0, jnp.float32),
+            "exchanged_bytes": jnp.asarray(
+                sparse_exchange.exchange_wire_bytes(
+                    b, capacity, nq, val.dtype.itemsize), jnp.float32),
             "logical_elems": logical,
             "overflow": overflow,
         }
@@ -938,6 +957,12 @@ def hybrid_step(
     stats = {  # GLOBAL elements per iteration
         "gathered_elems": jnp.asarray(b * (b - 1) * d_cap * (nq or 1), jnp.float32),
         "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * (1 + (nq or 1)), jnp.float32),
+        "gathered_bytes": jnp.asarray(
+            b * (b - 1) * d_cap * (nq or 1) * jnp.dtype(spec.dtype).itemsize,
+            jnp.float32),
+        "exchanged_bytes": jnp.asarray(
+            sparse_exchange.exchange_wire_bytes(
+                b, capacity, nq, val.dtype.itemsize), jnp.float32),
         "logical_elems": logical,
         "overflow": overflow,
     }

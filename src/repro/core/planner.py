@@ -152,6 +152,35 @@ class ExecutionPlan:
                 sched.append(("ell", bp.bucket_rows))
         return tuple(sched)
 
+    def block_attrs(self, i: int, j: int) -> dict:
+        """Static launch-span attributes of one sub-block: tactic, measured
+        shape, and the cost model's prediction — what the obs profiler
+        attaches to each ``launch.ell`` / ``launch.dense`` span so the
+        predicted-vs-measured report can join without replanning."""
+        bp = self.block(i, j)
+        return {
+            "i": i, "j": j, "tactic": bp.tactic, "nnz": bp.nnz,
+            "rows": bp.rows, "d_max": bp.d_max, "occupancy": bp.occupancy,
+            "predicted_cost": bp.cost,
+            "predicted_s": cost_model.slot_seconds(bp.cost),
+        }
+
+    def launch_cost(self, k: int, *, axis: str = "dest") -> float:
+        """Predicted slot cost of one launch-schedule step: destination
+        block k across every worker stripe (axis='dest', the vertical /
+        hybrid schedule) or source block k (axis='src', horizontal).  The
+        DiskExecutor attaches this to its per-step launch spans."""
+        if axis == "dest":
+            return sum(self.block(k, j).cost for j in range(self.b))
+        return sum(self.block(i, k).cost for i in range(self.b))
+
+    def launch_attrs(self, k: int, *, axis: str = "dest") -> dict:
+        """Static launch-span attributes of one schedule step (see
+        :meth:`launch_cost`)."""
+        cost = self.launch_cost(k, axis=axis)
+        return {"block": k, "axis": axis, "predicted_cost": cost,
+                "predicted_s": cost_model.slot_seconds(cost)}
+
     def memory_profile(self) -> dict:
         """Estimated live partial-buffer elements per worker of the
         vertical/hybrid step: 'materialized' holds all b destination-block

@@ -36,9 +36,20 @@ from jax import lax
 
 from repro.core.gimv import GimvSpec, segment_combine
 
-__all__ = ["compact_partials", "compact_chunk", "scatter_partials", "count_non_identity"]
+__all__ = ["compact_partials", "compact_chunk", "scatter_partials",
+           "count_non_identity", "exchange_wire_bytes"]
 
 COMPACT_METHODS = ("scan", "topk")
+
+
+def exchange_wire_bytes(b: int, capacity: int, nq: int | None,
+                        payload_itemsize: int) -> float:
+    """Static wire BYTES of one compact sparse-exchange round across all
+    workers — the byte-level form of the paper's headline metric: b(b-1)
+    shipped [capacity] slices, each slot an int32 index plus (1 or Q)
+    payload values (payload_dtype='bfloat16' halves the value leg, which is
+    exactly what this surfaces in stats['exchanged_bytes'])."""
+    return float(b * (b - 1) * capacity * (4 + (nq or 1) * payload_itemsize))
 
 
 def _reduce_sum(x, axis_name):

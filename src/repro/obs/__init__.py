@@ -1,0 +1,69 @@
+"""repro.obs: zero-overhead-when-disabled tracing + metrics for the PMV
+pipeline.
+
+- :mod:`repro.obs.recorder` — Recorder (spans + metrics registry), the
+  NULL_RECORDER no-op singleton, and ``as_recorder`` (the ``obs=`` knob
+  normalizer shared by PMVEngine / PMVServer / DiskBlockStore).
+- :mod:`repro.obs.trace` — Chrome trace-event JSON export (Perfetto /
+  ``chrome://tracing``) plus schema + span-nesting validators.
+- :mod:`repro.obs.report` — predicted-vs-measured cost calibration
+  (BENCH_obs.json) and the ``explain(live=True)`` report section.
+- :mod:`repro.obs.profiler` — standalone per-block kernel launch timing
+  (``launch.ell`` / ``launch.dense`` spans with plan predictions).
+"""
+from repro.obs.recorder import (
+    NULL_RECORDER,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullRecorder,
+    Recorder,
+    Series,
+    as_recorder,
+)
+from repro.obs.report import (
+    bench_obs_doc,
+    calibration_summary,
+    collect_launches,
+    format_live_report,
+    write_bench_obs,
+)
+from repro.obs.trace import (
+    TraceSchemaError,
+    check_span_nesting,
+    to_chrome_trace,
+    validate_chrome_trace,
+    write_chrome_trace,
+)
+
+__all__ = [
+    "Recorder",
+    "NullRecorder",
+    "NULL_RECORDER",
+    "as_recorder",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Series",
+    "to_chrome_trace",
+    "write_chrome_trace",
+    "validate_chrome_trace",
+    "check_span_nesting",
+    "TraceSchemaError",
+    "collect_launches",
+    "calibration_summary",
+    "bench_obs_doc",
+    "write_bench_obs",
+    "format_live_report",
+    "profile_block_launches",
+]
+
+
+def profile_block_launches(*args, **kwargs):
+    """Lazy forwarder: obs.profiler imports placement/kernels, which the
+    recorder-only consumers (engine, store) must not pay for at import."""
+    from repro.obs.profiler import profile_block_launches as fn
+
+    return fn(*args, **kwargs)

@@ -1,0 +1,183 @@
+"""Predicted-vs-measured cost reports: the calibration feed for the
+self-calibrating cost model (ROADMAP item 5).
+
+Every launch-shaped span the pipeline records carries the cost model's
+prediction in its attributes:
+
+- ``launch.ell`` / ``launch.dense`` (obs.profiler): one pre-partitioned
+  sub-block's ELL / dense-MXU kernel launch, ``predicted_cost`` in slot
+  units (cost_model.ell_block_cost / dense_block_cost) and ``predicted_s``
+  via cost_model.slot_seconds;
+- ``launch.disk_block`` (store.residency.DiskExecutor): one launch-schedule
+  step's per-block compute out of core;
+- ``store.fetch`` (store.residency.DiskBlockStore): one shard-slice read,
+  ``predicted_s`` via cost_model.disk_io_seconds — reported under the
+  ``disk_io`` kind.
+
+:func:`calibration_summary` joins each launch's measured wall time against
+its prediction and reduces to per-kind residuals — ``ratio`` (measured /
+predicted seconds, the constant a calibration pass would fold into
+SLOT_TIME_S / DISK_READ_BW) plus the implied measured unit costs.
+:func:`bench_obs_doc` packages that with the metrics dump into the
+``BENCH_obs.json`` schema the CI obs-smoke job uploads.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+import numpy as np
+
+from repro.core import cost_model
+
+__all__ = [
+    "collect_launches",
+    "calibration_summary",
+    "bench_obs_doc",
+    "write_bench_obs",
+    "format_live_report",
+]
+
+
+def collect_launches(recorder) -> list[dict]:
+    """Launch-shaped spans with their predictions, completion order."""
+    out = []
+    for ev in recorder.events:
+        name = ev["name"]
+        attrs = ev.get("attrs") or {}
+        if name.startswith("launch."):
+            kind = name[len("launch."):]
+        elif name == "store.fetch":
+            kind = "disk_io"
+        else:
+            continue
+        out.append({
+            "kind": kind,
+            "measured_s": ev["dur"],
+            "predicted_s": attrs.get("predicted_s"),
+            "predicted_cost": attrs.get("predicted_cost"),
+            "bytes": attrs.get("bytes"),
+            "attrs": attrs,
+        })
+    return out
+
+
+def _kind_summary(launches: list[dict]) -> dict:
+    measured = float(sum(l["measured_s"] for l in launches))
+    with_pred = [l for l in launches if l["predicted_s"]]
+    predicted = float(sum(l["predicted_s"] for l in with_pred))
+    ratios = [l["measured_s"] / l["predicted_s"] for l in with_pred
+              if l["measured_s"] > 0 and l["predicted_s"] > 0]
+    cost_slots = float(sum(l["predicted_cost"] or 0.0 for l in launches))
+    total_bytes = float(sum(l["bytes"] or 0.0 for l in launches))
+    out = {
+        "launches": len(launches),
+        "measured_s": measured,
+        "predicted_s": predicted,
+        # the calibration residual: >1 = the model is optimistic on this
+        # backend, <1 = pessimistic; a calibration pass divides it out.
+        "ratio": (measured / predicted) if predicted > 0 else None,
+        "ratio_median": float(np.median(ratios)) if ratios else None,
+        "log10_residual": (math.log10(measured / predicted)
+                           if measured > 0 and predicted > 0 else None),
+    }
+    if cost_slots > 0:
+        out["predicted_slots"] = cost_slots
+        out["measured_s_per_slot"] = measured / cost_slots  # calibrated unit
+    if total_bytes > 0:
+        out["bytes"] = total_bytes
+        if measured > 0:
+            out["measured_bw_bytes_per_s"] = total_bytes / measured
+    return out
+
+
+def calibration_summary(*recorders) -> dict:
+    """Per-kind predicted-vs-measured residuals across one or more
+    recorders (e.g. a resident profiling pass + a disk-residency run)."""
+    by_kind: dict[str, list[dict]] = {}
+    for rec in recorders:
+        for launch in collect_launches(rec):
+            by_kind.setdefault(launch["kind"], []).append(launch)
+    return {kind: _kind_summary(ls) for kind, ls in sorted(by_kind.items())}
+
+
+def bench_obs_doc(recorders: dict, *, overhead: dict | None = None,
+                  meta: dict | None = None) -> dict:
+    """The BENCH_obs.json schema: model constants, per-kind calibration
+    residuals (merged across the labelled recorders), per-recorder metric
+    dumps, and the obs-overhead measurement when provided."""
+    doc = {
+        "model": {
+            "slot_time_s": cost_model.SLOT_TIME_S,
+            "mxu_slot_advantage": cost_model.MXU_SLOT_ADVANTAGE,
+            "disk_read_bw": cost_model.DISK_READ_BW,
+        },
+        "calibration": calibration_summary(*recorders.values()),
+        "metrics": {label: rec.metrics.to_dicts()
+                    for label, rec in recorders.items()},
+    }
+    if overhead is not None:
+        doc["overhead"] = overhead
+    if meta is not None:
+        doc["meta"] = meta
+    return doc
+
+
+def write_bench_obs(path: str, doc: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def _series_values(recorder, name: str) -> list[float]:
+    inst = recorder.metrics.get(name)
+    return list(getattr(inst, "values", []) or [])
+
+
+def format_live_report(recorder, *, plan=None) -> str:
+    """Measured-run section for ``PMVEngine.explain(live=True)``: joins the
+    recorder's per-iteration series (and any launch spans) against the
+    plan's predictions."""
+    lines = ["live (measured):"]
+    walls = _series_values(recorder, "pmv.iter_wall_s")
+    if walls:
+        lines.append(
+            f"  iterations={len(walls)}"
+            f" median_iter={np.median(walls) * 1e3:.3f} ms"
+            f" total={sum(walls) * 1e3:.3f} ms")
+        if plan is not None and plan.planned_slots > 0:
+            pred = cost_model.slot_seconds(plan.planned_slots)
+            lines.append(
+                f"  predicted iter compute {pred * 1e3:.3f} ms"
+                f" ({plan.planned_slots:.0f} slots)"
+                f" -> measured/predicted {np.median(walls) / pred:.2f}x")
+    deltas = _series_values(recorder, "pmv.delta")
+    if deltas:
+        lines.append(
+            f"  delta trajectory: {deltas[0]:.3e} -> {deltas[-1]:.3e}"
+            f" over {len(deltas)} iters")
+    xbytes = _series_values(recorder, "pmv.exchanged_bytes")
+    if xbytes and sum(xbytes):
+        lines.append(f"  exchange: {np.median(xbytes):.0f} wire B/iter"
+                     f" (paper's headline metric, measured)")
+    gbytes = _series_values(recorder, "pmv.gathered_bytes")
+    if gbytes and sum(gbytes):
+        lines.append(f"  gather: {np.median(gbytes):.0f} wire B/iter")
+    iobytes = _series_values(recorder, "pmv.io_bytes")
+    if iobytes and sum(iobytes):
+        overlaps = _series_values(recorder, "pmv.io_overlap")
+        lines.append(
+            f"  disk I/O: {np.median(iobytes):.0f} B/iter read,"
+            f" prefetch overlap {np.median(overlaps):.2f}" if overlaps else
+            f"  disk I/O: {np.median(iobytes):.0f} B/iter read")
+    calib = calibration_summary(recorder)
+    for kind, s in calib.items():
+        if s["ratio"] is None:
+            continue
+        lines.append(
+            f"  {kind}: {s['launches']} launches,"
+            f" predicted {s['predicted_s'] * 1e3:.3f} ms"
+            f" -> measured {s['measured_s'] * 1e3:.3f} ms"
+            f" ({s['ratio']:.2f}x)")
+    if len(lines) == 1:
+        lines.append("  (no measured iterations recorded)")
+    return "\n".join(lines)

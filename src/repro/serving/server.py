@@ -29,6 +29,7 @@ import numpy as np
 from repro.core import algorithms
 from repro.core.engine import PMVEngine, StepConfig, _squeeze0, placement_call
 from repro.core.gimv import GimvSpec
+from repro.obs import as_recorder
 from repro.serving.batcher import DEFAULT_BUCKETS, Query, QueryBatcher, QueryResult
 
 __all__ = ["PMVServer", "QueryFamily", "FAMILIES", "make_batched_step", "per_query_delta"]
@@ -238,6 +239,7 @@ class PMVServer:
         store=None,
         residency: str = "device",
         store_budget_bytes: int | None = None,
+        obs=None,
     ):
         self.store = None
         self.residency = residency
@@ -265,21 +267,28 @@ class PMVServer:
         self.max_iters = int(max_iters)
         self.mesh = mesh
         self.axis_name = axis_name
+        # obs is shared with every family engine (and through it the disk
+        # executor/store), so one recorder traces the whole serving run.
+        self.obs = as_recorder(obs)
         self._engine_kwargs = dict(
             strategy=strategy, theta=theta, psi=psi, exchange=exchange,
             capacity=capacity, slack=slack, payload_dtype=payload_dtype,
             backend=backend, scatter=scatter, stream=stream,
             pallas_interpret=pallas_interpret,
             base_weights=base_weights, mesh=mesh, axis_name=axis_name,
+            obs=self.obs,
         )
         self._batcher = QueryBatcher(buckets)
         self._families: dict[tuple, _FamilyState] = {}
         self._family_overrides: dict[tuple, dict] = {}  # overflow fallbacks
         self._results: dict[int, QueryResult] = {}
         self._next_qid = 0
+        self._fallback_events: list[str] = []  # fallback labels, batch order
+        self._occupancy_sum = 0.0              # sum over batches of |queries|/Q
         self._stats = {
             "batches": 0, "queries": 0, "admitted_mid_batch": 0,
-            "overflow_fallbacks": 0,
+            "overflow_fallbacks": 0, "retired": 0, "requeued": 0,
+            "queue_wait_s": 0.0,
             "iterations": 0.0, "gathered_elems": 0.0, "exchanged_elems": 0.0,
             "logical_elems": 0.0, "wall_s": 0.0,
         }
@@ -318,7 +327,16 @@ class PMVServer:
         return [results[qid] for qid in qids]
 
     def stats(self) -> dict:
-        return dict(self._stats)
+        """Serving counters: batches/queries/iterations plus the retirement
+        ledger — ``retired`` answered columns, ``requeued`` queries sent back
+        through the batcher by an overflow fallback, ``fallback_events``
+        (the fallback labels, batch order), total ``queue_wait_s`` and mean
+        ``batch_occupancy`` (real queries / bucket capacity)."""
+        out = dict(self._stats)
+        out["fallback_events"] = list(self._fallback_events)
+        out["batch_occupancy"] = (
+            self._occupancy_sum / out["batches"] if out["batches"] else 0.0)
+        return out
 
     # ------------------------------------------------------------------
     def _family_state(self, key: tuple, sample: Query) -> _FamilyState:
@@ -367,10 +385,21 @@ class PMVServer:
         return v_col, ctx_cols
 
     def _run_batch(self, key: tuple, batch: list[Query]) -> None:
+        obs = self.obs
+        with obs.span("serve.batch") as batch_span:
+            batch_span.set("family", str(key))
+            self._run_batch_inner(key, batch, batch_span)
+
+    def _run_batch_inner(self, key: tuple, batch: list[Query], batch_span) -> None:
+        obs = self.obs
         st = self._family_state(key, batch[0])
         part = st.part
         n_q = self._batcher.bucket_for(len(batch))
         self._stats["batches"] += 1
+        self._occupancy_sum += len(batch) / n_q
+        obs.gauge("serve.batch_occupancy").set(len(batch) / n_q)
+        batch_span.set("n_q", n_q)
+        batch_span.set("queries", len(batch))
 
         slots: list[Query | None] = [None] * n_q
         v_np = np.zeros((self.b, part.n_local, n_q), st.spec.dtype)
@@ -392,11 +421,18 @@ class PMVServer:
         iters = np.zeros(n_q, np.int64)
         tols = np.array([s.tol if s else 0.0 for s in slots])
         caps = np.array([(s.max_iters or self.max_iters) if s else 0 for s in slots])
+        # queue wait ends when a query's column starts iterating: now for the
+        # initial slots, the admission instant for mid-batch admissions.
+        t_start = time.perf_counter()
+        starts = np.full(n_q, t_start)
 
         while active.any():
             t0 = time.perf_counter()
-            v_new, deltas, stats = st.step(st.matrix, v, ctx, st.mask, jnp.asarray(active))
-            deltas = np.asarray(deltas)
+            with obs.span("serve.iteration") as sp:
+                v_new, deltas, stats = st.step(st.matrix, v, ctx, st.mask, jnp.asarray(active))
+                v_new = obs.fence(v_new)
+                deltas = np.asarray(deltas)
+                sp.set("active", int(active.sum()))
             self._stats["wall_s"] += time.perf_counter() - t0
             self._stats["iterations"] += 1
             for k in ("gathered_elems", "exchanged_elems", "logical_elems"):
@@ -421,12 +457,16 @@ class PMVServer:
                         f"exchange='dense'; unanswered qids in this batch: {lost}")
                 label, overrides = fb
                 self._stats["overflow_fallbacks"] += 1
+                self._fallback_events.append(label)
+                obs.counter("serve.fallbacks").add(1)
+                batch_span.set("fallback", label)
                 self._family_overrides[key] = {**self._family_overrides.get(key, {}),
                                                **overrides}
                 del self._families[key]  # rebuilt with the fallback on requeue
                 for query in slots:
                     if query is not None:
                         self._batcher.add(query)  # keeps qid -> result mapping
+                        self._stats["requeued"] += 1
                 return
             iters[active] += 1
 
@@ -438,11 +478,20 @@ class PMVServer:
                 # retire the converged (or capped) column
                 query = slots[q_i]
                 vec = part.from_blocked(np.asarray(v_new[:, :, q_i]))
+                latency = time.perf_counter() - query.t_submit
                 self._results[query.qid] = QueryResult(
                     qid=query.qid, query=query, vector=vec,
                     iterations=int(iters[q_i]), converged=bool(done),
-                    latency_s=time.perf_counter() - query.t_submit,
+                    latency_s=latency,
                 )
+                self._stats["retired"] += 1
+                wait = max(0.0, starts[q_i] - query.t_submit)
+                self._stats["queue_wait_s"] += wait
+                if obs.enabled:
+                    obs.counter("serve.retired").add(1)
+                    obs.histogram("serve.query_latency_s").observe(latency)
+                    obs.histogram("serve.queue_wait_s").observe(wait)
+                    obs.histogram("serve.query_iterations").observe(int(iters[q_i]))
                 # admit a waiting query of the same family into the freed slot
                 waiting = self._batcher.pop_waiting(key)
                 if waiting is not None:
@@ -453,6 +502,7 @@ class PMVServer:
                     iters[q_i] = 0
                     tols[q_i] = waiting.tol
                     caps[q_i] = waiting.max_iters or self.max_iters
+                    starts[q_i] = time.perf_counter()
                 else:
                     slots[q_i] = None
                     active[q_i] = False

@@ -39,6 +39,7 @@ from repro.core import cost_model, placement, sparse_exchange
 from repro.core.gimv import GimvSpec, combine_elementwise
 from repro.core.partition import Partition
 from repro.core.planner import ExecutionPlan
+from repro.obs import as_recorder
 from repro.store.manifest import Manifest, open_store, row_weights
 
 __all__ = ["RESIDENCY_MODES", "DiskBlockStore", "DiskExecutor",
@@ -81,11 +82,12 @@ class DiskBlockStore:
     """
 
     def __init__(self, store, striping: str, spec: GimvSpec, *,
-                 budget_bytes: int | None = None):
+                 budget_bytes: int | None = None, obs=None):
         assert striping in ("vertical", "horizontal"), striping
         self.manifest: Manifest = open_store(store)
         self.striping = striping
         self.spec = spec
+        self.obs = as_recorder(obs)
         self.part: Partition = self.manifest.part
         b = self.manifest.b
         self._mm = [self.manifest.stripe_arrays(striping, w, mmap=True)
@@ -116,19 +118,26 @@ class DiskBlockStore:
         """Block k's shard slice across workers: seg/gat [b_w, E_cap] int32,
         cnt [b_w] int32, w [b_w, E_cap] f32 | None."""
         b = self.manifest.b
-        seg = np.stack([np.asarray(self._mm[w][0][k]) for w in range(b)])
-        gat = np.stack([np.asarray(self._mm[w][1][k]) for w in range(b)])
-        cnt = self._cnt[:, k]
-        w = None
-        if self.spec.needs_weights:
-            w = np.stack([
-                row_weights(self.spec, self.part,
-                            wk if self.striping == "vertical" else k,
-                            gat[wk], cnt[wk], self.out_deg)
-                for wk in range(b)])
-        self.stats.bytes_read += seg.nbytes + gat.nbytes + cnt.nbytes
+        with self.obs.span("store.fetch") as sp:
+            seg = np.stack([np.asarray(self._mm[w][0][k]) for w in range(b)])
+            gat = np.stack([np.asarray(self._mm[w][1][k]) for w in range(b)])
+            cnt = self._cnt[:, k]
+            w = None
+            if self.spec.needs_weights:
+                w = np.stack([
+                    row_weights(self.spec, self.part,
+                                wk if self.striping == "vertical" else k,
+                                gat[wk], cnt[wk], self.out_deg)
+                    for wk in range(b)])
+            read = seg.nbytes + gat.nbytes + cnt.nbytes
+            sp.set("block", k)
+            sp.set("bytes", read)
+            sp.set("predicted_s", cost_model.disk_io_seconds(read))
+        self.obs.counter("store.bytes_read").add(read)
+        self.obs.counter("store.blocks_fetched").add(1)
+        self.stats.bytes_read += read
         self.stats.blocks_fetched += 1
-        resident = seg.nbytes + gat.nbytes + cnt.nbytes + (0 if w is None else w.nbytes)
+        resident = read + (0 if w is None else w.nbytes)
         self.peak_resident_bytes = max(self.peak_resident_bytes, 2 * resident)
         return {"seg": seg, "gat": gat, "w": w, "cnt": cnt}
 
@@ -145,13 +154,18 @@ def _prefetched(store: DiskBlockStore, schedule: list[int]):
 
     if not schedule:
         return
+    obs = store.obs
     with ThreadPoolExecutor(max_workers=1) as ex:
         fut = ex.submit(timed_fetch, schedule[0])
         for t, k in enumerate(schedule):
             t0 = time.perf_counter()
-            sl, io_s = fut.result()
-            stats.wait_s += time.perf_counter() - t0
+            with obs.span("store.wait"):
+                sl, io_s = fut.result()
+            wait = time.perf_counter() - t0
+            stats.wait_s += wait
             stats.io_s += io_s
+            obs.counter("store.io_s").add(io_s)
+            obs.counter("store.wait_s").add(wait)
             if t + 1 < len(schedule):
                 fut = ex.submit(timed_fetch, schedule[t + 1])
             yield k, sl
@@ -164,7 +178,7 @@ class DiskExecutor:
 
     def __init__(self, spec: GimvSpec, part: Partition, plan: ExecutionPlan,
                  store: DiskBlockStore, *, capacity: int | None = None,
-                 scatter: str = "segment", interpret: bool = False):
+                 scatter: str = "segment", interpret: bool = False, obs=None):
         self.spec = spec
         self.part = part
         self.plan = plan
@@ -172,6 +186,7 @@ class DiskExecutor:
         self.capacity = capacity
         self.scatter = scatter
         self.interpret = interpret
+        self.obs = as_recorder(obs)
         b = part.b
         nnz = store.block_nnz
         if plan.strategy == "vertical":
@@ -183,6 +198,13 @@ class DiskExecutor:
         else:
             self.schedule = [jj for jj in range(b) if nnz[:, jj].any()]
         self.skipped = b - len(self.schedule)
+        # static per-launch span attributes (plan-predicted costs), built
+        # once so the hot loop never allocates them.  Built even when obs is
+        # disabled (b small dicts at construction time) so a recorder swapped
+        # in later — explain(live=True) — still gets predicted costs.
+        axis = "dest" if plan.strategy == "vertical" else "src"
+        self._launch_attrs = {
+            k: plan.launch_attrs(k, axis=axis) for k in self.schedule}
         self._jits: dict = {}
 
     # -- jitted bodies (built per (batched,) signature, cached) ----------
@@ -265,10 +287,12 @@ class DiskExecutor:
         val_rows = [val_pad] * b
         over = jnp.zeros((), jnp.float32)
         logical = jnp.zeros((), jnp.float32)
+        obs = self.obs
         for i, sl in _prefetched(store, self.schedule):
             t0 = time.perf_counter()
-            idx_i, val_i, ov_i, lg_i = block_fn(
-                sl["seg"], sl["gat"], sl["w"], sl["cnt"], v)
+            with obs.span("launch.disk_block", self._launch_attrs.get(i)):
+                idx_i, val_i, ov_i, lg_i = obs.fence(block_fn(
+                    sl["seg"], sl["gat"], sl["w"], sl["cnt"], v))
             idx_rows[i], val_rows[i] = idx_i, val_i
             over = over + jnp.sum(ov_i)
             logical = logical + jnp.sum(lg_i)
@@ -288,9 +312,11 @@ class DiskExecutor:
         store.stats.blocks_skipped = self.skipped
         contrib_fn = self._jit("hcontrib", self._horizontal_contrib_fn)
         r = jnp.full(v.shape, jnp.asarray(self.spec.identity, self.spec.dtype))
+        obs = self.obs
         for jj, sl in _prefetched(store, self.schedule):
             t0 = time.perf_counter()
-            c = contrib_fn(sl["seg"], sl["gat"], sl["w"], sl["cnt"], v[jj])
+            with obs.span("launch.disk_block", self._launch_attrs.get(jj)):
+                c = obs.fence(contrib_fn(sl["seg"], sl["gat"], sl["w"], sl["cnt"], v[jj]))
             r = combine_elementwise(self.spec, r, c)
             store.stats.compute_s += time.perf_counter() - t0
         tail = self._jit("htail", self._horizontal_tail_fn)
@@ -314,6 +340,7 @@ class DiskExecutor:
         placements plus the store_* I/O accounting."""
         b, n_local = self.part.b, self.part.n_local
         nq = v.shape[-1] if v.ndim == 3 else None
+        vb = jnp.dtype(self.spec.dtype).itemsize
         if self.plan.strategy == "vertical":
             v_new, _r, delta, over, logical = self.vertical_iteration(v, ctx, mask)
             stats = {
@@ -322,6 +349,10 @@ class DiskExecutor:
                 # accounting (compact_partials clamps the actual buffers)
                 "exchanged_elems": jnp.asarray(
                     b * (b - 1) * self.capacity * (1 + (nq or 1)), jnp.float32),
+                "gathered_bytes": jnp.asarray(0.0, jnp.float32),
+                "exchanged_bytes": jnp.asarray(
+                    sparse_exchange.exchange_wire_bytes(
+                        b, self.capacity, nq, vb), jnp.float32),
                 "logical_elems": logical,
                 "overflow": over,
             }
@@ -331,6 +362,9 @@ class DiskExecutor:
                 "gathered_elems": jnp.asarray(
                     b * (b - 1) * n_local * (nq or 1), jnp.float32),
                 "exchanged_elems": jnp.asarray(0.0, jnp.float32),
+                "gathered_bytes": jnp.asarray(
+                    b * (b - 1) * n_local * (nq or 1) * vb, jnp.float32),
+                "exchanged_bytes": jnp.asarray(0.0, jnp.float32),
             }
         stats.update(self.io_stats())
         return v_new, delta, stats

@@ -1,0 +1,368 @@
+"""repro.obs (ISSUE 6): tracing/metrics correctness, zero-overhead-when-
+disabled guarantees, trace schema + nesting validation, uniform result
+totals, server stats, and the predicted-vs-measured calibration join."""
+import json
+import tracemalloc
+
+import numpy as np
+import pytest
+
+import repro.obs.recorder as recorder_mod
+from repro.core import PMVEngine, pagerank
+from repro.graph.generators import erdos_renyi
+from repro.obs import (
+    NULL_RECORDER,
+    NullRecorder,
+    Recorder,
+    TraceSchemaError,
+    as_recorder,
+    calibration_summary,
+    check_span_nesting,
+    validate_chrome_trace,
+)
+from repro.obs.profiler import profile_block_launches
+from test_fuzz_parity import SEMIRING_CASES, TOPOLOGIES, _fuzz_edges
+
+
+# ---------------------------------------------------------------------------
+# Recorder / metrics basics.
+# ---------------------------------------------------------------------------
+
+def test_recorder_spans_and_metrics():
+    rec = Recorder()
+    with rec.span("outer") as sp:
+        sp.set("k", 1)
+        with rec.span("inner"):
+            pass
+    rec.counter("c").add(2.0)
+    rec.counter("c").add(3.0)
+    rec.gauge("g").set(7.0)
+    rec.histogram("h").observe(1.0)
+    rec.histogram("h").observe(3.0)
+    rec.series("s").append(0.5)
+    assert [e["name"] for e in rec.events] == ["inner", "outer"]  # finish order
+    assert rec.spans("outer")[0]["attrs"] == {"k": 1}
+    assert rec.total("outer") >= rec.total("inner") >= 0.0
+    assert rec.counter("c").value == 5.0 and rec.counter("c").events == 2
+    assert rec.gauge("g").value == 7.0
+    h = rec.histogram("h").to_dict()
+    assert h["count"] == 2 and h["min"] == 1.0 and h["max"] == 3.0
+    assert h["mean"] == 2.0 and h["p50"] in (1.0, 3.0)
+    assert rec.series("s").values == [0.5]
+    dumps = rec.metrics.to_dicts()
+    assert [d["name"] for d in dumps] == ["c", "g", "h", "s"]
+
+
+def test_metric_kind_mismatch_raises():
+    rec = Recorder()
+    rec.counter("x").add(1)
+    with pytest.raises(TypeError, match="already registered"):
+        rec.gauge("x")
+
+
+def test_as_recorder_normalization():
+    assert as_recorder(None) is NULL_RECORDER
+    assert as_recorder(False) is NULL_RECORDER
+    assert isinstance(as_recorder(True), Recorder)
+    rec = Recorder()
+    assert as_recorder(rec) is rec
+    assert as_recorder(NULL_RECORDER) is NULL_RECORDER
+    with pytest.raises(TypeError):
+        as_recorder("yes")
+
+
+def test_null_recorder_is_allocation_free_singletons():
+    """The disabled API hands out module singletons — span/counter/etc.
+    never allocate, and fence does NOT synchronize (returns its argument)."""
+    nr = NULL_RECORDER
+    assert nr.span("a") is nr.span("b")
+    assert nr.counter("a") is nr.gauge("b") is nr.histogram("c") is nr.series("d")
+    sentinel = object()
+    assert nr.fence(sentinel) is sentinel
+    assert nr.spans() == [] and nr.total("x") == 0.0
+    assert isinstance(nr, NullRecorder) and not nr.enabled
+
+
+def test_disabled_recorder_allocates_nothing_on_hot_path():
+    """tracemalloc filtered to the obs module: a traced-shaped hot loop
+    against NULL_RECORDER performs zero Python allocations inside obs."""
+    nr = NULL_RECORDER
+
+    def hot_loop():
+        for it in range(200):
+            with nr.span("pmv.iteration") as sp:
+                sp.set("iteration", it)
+            nr.counter("pmv.iterations").add(1)
+            nr.series("pmv.delta").append(0.0)
+            nr.fence(it)
+
+    hot_loop()  # warm any lazy caches
+    filt = tracemalloc.Filter(True, recorder_mod.__file__)
+    tracemalloc.start()
+    try:
+        hot_loop()
+        snap = tracemalloc.take_snapshot().filter_traces([filt])
+    finally:
+        tracemalloc.stop()
+    leaks = [(s.traceback, s.size) for s in snap.statistics("lineno") if s.size]
+    assert not leaks, leaks
+
+
+# ---------------------------------------------------------------------------
+# Trace export: schema + nesting.
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema_and_nesting(tmp_path):
+    rec = Recorder()
+    with rec.span("a", {"x": np.int32(3)}):
+        with rec.span("b"):
+            pass
+        with rec.span("c"):
+            pass
+    doc = rec.to_chrome_trace()
+    n = validate_chrome_trace(doc)
+    assert n == 3
+    check_span_nesting(doc)
+    path = tmp_path / "trace.json"
+    rec.write_chrome_trace(str(path))
+    reloaded = json.loads(path.read_text())
+    assert validate_chrome_trace(reloaded) == 3
+    ev_a = next(e for e in reloaded["traceEvents"] if e["name"] == "a")
+    assert ev_a["args"] == {"x": 3}  # numpy attr became a plain int
+
+
+def test_chrome_trace_schema_rejects_malformed():
+    with pytest.raises(TraceSchemaError):
+        validate_chrome_trace({"no": "traceEvents"})
+    bad = {"traceEvents": [{"name": "x", "ph": "X", "ts": 0.0,
+                            "pid": 0, "tid": 0}]}  # X without dur
+    with pytest.raises(TraceSchemaError):
+        validate_chrome_trace(bad)
+    bad = {"traceEvents": [{"name": "x", "ph": "Q", "ts": 0.0, "dur": 1.0,
+                            "pid": 0, "tid": 0}]}  # unknown phase
+    with pytest.raises(TraceSchemaError):
+        validate_chrome_trace(bad)
+
+
+def test_span_nesting_detects_partial_overlap():
+    doc = {"traceEvents": [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 100.0, "pid": 0, "tid": 0},
+        {"name": "b", "ph": "X", "ts": 50.0, "dur": 100.0, "pid": 0, "tid": 0},
+    ]}
+    with pytest.raises(Exception, match="overlap"):
+        check_span_nesting(doc)
+
+
+def test_metrics_jsonl_roundtrip(tmp_path):
+    rec = Recorder()
+    rec.counter("bytes").add(10)
+    rec.series("delta").append(0.25)
+    path = tmp_path / "metrics.jsonl"
+    rec.write_metrics_jsonl(str(path))
+    rows = [json.loads(l) for l in path.read_text().splitlines()]
+    assert {r["name"]: r["kind"] for r in rows} == {
+        "bytes": "counter", "delta": "series"}
+
+
+# ---------------------------------------------------------------------------
+# Engine: recorder on/off bitwise parity + instrumented spans/series.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+@pytest.mark.parametrize("semiring", sorted(SEMIRING_CASES))
+def test_recorder_onoff_bitwise_parity(topology, semiring):
+    make_spec, symmetrize, _exact = SEMIRING_CASES[semiring]
+    rng = np.random.default_rng(hash((topology, semiring)) % 2**32)
+    n, b = 48, 4
+    edges = _fuzz_edges(topology, n, b, rng)
+    spec = make_spec(n)
+
+    def solve(obs):
+        eng = PMVEngine(edges, n, b=b, strategy="vertical", backend="auto",
+                        symmetrize=symmetrize, obs=obs)
+        return eng.run(spec, max_iters=6)
+
+    r_off = solve(None)
+    rec = Recorder()
+    r_on = solve(rec)
+    assert np.array_equal(r_off.v, r_on.v)  # bitwise, not allclose
+    assert np.array_equal(r_off.deltas, r_on.deltas)
+    assert rec.spans("pmv.iteration")
+    assert len(rec.series("pmv.delta").values) == r_on.iterations
+
+
+def test_recorder_onoff_bitwise_parity_disk(tmp_path, small_graph):
+    from repro.store import ingest_edges
+
+    edges, n = small_graph
+    ingest_edges(edges, n, 4, str(tmp_path))
+
+    def solve(obs):
+        eng = PMVEngine(None, store=str(tmp_path), residency="disk",
+                        strategy="vertical", obs=obs)
+        return eng.run(pagerank(n), max_iters=5)
+
+    r_off = solve(None)
+    rec = Recorder()
+    r_on = solve(rec)
+    assert np.array_equal(r_off.v, r_on.v)
+    doc = rec.to_chrome_trace()
+    validate_chrome_trace(doc)
+    check_span_nesting(doc)
+    names = {e["name"] for e in rec.events}
+    assert {"launch.disk_block", "store.fetch", "pmv.iteration"} <= names
+    # every disk launch carries the plan's prediction for calibration
+    for ev in rec.spans("launch.disk_block"):
+        assert ev["attrs"]["predicted_s"] > 0.0
+
+
+def test_engine_spans_nest_and_cover_prepare(small_graph):
+    edges, n = small_graph
+    rec = Recorder()
+    eng = PMVEngine(edges, n, b=4, strategy="vertical", backend="auto", obs=rec)
+    eng.run(pagerank(n), max_iters=3)
+    names = {e["name"] for e in rec.events}
+    assert {"prepare.partition", "prepare.stripes", "prepare.plan",
+            "prepare.pack", "prepare.device_put", "pmv.iteration"} <= names
+    doc = rec.to_chrome_trace()
+    validate_chrome_trace(doc)
+    check_span_nesting(doc)
+    assert rec.gauge("plan.predicted_slots").value > 0
+    assert rec.counter("pmv.iterations").value == 3
+
+
+def test_result_totals_uniform_and_deltas(small_graph, tmp_path):
+    from repro.store import ingest_edges
+
+    edges, n = small_graph
+    spec = pagerank(n)
+    r_res = PMVEngine(edges, n, b=4, strategy="vertical").run(spec, max_iters=4)
+    ingest_edges(edges, n, 4, str(tmp_path))
+    r_disk = PMVEngine(None, store=str(tmp_path), residency="disk",
+                       strategy="vertical").run(spec, max_iters=4)
+    keys = {"store_bytes_read", "store_blocks_fetched", "store_blocks_skipped",
+            "store_io_s", "store_wait_s", "store_overlap",
+            "exchanged_bytes", "gathered_bytes"}
+    for r in (r_res, r_disk):
+        assert keys <= set(r.totals)
+        assert r.deltas.shape == (r.iterations,)
+        assert np.array_equal(r.deltas,
+                              [it["delta"] for it in r.per_iter])
+    # resident: zeroed I/O leg; disk: real read accounting, summed over iters
+    assert r_res.totals["store_bytes_read"] == 0.0
+    assert r_res.totals["store_overlap"] == 1.0
+    assert r_disk.totals["store_bytes_read"] > 0.0
+    assert r_disk.totals["store_blocks_fetched"] == sum(
+        it["store_blocks_fetched"] for it in r_disk.per_iter)
+    assert r_res.totals["exchanged_bytes"] > 0.0  # vertical ships the exchange
+
+
+# ---------------------------------------------------------------------------
+# Calibration: predicted-vs-measured joins.
+# ---------------------------------------------------------------------------
+
+def test_profiler_calibration_summary(small_graph):
+    edges, n = small_graph
+    eng = PMVEngine(edges, n, b=4, strategy="vertical", backend="auto")
+    rec = profile_block_launches(eng, pagerank(n), repeats=2)
+    cal = calibration_summary(rec)
+    assert "ell" in cal
+    s = cal["ell"]
+    assert s["launches"] > 0 and s["launches"] % 2 == 0  # repeats=2
+    assert s["measured_s"] > 0.0 and s["predicted_s"] > 0.0
+    assert s["ratio"] > 0.0 and s["predicted_slots"] > 0.0
+    doc = rec.to_chrome_trace()
+    validate_chrome_trace(doc)
+    check_span_nesting(doc)
+
+
+def test_bench_obs_doc_schema(small_graph):
+    from repro.obs import bench_obs_doc
+
+    edges, n = small_graph
+    rec = Recorder()
+    PMVEngine(edges, n, b=4, strategy="vertical", backend="auto",
+              obs=rec).run(pagerank(n), max_iters=3)
+    doc = bench_obs_doc({"resident": rec}, overhead={"ratio": 1.0},
+                        meta={"n": n})
+    assert set(doc) == {"model", "calibration", "metrics", "overhead", "meta"}
+    assert doc["model"]["slot_time_s"] > 0
+    assert "resident" in doc["metrics"]
+    json.dumps(doc)  # fully serializable
+
+
+def test_explain_live_appends_measured_section(small_graph):
+    edges, n = small_graph
+    eng = PMVEngine(edges, n, b=4, strategy="vertical", backend="auto")
+    text = eng.explain(pagerank(n), live=True)
+    assert "ExecutionPlan:" in text
+    assert "live (measured):" in text
+    assert "iterations=3" in text
+    assert eng.obs is NULL_RECORDER  # probe recorder was restored
+
+
+def test_explain_live_disk_traces_launches(tmp_path, small_graph):
+    from repro.store import ingest_edges
+
+    edges, n = small_graph
+    ingest_edges(edges, n, 4, str(tmp_path))
+    eng = PMVEngine(None, store=str(tmp_path), residency="disk",
+                    strategy="vertical")
+    text = eng.explain(pagerank(n), live=True)
+    assert "live (measured):" in text
+    assert "disk_block" in text       # calibration line for the disk launches
+    assert "disk I/O" in text
+    # the swapped probe recorder must not leak into the executor/store
+    _, _, _, _, _, meta = eng.prepare(pagerank(n))
+    assert meta["executor"].obs is NULL_RECORDER
+    assert meta["store"].obs is NULL_RECORDER
+
+
+# ---------------------------------------------------------------------------
+# Server stats + instruments.
+# ---------------------------------------------------------------------------
+
+def test_server_stats_and_histograms(small_graph):
+    from repro.serving import PMVServer
+    from repro.serving.batcher import Query
+
+    edges, n = small_graph
+    rec = Recorder()
+    srv = PMVServer(edges, n, b=4, strategy="vertical", backend="auto",
+                    obs=rec)
+    qs = [Query(spec_kind="pagerank", tol=1e-4),
+          Query(spec_kind="rwr", source=3, c=0.2, tol=1e-4)]
+    results = srv.serve(qs)
+    assert len(results) == 2 and all(r.converged for r in results)
+    s = srv.stats()
+    assert s["retired"] == 2 and s["requeued"] == 0
+    assert s["fallback_events"] == []
+    assert 0.0 < s["batch_occupancy"] <= 1.0
+    assert s["queue_wait_s"] >= 0.0
+    lat = rec.histogram("serve.query_latency_s").to_dict()
+    assert lat["count"] == 2 and lat["min"] > 0.0
+    assert rec.histogram("serve.queue_wait_s").to_dict()["count"] == 2
+    assert rec.counter("serve.retired").value == 2
+    assert {e["name"] for e in rec.events} >= {"serve.batch", "serve.iteration"}
+    doc = rec.to_chrome_trace()
+    validate_chrome_trace(doc)
+    check_span_nesting(doc)
+
+
+def test_server_obs_off_is_bitwise_identical(small_graph):
+    from repro.serving import PMVServer
+    from repro.serving.batcher import Query
+
+    edges, n = small_graph
+
+    def serve(obs):
+        srv = PMVServer(edges, n, b=4, strategy="vertical", backend="auto",
+                        obs=obs)
+        return srv.serve([Query(spec_kind="pagerank", tol=1e-4),
+                          Query(spec_kind="sssp", source=1, tol=0.5)])
+
+    r_off = serve(None)
+    r_on = serve(Recorder())
+    for a, b_ in zip(r_off, r_on):
+        assert np.array_equal(a.vector, b_.vector)
+        assert a.iterations == b_.iterations
