@@ -1,0 +1,173 @@
+"""CI chaos smoke (ISSUE 7): seeded fault injection over BOTH residencies.
+
+Ingests an RMAT graph, then proves the repro.faults recovery contract the
+way CI can gate on:
+
+  disk      PageRank under a recoverable FaultPlan — one shard corruption
+            (caught by the manifest checksums), two transient IOErrors
+            (absorbed by the retry layer) and a mid-run kill (resumed from
+            the atomic iteration checkpoint) — must be BITWISE the
+            fault-free run.
+  resident  the same solve at residency='device' with a kill-and-resume
+            plan (the only fault class with no fetch path to inject into)
+            must also be bitwise clean.
+
+Also audits the whole store (verify_store) and checks the fault ledger:
+every scheduled event fired, retries stayed within the policy budget, and
+each injected fault kind is visible in the obs counters.  Writes:
+
+    CHAOS_smoke/report.json        parity + ledger report (artifact)
+    CHAOS_smoke/fault_trace.jsonl  the faulty run's full metrics dump —
+                                   fault.injected.* / fault.retry /
+                                   fault.recovered / store.verify_failures
+    CHAOS_smoke/trace.json         Chrome trace of the faulty disk run
+
+Exits non-zero on any parity or ledger failure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import PMVEngine, pagerank
+from repro.faults import (
+    CorruptFetch,
+    FaultPlan,
+    InjectedKill,
+    KillAtIteration,
+    RetryPolicy,
+    TransientIO,
+)
+from repro.graph import rmat
+from repro.obs import Recorder
+from repro.store import ingest_edges, verify_store
+
+LOG2N = 11
+M_EDGES = 32_000
+B = 8
+ITERS = 8
+KILL_AT = 4
+
+
+def _counter(rec: Recorder, name: str) -> float:
+    inst = rec.metrics.get(name)
+    return 0.0 if inst is None else float(inst.to_dict()["value"])
+
+
+def main(out_root: str = "CHAOS_smoke") -> int:
+    os.makedirs(out_root, exist_ok=True)
+    n = 1 << LOG2N
+    edges = rmat(LOG2N, M_EDGES, seed=7)
+    root = os.path.join(out_root, "store")
+    man = ingest_edges(edges, n, B, root, chunk_edges=1 << 13)
+    audit = verify_store(man)
+    spec_of = lambda: pagerank(n)  # noqa: E731 — fresh spec per engine
+
+    # ---- disk residency under the recoverable plan -----------------------
+    clean_disk = PMVEngine(None, store=root, residency="disk",
+                           strategy="vertical")
+    r0 = clean_disk.run(spec_of(), max_iters=ITERS, tol=0.0)
+
+    plan = FaultPlan(events=(
+        CorruptFetch(block=2, array="seg"),
+        TransientIO(block=3),
+        TransientIO(block=5),
+        KillAtIteration(iteration=KILL_AT),
+    ), seed=11)
+    retry = RetryPolicy(max_attempts=3, base_delay_s=1e-3, max_delay_s=0.05)
+    rec = Recorder()
+    ck = os.path.join(out_root, "ckpt")
+    eng = PMVEngine(None, store=root, residency="disk", strategy="vertical",
+                    faults=plan, io_retry=retry, obs=rec)
+    killed = False
+    t0 = time.perf_counter()
+    try:
+        eng.run(spec_of(), max_iters=ITERS, tol=0.0,
+                checkpoint_dir=ck, checkpoint_every=1)
+    except InjectedKill:
+        killed = True
+    r1 = eng.run(spec_of(), max_iters=ITERS, tol=0.0,
+                 checkpoint_dir=ck, checkpoint_every=1, resume=True)
+    chaos_s = time.perf_counter() - t0
+
+    disk_bitwise = bool(np.array_equal(r0.v, r1.v))
+    remaining = eng._fault_injector.remaining
+    retries = _counter(rec, "fault.retry")
+    injected = {k: _counter(rec, f"fault.injected.{k}")
+                for k in ("corrupt_fetch", "transient_io", "kill")}
+    # 3 fetch faults, each recovered by ONE re-fetch within the budget
+    retries_bounded = bool(retries <= 3 * retry.retry_budget)
+
+    # ---- resident residency: kill-and-resume parity ----------------------
+    r0_res = PMVEngine(edges, n, b=B, strategy="vertical").run(
+        spec_of(), max_iters=ITERS, tol=0.0)
+    ck_res = os.path.join(out_root, "ckpt_resident")
+    eng_res = PMVEngine(edges, n, b=B, strategy="vertical",
+                        faults=FaultPlan(events=(
+                            KillAtIteration(iteration=3),), seed=1))
+    try:
+        eng_res.run(spec_of(), max_iters=ITERS, tol=0.0,
+                    checkpoint_dir=ck_res, checkpoint_every=1)
+        resident_killed = False
+    except InjectedKill:
+        resident_killed = True
+    r1_res = eng_res.run(spec_of(), max_iters=ITERS, tol=0.0,
+                         checkpoint_dir=ck_res, checkpoint_every=1,
+                         resume=True)
+    resident_bitwise = bool(np.array_equal(r0_res.v, r1_res.v))
+
+    report = {
+        "n": n, "m": len(edges), "b": B, "iters": ITERS,
+        "store_audit_ok": audit.ok,
+        "store_digests_checked": audit.checked,
+        "plan": {"events": len(plan.events), "seed": plan.seed,
+                 "counts": plan.counts()},
+        "disk": {
+            "killed_mid_run": killed,
+            "bitwise_equal": disk_bitwise,
+            "faults_remaining": remaining,
+            "injected": injected,
+            "retries": retries,
+            "retry_budget_per_call": retry.retry_budget,
+            "retries_bounded": retries_bounded,
+            "recovered": _counter(rec, "fault.recovered"),
+            "verify_failures": _counter(rec, "store.verify_failures"),
+            "chaos_wall_s": chaos_s,
+        },
+        "resident": {
+            "killed_mid_run": resident_killed,
+            "bitwise_equal": resident_bitwise,
+        },
+    }
+    with open(os.path.join(out_root, "report.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    rec.write_metrics_jsonl(os.path.join(out_root, "fault_trace.jsonl"))
+    rec.write_chrome_trace(os.path.join(out_root, "trace.json"))
+    print(json.dumps(report, indent=1))
+
+    failures = []
+    if not audit.ok:
+        failures.append("store audit found mismatched/missing shards")
+    if not (killed and resident_killed):
+        failures.append("kill event did not fire")
+    if not disk_bitwise:
+        failures.append("disk chaos run differs from fault-free run")
+    if not resident_bitwise:
+        failures.append("resident kill-and-resume differs from clean run")
+    if remaining != 0:
+        failures.append(f"{remaining} scheduled fault(s) never fired")
+    if not retries_bounded:
+        failures.append(f"retries {retries} exceed the policy budget")
+    if any(v < 1 for v in injected.values()):
+        failures.append(f"missing fault kinds in obs counters: {injected}")
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "CHAOS_smoke"))

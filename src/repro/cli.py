@@ -1,0 +1,52 @@
+"""``repro`` command-line entry points (``python -m repro ...``).
+
+Currently one command family:
+
+    repro store verify <store-dir>     audit a block store's shards against
+                                       the manifest's ingest-time checksums
+                                       (exit 0 clean, 1 corrupt/missing,
+                                       2 unverifiable)
+
+Kept deliberately tiny and dependency-light: the CLI imports the store
+layer lazily so ``repro --help`` never pays the jax import.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+__all__ = ["main"]
+
+
+def _cmd_store_verify(args) -> int:
+    from repro.store.verify import verify_store
+
+    report = verify_store(args.store_dir)
+    print(report.summary())
+    if report.skipped:
+        return 2
+    return 0 if report.ok else 1
+
+
+def build_parser() -> argparse.ArgumentParser:
+    parser = argparse.ArgumentParser(prog="repro")
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    store = sub.add_parser("store", help="block-store maintenance")
+    store_sub = store.add_subparsers(dest="store_command", required=True)
+
+    verify = store_sub.add_parser(
+        "verify", help="audit every shard against the manifest checksums")
+    verify.add_argument("store_dir", help="ingested block-store directory")
+    verify.set_defaults(fn=_cmd_store_verify)
+
+    return parser
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,6 +32,7 @@ from repro.kernels.block_gimv import has_semiring, semiring_of
 from repro.core.gimv import GimvSpec
 from repro.core.partition import HybridMatrix, Partition, PartitionedMatrix, partition_graph
 from repro.graph.generators import symmetrize_edges
+from repro.faults import as_injector
 from repro.obs import as_recorder
 
 __all__ = ["PMVEngine", "PMVResult", "StepConfig", "make_step", "placement_call"]
@@ -238,6 +239,8 @@ class PMVEngine:
         residency: str = "device",
         store_budget_bytes: int | None = None,
         obs=None,
+        faults=None,
+        io_retry=None,
     ):
         # psi=None means "unspecified": 'cyclic' without a store, the
         # manifest's ψ with one — an EXPLICIT psi must match the store.
@@ -301,6 +304,13 @@ class PMVEngine:
         # obs: None/False (the zero-overhead null recorder), True (a fresh
         # repro.obs.Recorder), or a Recorder shared with a server / store.
         self.obs = as_recorder(obs)
+        # faults: None (hot path untouched), a seeded repro.faults.FaultPlan,
+        # or a live FaultInjector shared with a store / a resumed run — the
+        # injector's consumed-event state survives a kill-and-resume, so a
+        # kill fired in run #1 does not re-fire on resume.  io_retry bounds
+        # every disk fetch (repro.faults.RetryPolicy; None = default policy).
+        self._fault_injector = as_injector(faults, self.obs)
+        self.io_retry = io_retry
         self._prep_cache: dict = {}  # spec -> (step, matrix, mask, meta); FIFO-bounded
 
     _PREP_CACHE_MAX = 8
@@ -598,10 +608,10 @@ class PMVEngine:
         with rec.span("prepare.store"):
             dstore = DiskBlockStore(self.store, striping, spec,
                                     budget_bytes=self.store_budget_bytes,
-                                    obs=rec)
+                                    obs=rec, faults=self._fault_injector)
             executor = DiskExecutor(spec, part, plan, dstore, capacity=capacity,
                                     scatter=plan.scatter, interpret=interpret,
-                                    obs=rec)
+                                    obs=rec, retry=self.io_retry)
         step = make_disk_step(spec, executor)
         cfg = StepConfig(strategy=strategy, n_local=part.n_local,
                          exchange=self.exchange, capacity=capacity,
@@ -734,6 +744,11 @@ class PMVEngine:
         it = start_iter
         obs = self.obs
         for it in range(start_iter, max_iters):
+            if self._fault_injector is not None:
+                # kill events fire HERE (top of the iteration, before any
+                # work) so a checkpointed run dies at a clean boundary and
+                # resume=True replays from the last saved iteration bitwise.
+                self._fault_injector.on_iteration(it)
             t0 = time.perf_counter()
             with obs.span("pmv.iteration") as sp:
                 v_new, delta, stats = step(matrix, v, ctx_b, mask)
@@ -764,6 +779,7 @@ class PMVEngine:
                 if fb is not None:
                     label, overrides = fb
                     obs.counter("pmv.fallbacks").add(1)
+                    obs.counter(f"pmv.fallback_events.{label}").add(1)
                     result = self._fallback_engine(meta, overrides).run(
                         spec, ctx,
                         max_iters=max_iters, tol=tol,
@@ -844,6 +860,7 @@ class PMVEngine:
             scatter=self.scatter, stream=self.stream,
             pallas_interpret=self.pallas_interpret, base_weights=self.base_weights,
             mesh=self.mesh, axis_name=self.axis_name, obs=self.obs,
+            faults=self._fault_injector, io_retry=self.io_retry,
         )
         kwargs.update(overrides)
         if self.store is not None:

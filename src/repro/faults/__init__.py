@@ -1,0 +1,44 @@
+"""repro.faults: deterministic fault injection + recovery machinery.
+
+- :mod:`repro.faults.plan` — FaultPlan (seeded schedule of shard-corruption,
+  transient-IOError, slow-fetch and kill-at-iteration events), the
+  FaultInjector runtime, and the ``faults=`` knob normalizer
+  (``as_injector``) shared by PMVEngine / PMVServer / DiskBlockStore.
+- :mod:`repro.faults.retry` — RetryPolicy (bounded attempts, exponential
+  backoff + seeded jitter, per-call deadline) wrapping every disk fetch.
+
+The recovery contract (tests/test_faults.py, benchmarks/chaos_smoke.py):
+any run under a *recoverable* FaultPlan — every corruption transient, every
+IOError within the retry budget, kills only where a checkpoint precedes
+them — produces bitwise-identical results to the fault-free run, with every
+injected fault visible in the obs metrics.
+"""
+from repro.faults.plan import (
+    FAULT_KINDS,
+    CorruptFetch,
+    FaultInjector,
+    FaultPlan,
+    InjectedIOError,
+    InjectedKill,
+    KillAtIteration,
+    SlowFetch,
+    TransientIO,
+    as_injector,
+)
+from repro.faults.retry import DEFAULT_RETRY, FetchDeadlineError, RetryPolicy
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultPlan",
+    "FaultInjector",
+    "CorruptFetch",
+    "TransientIO",
+    "SlowFetch",
+    "KillAtIteration",
+    "InjectedIOError",
+    "InjectedKill",
+    "as_injector",
+    "RetryPolicy",
+    "DEFAULT_RETRY",
+    "FetchDeadlineError",
+]

@@ -1,0 +1,275 @@
+"""Deterministic, seeded fault injection for the PMV pipeline (ISSUE 7).
+
+A :class:`FaultPlan` is a *schedule* of fault events — shard corruption on a
+fetch, transient ``IOError``, a slow (straggler) fetch, a process kill at an
+iteration boundary — built either explicitly or pseudo-randomly from a seed
+(:meth:`FaultPlan.random`).  The plan itself is immutable; running it
+requires a :class:`FaultInjector` (``plan.build(obs)``), which tracks which
+events have fired.  Every event is one-shot: once consumed it never fires
+again, which is what makes a plan *recoverable* — a corrupted fetch fails
+checksum verification, the executor re-fetches, and the second read is
+clean.
+
+The contract the chaos suites assert (tests/test_faults.py,
+benchmarks/chaos_smoke.py): any run under a recoverable plan produces
+**bitwise identical** results to the fault-free run, every injected fault
+shows up in the obs metrics (``fault.injected`` / ``fault.injected.<kind>``)
+and retries stay within the configured :class:`repro.faults.retry.RetryPolicy`
+budget.
+
+Injection sites:
+
+- ``DiskBlockStore.fetch`` calls :meth:`FaultInjector.on_fetch` (may raise
+  :class:`InjectedIOError` or sleep) and :meth:`FaultInjector.corrupt_slice`
+  (may flip one byte of the fetched arrays, *before* checksum verification).
+- ``PMVEngine.run`` calls :meth:`FaultInjector.on_iteration` at the top of
+  every iteration (may raise :class:`InjectedKill`, simulating a crash after
+  the last completed checkpoint).
+
+The injector is shared engine-wide (and server-wide): a kill consumed by the
+first ``run()`` stays consumed when the caller resumes, so the resumed solve
+finishes clean.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+__all__ = [
+    "FAULT_KINDS",
+    "CorruptFetch",
+    "TransientIO",
+    "SlowFetch",
+    "KillAtIteration",
+    "FaultPlan",
+    "FaultInjector",
+    "InjectedIOError",
+    "InjectedKill",
+    "as_injector",
+]
+
+FAULT_KINDS = ("corrupt_fetch", "transient_io", "slow_fetch", "kill")
+
+
+class InjectedIOError(IOError):
+    """A scheduled transient I/O failure (retryable by design)."""
+
+
+class InjectedKill(RuntimeError):
+    """A scheduled mid-run crash: raised at an iteration boundary, BEFORE the
+    iteration runs — exactly what a SIGKILL between checkpoints looks like.
+    Deliberately not an ``OSError`` so fetch retry loops never swallow it."""
+
+
+# ---------------------------------------------------------------------------
+# Events.  Frozen dataclasses so a plan is hashable/reproducible.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CorruptFetch:
+    """Flip one byte of ``array`` in the slice fetched for ``block``, the
+    ``occurrence``-th time that block is fetched (1-based).  The flip happens
+    before checksum verification, so a checksummed store detects it and the
+    re-fetch (occurrence consumed) reads clean data."""
+
+    block: int
+    array: str = "seg"           # 'seg' | 'gat' | 'cnt'
+    occurrence: int = 1
+    kind: str = dataclasses.field(default="corrupt_fetch", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransientIO:
+    """Raise :class:`InjectedIOError` for the next ``times`` fetch attempts
+    of ``block`` (each raise consumes one)."""
+
+    block: int
+    times: int = 1
+    kind: str = dataclasses.field(default="transient_io", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowFetch:
+    """Sleep ``delay_s`` inside the ``occurrence``-th fetch of ``block`` — a
+    straggler read (exercises prefetch wait accounting and, when a deadline
+    is configured, the per-launch deadline path)."""
+
+    block: int
+    delay_s: float = 0.05
+    occurrence: int = 1
+    kind: str = dataclasses.field(default="slow_fetch", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class KillAtIteration:
+    """Raise :class:`InjectedKill` when iteration ``iteration`` is about to
+    start (0-based) — i.e. after ``iteration`` completed iterations."""
+
+    iteration: int
+    kind: str = dataclasses.field(default="kill", init=False)
+
+
+_EVENT_TYPES = (CorruptFetch, TransientIO, SlowFetch, KillAtIteration)
+
+
+# ---------------------------------------------------------------------------
+# The plan.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable schedule of fault events plus the seed that derives every
+    'random' choice inside injection (corruption byte offsets), so a plan
+    replays bit-for-bit."""
+
+    events: tuple = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        for e in self.events:
+            if not isinstance(e, _EVENT_TYPES):
+                raise TypeError(f"not a fault event: {e!r}")
+        object.__setattr__(self, "events", tuple(self.events))
+
+    @classmethod
+    def random(cls, seed: int, *, blocks, n_corrupt: int = 1,
+               n_transient: int = 2, n_slow: int = 0,
+               kill_at: int | None = None,
+               slow_delay_s: float = 0.01) -> "FaultPlan":
+        """A seeded recoverable plan over the given fetchable ``blocks``
+        (draws only blocks that will actually be fetched, so every scheduled
+        event fires)."""
+        blocks = list(blocks)
+        if not blocks:
+            raise ValueError("FaultPlan.random needs at least one fetchable block")
+        rng = np.random.default_rng(seed)
+        events: list = []
+        for _ in range(n_corrupt):
+            events.append(CorruptFetch(
+                block=int(rng.choice(blocks)),
+                array=str(rng.choice(["seg", "gat"]))))
+        for _ in range(n_transient):
+            events.append(TransientIO(block=int(rng.choice(blocks))))
+        for _ in range(n_slow):
+            events.append(SlowFetch(block=int(rng.choice(blocks)),
+                                    delay_s=slow_delay_s))
+        if kill_at is not None:
+            events.append(KillAtIteration(iteration=int(kill_at)))
+        return cls(events=tuple(events), seed=seed)
+
+    def build(self, obs=None) -> "FaultInjector":
+        return FaultInjector(self, obs=obs)
+
+    def counts(self) -> dict:
+        out = {k: 0 for k in FAULT_KINDS}
+        for e in self.events:
+            out[e.kind] += int(getattr(e, "times", 1))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The injector (runtime state).
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Mutable consumption state for one FaultPlan.  Thread-safe: the disk
+    prefetch worker calls ``on_fetch``/``corrupt_slice`` from its own thread
+    while the engine thread calls ``on_iteration``."""
+
+    def __init__(self, plan: FaultPlan, obs=None):
+        from repro.obs import as_recorder
+
+        self.plan = plan
+        self.obs = as_recorder(obs)
+        self._lock = threading.Lock()
+        # remaining "shots" per event index (TransientIO carries `times`)
+        self._remaining = [int(getattr(e, "times", 1)) for e in plan.events]
+        # per-block fetch-attempt counts (occurrence matching)
+        self._fetch_counts: dict[int, int] = {}
+        self._rng = np.random.default_rng(plan.seed)
+        self.injected: dict[str, int] = {k: 0 for k in FAULT_KINDS}
+
+    # -- bookkeeping ----------------------------------------------------
+    @property
+    def remaining(self) -> int:
+        """Unfired shots left in the plan (0 == every fault was injected)."""
+        with self._lock:
+            return sum(self._remaining)
+
+    def _fire(self, i: int) -> None:
+        e = self.plan.events[i]
+        self._remaining[i] -= 1
+        self.injected[e.kind] += 1
+        self.obs.counter("fault.injected").add(1)
+        self.obs.counter(f"fault.injected.{e.kind}").add(1)
+
+    # -- injection sites ------------------------------------------------
+    def on_fetch(self, block: int) -> None:
+        """Called at the top of every fetch ATTEMPT for ``block``.  May raise
+        InjectedIOError (transient_io) or sleep (slow_fetch)."""
+        delay = None
+        with self._lock:
+            count = self._fetch_counts.get(block, 0) + 1
+            self._fetch_counts[block] = count
+            for i, e in enumerate(self.plan.events):
+                if self._remaining[i] <= 0 or getattr(e, "block", None) != block:
+                    continue
+                if e.kind == "transient_io":
+                    self._fire(i)
+                    raise InjectedIOError(
+                        f"injected transient I/O error fetching block {block} "
+                        f"(attempt {count})")
+                if e.kind == "slow_fetch" and e.occurrence == count:
+                    self._fire(i)
+                    delay = e.delay_s
+        if delay:
+            with self.obs.span("fault.slow_fetch", {"block": block}):
+                time.sleep(delay)
+
+    def corrupt_slice(self, block: int, arrays: dict) -> None:
+        """Called with the freshly read (mutable, host-side) slice arrays of
+        ``block``; flips one seeded byte in the scheduled array.  Runs before
+        checksum verification, so the corruption is detectable."""
+        with self._lock:
+            count = self._fetch_counts.get(block, 1)
+            for i, e in enumerate(self.plan.events):
+                if (self._remaining[i] <= 0 or e.kind != "corrupt_fetch"
+                        or e.block != block or e.occurrence != count):
+                    continue
+                arr = arrays.get(e.array)
+                if arr is None:
+                    continue
+                flat = np.asarray(arr).view(np.uint8).reshape(-1)
+                off = int(self._rng.integers(flat.size))
+                flat[off] ^= 0xFF          # guaranteed to change the byte
+                self._fire(i)
+                self.obs.counter("fault.corrupt_bytes").add(1)
+
+    def on_iteration(self, iteration: int) -> None:
+        """Called at the top of every engine iteration; raises InjectedKill
+        when a kill event is scheduled there."""
+        with self._lock:
+            for i, e in enumerate(self.plan.events):
+                if (self._remaining[i] > 0 and e.kind == "kill"
+                        and e.iteration == iteration):
+                    self._fire(i)
+                    raise InjectedKill(
+                        f"injected kill at iteration {iteration} — resume "
+                        "from the last checkpoint (run(..., resume=True))")
+
+
+def as_injector(faults, obs=None) -> FaultInjector | None:
+    """Normalize the ``faults=`` knob: None passes through (no injection),
+    a FaultPlan is built once, an existing injector is shared as-is (so
+    engine + server + store consume one schedule together)."""
+    if faults is None:
+        return None
+    if isinstance(faults, FaultInjector):
+        return faults
+    if isinstance(faults, FaultPlan):
+        return faults.build(obs)
+    raise TypeError(
+        f"faults must be a FaultPlan, FaultInjector, or None; got {type(faults)!r}")

@@ -16,9 +16,21 @@ from __future__ import annotations
 import dataclasses
 from collections import deque
 
-__all__ = ["Query", "QueryResult", "QueryBatcher", "DEFAULT_BUCKETS"]
+__all__ = ["Query", "QueryResult", "QueryBatcher", "DEFAULT_BUCKETS",
+           "RETIREMENT_REASONS"]
 
 DEFAULT_BUCKETS = (8, 16, 32, 64)
+
+# Why a query's column left the batch (QueryResult.reason / the server's
+# stats()["retirement_reasons"] ledger, ISSUE 7 serving degradation):
+#   completed          converged or hit its iteration cap — vector is valid
+#   deadline_exceeded  per-query deadline fired mid-solve — vector is the
+#                      PARTIAL iterate at retirement (converged=False)
+#   shed               admission control refused it (queue over max_queue) —
+#                      never iterated, vector is None
+#   failed             the batch died on an I/O / integrity error after
+#                      retries — vector is None, error says why
+RETIREMENT_REASONS = ("completed", "deadline_exceeded", "shed", "failed")
 
 _KINDS = ("pagerank", "rwr", "sssp", "cc")
 
@@ -41,6 +53,9 @@ class Query:
     tol: float = 1e-6
     c: float = 0.85
     max_iters: int | None = None
+    # wall-clock budget from submit(); None = no deadline.  An expired query
+    # retires with reason='deadline_exceeded' and its partial iterate.
+    deadline_s: float | None = None
 
     # filled in by the server at submit() time
     qid: int | None = None
@@ -63,10 +78,12 @@ class QueryResult:
 
     qid: int
     query: Query
-    vector: object            # np.ndarray [n]
+    vector: object            # np.ndarray [n]; None when shed / failed
     iterations: int
     converged: bool
     latency_s: float          # submit -> retire wall clock
+    reason: str = "completed"  # one of RETIREMENT_REASONS
+    error: str | None = None   # diagnosis when reason == 'failed'
 
 
 class QueryBatcher:

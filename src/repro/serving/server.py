@@ -14,6 +14,15 @@ without disturbing the others — the GIM-V semirings are columnwise
 independent, so an admitted column's trajectory is bitwise the trajectory it
 would have had in a fresh batch.  Batches are padded to fixed Q buckets
 (batcher.py) so jit specializes once per bucket size.
+
+Degradation under pressure (ISSUE 7): per-query ``deadline_s`` budgets
+(anchored at submit — an expired column retires with its partial iterate),
+``max_queue`` admission control (overloaded submits shed immediately instead
+of growing every deadline behind them), and batch-level failure containment
+(an I/O / integrity error that survives the retry layer fails THAT batch's
+queries with a typed diagnosis; the server keeps serving).  Every retirement
+carries a reason — completed | deadline_exceeded | shed | failed — tallied
+in ``stats()['retirement_reasons']``.
 """
 from __future__ import annotations
 
@@ -29,8 +38,15 @@ import numpy as np
 from repro.core import algorithms
 from repro.core.engine import PMVEngine, StepConfig, _squeeze0, placement_call
 from repro.core.gimv import GimvSpec
+from repro.faults import FetchDeadlineError, as_injector
 from repro.obs import as_recorder
-from repro.serving.batcher import DEFAULT_BUCKETS, Query, QueryBatcher, QueryResult
+from repro.serving.batcher import (
+    DEFAULT_BUCKETS,
+    RETIREMENT_REASONS,
+    Query,
+    QueryBatcher,
+    QueryResult,
+)
 
 __all__ = ["PMVServer", "QueryFamily", "FAMILIES", "make_batched_step", "per_query_delta"]
 
@@ -240,6 +256,9 @@ class PMVServer:
         residency: str = "device",
         store_budget_bytes: int | None = None,
         obs=None,
+        faults=None,
+        io_retry=None,
+        max_queue: int | None = None,
     ):
         self.store = None
         self.residency = residency
@@ -276,8 +295,15 @@ class PMVServer:
             backend=backend, scatter=scatter, stream=stream,
             pallas_interpret=pallas_interpret,
             base_weights=base_weights, mesh=mesh, axis_name=axis_name,
-            obs=self.obs,
+            # normalized ONCE so every family engine shares one injector —
+            # a FaultPlan's events fire once server-wide, not once per family
+            obs=self.obs, faults=as_injector(faults, self.obs),
+            io_retry=io_retry,
         )
+        # admission control: queries submitted while >= max_queue are waiting
+        # are shed immediately (reason='shed') instead of growing the backlog
+        # without bound.  None = accept everything (the default).
+        self.max_queue = max_queue
         self._batcher = QueryBatcher(buckets)
         self._families: dict[tuple, _FamilyState] = {}
         self._family_overrides: dict[tuple, dict] = {}  # overflow fallbacks
@@ -285,9 +311,11 @@ class PMVServer:
         self._next_qid = 0
         self._fallback_events: list[str] = []  # fallback labels, batch order
         self._occupancy_sum = 0.0              # sum over batches of |queries|/Q
+        self._retirement_reasons = {r: 0 for r in RETIREMENT_REASONS}
         self._stats = {
             "batches": 0, "queries": 0, "admitted_mid_batch": 0,
             "overflow_fallbacks": 0, "retired": 0, "requeued": 0,
+            "shed": 0, "failed_batches": 0,
             "queue_wait_s": 0.0,
             "iterations": 0.0, "gathered_elems": 0.0, "exchanged_elems": 0.0,
             "logical_elems": 0.0, "wall_s": 0.0,
@@ -295,7 +323,13 @@ class PMVServer:
 
     # ------------------------------------------------------------------
     def submit(self, query: Query) -> int:
-        """Enqueue a query; returns its qid (key into drain()'s results)."""
+        """Enqueue a query; returns its qid (key into drain()'s results).
+
+        Load shedding: when ``max_queue`` is set and that many queries are
+        already waiting, the query is refused up front — drain() returns a
+        ``reason='shed'`` result for its qid (vector None) instead of letting
+        the backlog (and every deadline behind it) grow without bound.
+        """
         if not 0 <= query.source < self.n:
             raise ValueError(
                 f"query source {query.source} out of range for |V|={self.n}")
@@ -305,9 +339,26 @@ class PMVServer:
         self._next_qid += 1
         query.qid = qid
         query.t_submit = time.perf_counter()
-        self._batcher.add(query)
         self._stats["queries"] += 1
+        if self.max_queue is not None and len(self._batcher) >= self.max_queue:
+            self._retire_unserved(query, "shed")
+            self._stats["shed"] += 1
+            self.obs.counter("serve.shed").add(1)
+            return qid
+        self._batcher.add(query)
         return qid
+
+    def _retire_unserved(self, query: Query, reason: str,
+                         error: str | None = None) -> None:
+        """Record a result for a query whose column never (or no longer)
+        iterates: shed at admission or lost to a failed batch."""
+        self._results[query.qid] = QueryResult(
+            qid=query.qid, query=query, vector=None, iterations=0,
+            converged=False,
+            latency_s=time.perf_counter() - query.t_submit,
+            reason=reason, error=error,
+        )
+        self._retirement_reasons[reason] += 1
 
     def drain(self) -> dict[int, QueryResult]:
         """Serve every queued query to convergence; returns {qid: result}."""
@@ -334,6 +385,7 @@ class PMVServer:
         ``batch_occupancy`` (real queries / bucket capacity)."""
         out = dict(self._stats)
         out["fallback_events"] = list(self._fallback_events)
+        out["retirement_reasons"] = dict(self._retirement_reasons)
         out["batch_occupancy"] = (
             self._occupancy_sum / out["batches"] if out["batches"] else 0.0)
         return out
@@ -385,10 +437,25 @@ class PMVServer:
         return v_col, ctx_cols
 
     def _run_batch(self, key: tuple, batch: list[Query]) -> None:
+        from repro.store.manifest import ShardCorruptError
+
         obs = self.obs
         with obs.span("serve.batch") as batch_span:
             batch_span.set("family", str(key))
-            self._run_batch_inner(key, batch, batch_span)
+            try:
+                self._run_batch_inner(key, batch, batch_span)
+            except (ShardCorruptError, OSError, FetchDeadlineError) as e:
+                # The I/O / integrity layer exhausted its retries: this batch
+                # is lost, but the SERVER is not — every unanswered query in
+                # it retires with reason='failed' and the typed diagnosis, and
+                # later batches (other families, re-ingested stores) proceed.
+                self._stats["failed_batches"] += 1
+                obs.counter("serve.failed_batches").add(1)
+                batch_span.set("failed", type(e).__name__)
+                self._families.pop(key, None)  # state may be half-built
+                for query in batch:
+                    if query.qid not in self._results:
+                        self._retire_unserved(query, "failed", error=str(e))
 
     def _run_batch_inner(self, key: tuple, batch: list[Query], batch_span) -> None:
         obs = self.obs
@@ -421,6 +488,11 @@ class PMVServer:
         iters = np.zeros(n_q, np.int64)
         tols = np.array([s.tol if s else 0.0 for s in slots])
         caps = np.array([(s.max_iters or self.max_iters) if s else 0 for s in slots])
+        # absolute per-query deadlines (inf = none), anchored at SUBMIT time:
+        # queue wait counts against the budget, as a caller's SLO would.
+        dls = np.array([(s.t_submit + s.deadline_s)
+                        if s is not None and s.deadline_s is not None
+                        else np.inf for s in slots])
         # queue wait ends when a query's column starts iterating: now for the
         # initial slots, the admission instant for mid-batch admissions.
         t_start = time.perf_counter()
@@ -471,19 +543,27 @@ class PMVServer:
             iters[active] += 1
 
             admissions: list[tuple[int, np.ndarray, dict]] = []
+            now = time.perf_counter()
             for q_i in np.nonzero(active)[0]:
                 done = deltas[q_i] < tols[q_i]
-                if not done and iters[q_i] < caps[q_i]:
+                expired = not done and now > dls[q_i]
+                if not done and not expired and iters[q_i] < caps[q_i]:
                     continue
-                # retire the converged (or capped) column
+                # retire the converged / capped / deadline-expired column.
+                # An expired query still gets its PARTIAL iterate back —
+                # the caller asked for the best answer by the deadline.
                 query = slots[q_i]
+                reason = "deadline_exceeded" if expired else "completed"
                 vec = part.from_blocked(np.asarray(v_new[:, :, q_i]))
                 latency = time.perf_counter() - query.t_submit
                 self._results[query.qid] = QueryResult(
                     qid=query.qid, query=query, vector=vec,
                     iterations=int(iters[q_i]), converged=bool(done),
-                    latency_s=latency,
+                    latency_s=latency, reason=reason,
                 )
+                self._retirement_reasons[reason] += 1
+                if expired:
+                    obs.counter("serve.deadline_exceeded").add(1)
                 self._stats["retired"] += 1
                 wait = max(0.0, starts[q_i] - query.t_submit)
                 self._stats["queue_wait_s"] += wait
@@ -496,12 +576,15 @@ class PMVServer:
                 waiting = self._batcher.pop_waiting(key)
                 if waiting is not None:
                     self._stats["admitted_mid_batch"] += 1
+                    batch.append(waiting)  # a later batch failure must see it
                     slots[q_i] = waiting
                     v_col, ctx_cols = self._column(st, waiting)
                     admissions.append((int(q_i), v_col, ctx_cols))
                     iters[q_i] = 0
                     tols[q_i] = waiting.tol
                     caps[q_i] = waiting.max_iters or self.max_iters
+                    dls[q_i] = (waiting.t_submit + waiting.deadline_s
+                                if waiting.deadline_s is not None else np.inf)
                     starts[q_i] = time.perf_counter()
                 else:
                     slots[q_i] = None

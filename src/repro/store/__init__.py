@@ -5,10 +5,17 @@ one-off pre-partitioning, persisted) with schedule-driven prefetch.
     open_store(path)             -> Manifest
     load_partitioned(store, spec)  bitwise partition_graph reconstruction
     PMVEngine(..., store=..., residency='disk')  out-of-core execution
+    verify_store(store)          audit every shard against ingest checksums
+
+Integrity (ISSUE 7): ingest digests every shard; fetches verify against the
+manifest and raise the typed ``ShardCorruptError`` / ``ManifestCorruptError``
+on mismatch, which the repro.faults retry layer knows how to recover.
 """
 from repro.store.ingest import ingest_edges
 from repro.store.manifest import (
     Manifest,
+    ManifestCorruptError,
+    ShardCorruptError,
     load_partitioned,
     open_store,
     plan_from_manifest,
@@ -20,10 +27,13 @@ from repro.store.residency import (
     ResidencyStats,
     make_disk_step,
 )
+from repro.store.verify import VerifyReport, verify_store
 
 __all__ = [
     "ingest_edges",
     "Manifest",
+    "ManifestCorruptError",
+    "ShardCorruptError",
     "open_store",
     "load_partitioned",
     "plan_from_manifest",
@@ -32,4 +42,6 @@ __all__ = [
     "DiskExecutor",
     "ResidencyStats",
     "make_disk_step",
+    "VerifyReport",
+    "verify_store",
 ]

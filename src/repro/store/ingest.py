@@ -180,7 +180,21 @@ def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
     e_cap = max(int(counts_sb_db.max()), 1)
     block_nnz = counts_sb_db.T.copy()                 # [dst block i, src block j]
 
-    # ---- pass C/D: pack + write stripe shards ----------------------------
+    # ---- pass C/D: pack + write stripe shards (digesting as we write:
+    # per-block-row crc for seg/gat — the disk executor's fetch unit — and
+    # whole-array crc for cnt; ISSUE 7 store integrity) ------------------
+    algo = fmt.CHECKSUM_ALGORITHM
+    stripe_sums: dict[str, list[dict]] = {"vertical": [], "horizontal": []}
+
+    def _write_stripe(striping: str, w: int, seg, gat, cnt) -> None:
+        for name, arr in (("seg", seg), ("gat", gat), ("cnt", cnt)):
+            fmt.save_array(fmt.stripe_path(out_dir, striping, w, name), arr)
+        stripe_sums[striping].append({
+            "seg": fmt.row_checksums(seg, algo),
+            "gat": fmt.row_checksums(gat, algo),
+            "cnt": fmt.checksum_array(cnt, algo),
+        })
+
     for j in range(b):
         e = vbins.read(j)
         if len(e):
@@ -192,8 +206,7 @@ def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
             seg = np.zeros((b, e_cap), np.int32)
             gat = np.zeros((b, e_cap), np.int32)
             cnt = np.zeros((b,), np.int32)
-        for name, arr in (("seg", seg), ("gat", gat), ("cnt", cnt)):
-            fmt.save_array(fmt.stripe_path(out_dir, "vertical", j, name), arr)
+        _write_stripe("vertical", j, seg, gat, cnt)
     for i in range(b):
         e = hbins.read(i)
         if len(e):
@@ -205,17 +218,20 @@ def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
             seg = np.zeros((b, e_cap), np.int32)
             gat = np.zeros((b, e_cap), np.int32)
             cnt = np.zeros((b,), np.int32)
-        for name, arr in (("seg", seg), ("gat", gat), ("cnt", cnt)):
-            fmt.save_array(fmt.stripe_path(out_dir, "horizontal", i, name), arr)
+        _write_stripe("horizontal", i, seg, gat, cnt)
 
+    array_sums: dict[str, str] = {}
     for name, arr in (("out_deg", out_deg), ("in_deg", in_deg),
                       ("nnz", block_nnz), ("partial_nnz", partial_nnz),
                       ("rows", rows), ("d_max", d_max), ("deg_hist", deg_hist)):
         fmt.save_array(fmt.array_path(out_dir, name), arr)
+        array_sums[name] = fmt.checksum_array(arr, algo)
 
     manifest = Manifest(
         root=out_dir, n=n, m=m_total, b=b, psi=psi, symmetrized=symmetrize,
         e_cap=e_cap, partial_cap=max(int(partial_nnz.max()), 1),
+        checksums={"algorithm": algo, "arrays": array_sums,
+                   "stripes": stripe_sums},
         ingest={
             "chunk_edges": int(chunk_edges),
             "peak_chunk_rows": int(peak_chunk),

@@ -35,9 +35,58 @@ from repro.core.partition import (
 from repro.graph.stats import GraphStats
 from repro.store import format as fmt
 
-__all__ = ["Manifest", "open_store", "load_partitioned", "plan_from_manifest"]
+__all__ = [
+    "Manifest",
+    "ManifestCorruptError",
+    "ShardCorruptError",
+    "open_store",
+    "load_partitioned",
+    "plan_from_manifest",
+]
 
 MANIFEST_FILE = "manifest.json"
+
+
+class ManifestCorruptError(RuntimeError):
+    """manifest.json exists but cannot be parsed (truncated / invalid JSON /
+    missing required keys).  Carries the path and, for parse failures, the
+    exact parse position."""
+
+    def __init__(self, path: str, msg: str, *, pos: int | None = None,
+                 lineno: int | None = None, colno: int | None = None):
+        self.path = path
+        self.pos = pos
+        self.lineno = lineno
+        self.colno = colno
+        where = (f" at line {lineno} column {colno} (char {pos})"
+                 if pos is not None else "")
+        super().__init__(f"{path}: corrupt manifest{where}: {msg} — "
+                         "re-ingest the store (repro.store.ingest_edges)")
+
+
+class ShardCorruptError(RuntimeError):
+    """A shard read failed checksum verification.  Carries a precise
+    diagnosis: which file, which worker/block row, expected vs actual digest.
+    Transient corruption (a flipped bit in flight) recovers via re-fetch
+    (repro.faults.RetryPolicy); persistent corruption keeps failing with the
+    same diagnosis — re-ingest or restore the shard."""
+
+    def __init__(self, path: str, *, array: str, worker: int | None = None,
+                 block: int | None = None, expected: str = "?", actual: str = "?"):
+        self.path = path
+        self.array = array
+        self.worker = worker
+        self.block = block
+        self.expected = expected
+        self.actual = actual
+        where = f"array {array!r}"
+        if worker is not None:
+            where += f", worker {worker}"
+        if block is not None:
+            where += f", block row {block}"
+        super().__init__(
+            f"{path}: checksum mismatch ({where}): expected {expected}, "
+            f"read {actual} — shard corrupted on disk or in flight")
 
 
 @dataclasses.dataclass
@@ -54,6 +103,12 @@ class Manifest:
     partial_cap: int
     ingest: dict
     version: int = fmt.FORMAT_VERSION
+    # integrity digests (ISSUE 7); None for pre-checksum stores, else
+    #   {"algorithm": "crc32c"|"crc32",
+    #    "arrays":  {name: digest}                       whole-array digests
+    #    "stripes": {striping: [per-worker {"seg": [b row digests],
+    #                                       "gat": [...], "cnt": digest}]}}
+    checksums: dict | None = None
 
     # ------------------------------------------------------------------
     def save(self) -> None:
@@ -65,6 +120,8 @@ class Manifest:
             "e_cap": self.e_cap, "partial_cap": self.partial_cap,
             "ingest": self.ingest,
         }
+        if self.checksums is not None:
+            doc["checksums"] = self.checksums
         tmp = os.path.join(self.root, MANIFEST_FILE + ".tmp")
         with open(tmp, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -78,7 +135,17 @@ class Manifest:
                 f"no {MANIFEST_FILE} under {root!r} — not a block-store "
                 "directory (create one with repro.store.ingest_edges)")
         with open(path) as f:
-            doc = json.load(f)
+            try:
+                doc = json.load(f)
+            except json.JSONDecodeError as e:
+                # a truncated or garbled manifest is a CORRUPTION diagnosis,
+                # not a parse traceback: typed, with the exact position
+                raise ManifestCorruptError(
+                    path, e.msg, pos=e.pos, lineno=e.lineno, colno=e.colno,
+                ) from e
+        if not isinstance(doc, dict):
+            raise ManifestCorruptError(
+                path, f"expected a JSON object, got {type(doc).__name__}")
         if doc.get("format") != fmt.FORMAT_NAME:
             raise ValueError(
                 f"{path}: format {doc.get('format')!r} is not "
@@ -88,13 +155,18 @@ class Manifest:
                 f"{path}: store version {doc.get('version')} is newer than "
                 f"this reader (supports <= {fmt.FORMAT_VERSION}) — upgrade "
                 "repro or re-ingest")
-        return cls(root=root, n=int(doc["n"]), m=int(doc["m"]),
-                   b=int(doc["b"]), psi=doc["psi"],
-                   symmetrized=bool(doc["symmetrized"]),
-                   e_cap=int(doc["e_cap"]),
-                   partial_cap=int(doc["partial_cap"]),
-                   ingest=doc.get("ingest", {}),
-                   version=int(doc.get("version", fmt.FORMAT_VERSION)))
+        try:
+            return cls(root=root, n=int(doc["n"]), m=int(doc["m"]),
+                       b=int(doc["b"]), psi=doc["psi"],
+                       symmetrized=bool(doc["symmetrized"]),
+                       e_cap=int(doc["e_cap"]),
+                       partial_cap=int(doc["partial_cap"]),
+                       ingest=doc.get("ingest", {}),
+                       version=int(doc.get("version", fmt.FORMAT_VERSION)),
+                       checksums=doc.get("checksums"))
+        except (KeyError, TypeError, ValueError) as e:
+            raise ManifestCorruptError(
+                path, f"missing or malformed required field ({e!r})") from e
 
     # ------------------------------------------------------------------
     @property
@@ -150,6 +222,36 @@ class Manifest:
         every source block)."""
         in_deg = np.asarray(self.array("in_deg"))
         return max(int(in_deg.max(initial=0)), 1)
+
+    # -- integrity -----------------------------------------------------
+    @property
+    def checksum_algorithm(self) -> str | None:
+        return self.checksums.get("algorithm") if self.checksums else None
+
+    def stripe_checksums(self, striping: str, worker: int) -> dict | None:
+        """{"seg": [b row digests], "gat": [...], "cnt": digest} for one
+        worker's stripe shard, or None for a pre-checksum store."""
+        if not self.checksums:
+            return None
+        per_striping = self.checksums.get("stripes", {}).get(striping)
+        if per_striping is None:
+            return None
+        return per_striping[worker]
+
+    def verify_array(self, name: str) -> None:
+        """Whole-array digest check for a stats/blocks array; raises
+        :class:`ShardCorruptError` on mismatch, no-op without checksums."""
+        if not self.checksums:
+            return
+        expected = self.checksums.get("arrays", {}).get(name)
+        if expected is None:
+            return
+        actual = fmt.checksum_array(np.asarray(self.array(name)),
+                                    self.checksum_algorithm)
+        if actual != expected:
+            raise ShardCorruptError(fmt.array_path(self.root, name),
+                                    array=name, expected=expected,
+                                    actual=actual)
 
 
 def open_store(store) -> Manifest:

@@ -23,6 +23,17 @@ The horizontal executor streams the gather per SOURCE block (the ROADMAP
 "stream the horizontal gather" follow-up): selection semirings are exact;
 plus_times folds sequentially, so it matches the resident all-block
 reduction to float tolerance rather than bitwise.
+
+Robustness (ISSUE 7): every fetched slice is verified against the
+manifest's ingest-time per-row checksums (a mismatch raises a typed
+:class:`~repro.store.manifest.ShardCorruptError` with the exact file /
+worker / block row), every fetch runs under a bounded
+:class:`~repro.faults.RetryPolicy` (exponential backoff + jitter + a
+per-launch deadline — a transiently corrupted or failed read recovers by
+re-fetching), and a prefetch THREAD failure degrades the double buffer to
+synchronous fetches instead of dying with it.  The ``faults=`` knob injects
+a deterministic :class:`~repro.faults.FaultPlan` right at the fetch
+boundary, which is how the chaos suites prove all of the above.
 """
 from __future__ import annotations
 
@@ -39,8 +50,15 @@ from repro.core import cost_model, placement, sparse_exchange
 from repro.core.gimv import GimvSpec, combine_elementwise
 from repro.core.partition import Partition
 from repro.core.planner import ExecutionPlan
+from repro.faults import DEFAULT_RETRY, RetryPolicy, as_injector
 from repro.obs import as_recorder
-from repro.store.manifest import Manifest, open_store, row_weights
+from repro.store import format as fmt
+from repro.store.manifest import (
+    Manifest,
+    ShardCorruptError,
+    open_store,
+    row_weights,
+)
 
 __all__ = ["RESIDENCY_MODES", "DiskBlockStore", "DiskExecutor",
            "ResidencyStats", "make_disk_step"]
@@ -82,19 +100,46 @@ class DiskBlockStore:
     """
 
     def __init__(self, store, striping: str, spec: GimvSpec, *,
-                 budget_bytes: int | None = None, obs=None):
+                 budget_bytes: int | None = None, obs=None, faults=None,
+                 verify: bool | None = None):
         assert striping in ("vertical", "horizontal"), striping
         self.manifest: Manifest = open_store(store)
         self.striping = striping
         self.spec = spec
         self.obs = as_recorder(obs)
+        self.faults = as_injector(faults, self.obs)
         self.part: Partition = self.manifest.part
         b = self.manifest.b
+        # verify=None: auto — on exactly when the manifest carries digests
+        # (pre-checksum stores keep working, unverified).
+        if verify is None:
+            verify = self.manifest.checksums is not None
+        if verify and self.manifest.checksums is None:
+            raise ValueError(
+                "verify=True but the store has no checksums — re-ingest it "
+                "(repro.store.ingest_edges now digests every shard)")
+        self.verify = verify
+        self._sums = ([self.manifest.stripe_checksums(striping, w)
+                       for w in range(b)] if verify else None)
+        self._algo = self.manifest.checksum_algorithm
         self._mm = [self.manifest.stripe_arrays(striping, w, mmap=True)
                     for w in range(b)]
         # counts are [b] int32 per worker — tiny; keep them resident so the
         # schedule can skip empty blocks without touching the edge shards.
+        # They (and the degree array the weights derive from) are read ONCE,
+        # so verify them here rather than per fetch.
         self._cnt = np.stack([np.asarray(mm[2]) for mm in self._mm])  # [b_w, b]
+        if self.verify:
+            for w in range(b):
+                expected = self._sums[w]["cnt"]
+                actual = fmt.checksum_array(self._cnt[w], self._algo)
+                if actual != expected:
+                    raise ShardCorruptError(
+                        fmt.stripe_path(self.manifest.root, striping, w, "cnt"),
+                        array="cnt", worker=w,
+                        expected=expected, actual=actual)
+            self.manifest.verify_array("out_deg")
+            self.manifest.verify_array("nnz")
         self.out_deg = np.asarray(self.manifest.array("out_deg"))
         self.block_nnz = np.asarray(self.manifest.array("nnz"))
         self.total_bytes = self.manifest.total_shard_bytes(striping)
@@ -114,14 +159,46 @@ class DiskBlockStore:
     def begin_iteration(self) -> None:
         self.stats = ResidencyStats()
 
+    def _verify_rows(self, k: int, seg: np.ndarray, gat: np.ndarray) -> None:
+        """Check the fetched rows against the manifest's per-row digests;
+        raises ShardCorruptError naming the exact shard file / worker /
+        block row on the first mismatch."""
+        for w in range(self.manifest.b):
+            sums = self._sums[w]
+            for name, arr in (("seg", seg[w]), ("gat", gat[w])):
+                expected = sums[name][k]
+                actual = fmt.checksum_array(arr, self._algo)
+                if actual != expected:
+                    self.obs.counter("store.verify_failures").add(1)
+                    raise ShardCorruptError(
+                        fmt.stripe_path(self.manifest.root, self.striping,
+                                        w, name),
+                        array=name, worker=w, block=k,
+                        expected=expected, actual=actual)
+
     def fetch(self, k: int) -> dict:
         """Block k's shard slice across workers: seg/gat [b_w, E_cap] int32,
-        cnt [b_w] int32, w [b_w, E_cap] f32 | None."""
+        cnt [b_w] int32, w [b_w, E_cap] f32 | None.
+
+        Raises :class:`ShardCorruptError` when checksum verification is on
+        and the read bytes don't match the ingest-time digests, and
+        ``OSError`` on I/O failure — both retryable (the caller's
+        RetryPolicy re-fetches; transient corruption reads clean the second
+        time, persistent corruption keeps the precise diagnosis)."""
         b = self.manifest.b
+        if self.faults is not None:
+            self.faults.on_fetch(k)          # may raise InjectedIOError
         with self.obs.span("store.fetch") as sp:
             seg = np.stack([np.asarray(self._mm[w][0][k]) for w in range(b)])
             gat = np.stack([np.asarray(self._mm[w][1][k]) for w in range(b)])
             cnt = self._cnt[:, k]
+            if self.faults is not None:
+                # flips a scheduled byte BEFORE verification — a checksummed
+                # store must catch it, an unchecksummed one would be silently
+                # corrupted (which is the point of the checksums)
+                self.faults.corrupt_slice(k, {"seg": seg, "gat": gat})
+            if self.verify:
+                self._verify_rows(k, seg, gat)
             w = None
             if self.spec.needs_weights:
                 w = np.stack([
@@ -142,32 +219,68 @@ class DiskBlockStore:
         return {"seg": seg, "gat": gat, "w": w, "cnt": cnt}
 
 
-def _prefetched(store: DiskBlockStore, schedule: list[int]):
+def _prefetched(store: DiskBlockStore, schedule: list[int],
+                retry: RetryPolicy = DEFAULT_RETRY):
     """Iterate (block_id, slice) over the launch schedule, double-buffering
-    the NEXT scheduled block's fetch behind the current block's compute."""
+    the NEXT scheduled block's fetch behind the current block's compute.
+
+    Every fetch runs under ``retry`` (bounded attempts, backoff + jitter,
+    per-launch deadline) whether it happens on the prefetch thread or
+    inline.  If the prefetch THREAD fails — the pool refuses a submit or a
+    future dies of executor breakage rather than a fetch error — the loop
+    degrades to synchronous fetches for the rest of the iteration instead
+    of deadlocking or crashing the solve (``store.prefetch_degraded``
+    counts the downgrade).  Fetch errors that survive the retry budget
+    propagate typed (ShardCorruptError / OSError / FetchDeadlineError)."""
+    from concurrent.futures import BrokenExecutor, CancelledError
+
     stats = store.stats
+    obs = store.obs
 
     def timed_fetch(k):
         t0 = time.perf_counter()
-        sl = store.fetch(k)
+        sl = retry.call(lambda: store.fetch(k), obs=obs, label="fetch")
         return sl, time.perf_counter() - t0
 
     if not schedule:
         return
-    obs = store.obs
+    sync = False
+
+    def degrade() -> None:
+        nonlocal sync
+        if not sync:
+            sync = True
+            obs.counter("store.prefetch_degraded").add(1)
+
     with ThreadPoolExecutor(max_workers=1) as ex:
-        fut = ex.submit(timed_fetch, schedule[0])
+        def submit(k):
+            if sync:
+                return None
+            try:
+                return ex.submit(timed_fetch, k)
+            except RuntimeError:     # pool shut down / interpreter teardown
+                degrade()
+                return None
+
+        fut = submit(schedule[0])
         for t, k in enumerate(schedule):
             t0 = time.perf_counter()
             with obs.span("store.wait"):
-                sl, io_s = fut.result()
+                if fut is None:
+                    sl, io_s = timed_fetch(k)
+                else:
+                    try:
+                        sl, io_s = fut.result()
+                    except (BrokenExecutor, CancelledError):
+                        degrade()
+                        sl, io_s = timed_fetch(k)
             wait = time.perf_counter() - t0
             stats.wait_s += wait
             stats.io_s += io_s
             obs.counter("store.io_s").add(io_s)
             obs.counter("store.wait_s").add(wait)
             if t + 1 < len(schedule):
-                fut = ex.submit(timed_fetch, schedule[t + 1])
+                fut = submit(schedule[t + 1])
             yield k, sl
 
 
@@ -178,7 +291,8 @@ class DiskExecutor:
 
     def __init__(self, spec: GimvSpec, part: Partition, plan: ExecutionPlan,
                  store: DiskBlockStore, *, capacity: int | None = None,
-                 scatter: str = "segment", interpret: bool = False, obs=None):
+                 scatter: str = "segment", interpret: bool = False, obs=None,
+                 retry: RetryPolicy | None = None):
         self.spec = spec
         self.part = part
         self.plan = plan
@@ -187,6 +301,7 @@ class DiskExecutor:
         self.scatter = scatter
         self.interpret = interpret
         self.obs = as_recorder(obs)
+        self.retry = retry if retry is not None else DEFAULT_RETRY
         b = part.b
         nnz = store.block_nnz
         if plan.strategy == "vertical":
@@ -288,7 +403,7 @@ class DiskExecutor:
         over = jnp.zeros((), jnp.float32)
         logical = jnp.zeros((), jnp.float32)
         obs = self.obs
-        for i, sl in _prefetched(store, self.schedule):
+        for i, sl in _prefetched(store, self.schedule, self.retry):
             t0 = time.perf_counter()
             with obs.span("launch.disk_block", self._launch_attrs.get(i)):
                 idx_i, val_i, ov_i, lg_i = obs.fence(block_fn(
@@ -313,7 +428,7 @@ class DiskExecutor:
         contrib_fn = self._jit("hcontrib", self._horizontal_contrib_fn)
         r = jnp.full(v.shape, jnp.asarray(self.spec.identity, self.spec.dtype))
         obs = self.obs
-        for jj, sl in _prefetched(store, self.schedule):
+        for jj, sl in _prefetched(store, self.schedule, self.retry):
             t0 = time.perf_counter()
             with obs.span("launch.disk_block", self._launch_attrs.get(jj)):
                 c = obs.fence(contrib_fn(sl["seg"], sl["gat"], sl["w"], sl["cnt"], v[jj]))

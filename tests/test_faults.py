@@ -1,0 +1,551 @@
+"""repro.faults acceptance (ISSUE 7): deterministic fault injection +
+end-to-end recovery.
+
+The headline contract: a run under a *recoverable* seeded FaultPlan — shard
+corruption caught by checksums, transient I/O errors absorbed by the retry
+layer, a mid-run kill resumed from an atomic checkpoint — produces results
+bitwise identical to the fault-free run, every injected fault shows up in
+the obs metrics, and retries stay within the policy budget.  Plus: store
+integrity (ingest-time digests, ``verify_store``, typed
+ShardCorruptError/ManifestCorruptError), prefetch-thread degradation, and
+the serving tier's deadline / shedding / failure-containment semantics.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import PMVEngine, connected_components, pagerank, sssp
+from repro.faults import (
+    CorruptFetch,
+    FaultInjector,
+    FaultPlan,
+    FetchDeadlineError,
+    InjectedIOError,
+    InjectedKill,
+    KillAtIteration,
+    RetryPolicy,
+    SlowFetch,
+    TransientIO,
+    as_injector,
+)
+from repro.graph.generators import rmat, star_graph
+from repro.serving import PMVServer, Query
+from repro.store import (
+    DiskBlockStore,
+    ManifestCorruptError,
+    ShardCorruptError,
+    ingest_edges,
+    open_store,
+    verify_store,
+)
+from repro.store import format as fmt
+from repro.store.manifest import MANIFEST_FILE
+
+pytestmark = pytest.mark.filterwarnings("error")
+
+N, B = 256, 8
+
+# a fast retry policy for tests: full budget, negligible wall time
+FAST_RETRY = RetryPolicy(max_attempts=3, base_delay_s=1e-4, max_delay_s=1e-3)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat(8, 2500, seed=17)
+
+
+@pytest.fixture(scope="module")
+def store_dir(graph, tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("store") / "s")
+    ingest_edges(graph, N, B, root, chunk_edges=333)
+    return root
+
+
+@pytest.fixture(scope="module")
+def sym_store_dir(graph, tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("store_sym") / "s")
+    ingest_edges(graph, N, B, root, chunk_edges=333, symmetrize=True)
+    return root
+
+
+def _counter(rec, name) -> float:
+    inst = rec.metrics.get(name)
+    return 0.0 if inst is None else float(inst.to_dict()["value"])
+
+
+# ---------------------------------------------------------------------------
+# The acceptance chaos run: recoverable plan => bitwise identical.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,mk,sym", [
+    ("pagerank", lambda: pagerank(N), False),
+    ("sssp", lambda: sssp(0), False),
+    ("cc", lambda: connected_components(), True),
+])
+def test_chaos_recoverable_plan_is_bitwise_identical(
+        name, mk, sym, graph, store_dir, sym_store_dir, tmp_path):
+    """Disk-residency PageRank / SSSP / CC under a seeded plan with one
+    shard corruption, two transient IOErrors and a mid-run kill recovers to
+    the exact fault-free vector; every event fires; retries stay within the
+    policy budget (acceptance criterion)."""
+    root = sym_store_dir if sym else store_dir
+    ck = str(tmp_path / "ck")
+    clean = PMVEngine(None, store=root, residency="disk",
+                      strategy="vertical", symmetrize=sym)
+    r0 = clean.run(mk(), max_iters=8, tol=0.0)
+
+    plan = FaultPlan(events=(
+        CorruptFetch(block=2, array="seg"),
+        TransientIO(block=3),
+        TransientIO(block=5),
+        KillAtIteration(iteration=4),
+    ), seed=11)
+    eng = PMVEngine(None, store=root, residency="disk", strategy="vertical",
+                    symmetrize=sym, faults=plan, io_retry=FAST_RETRY,
+                    obs=True)
+    with pytest.raises(InjectedKill):
+        eng.run(mk(), max_iters=8, tol=0.0,
+                checkpoint_dir=ck, checkpoint_every=1)
+    # resume on the SAME engine: the consumed kill stays consumed, the
+    # checkpointed iterate replays the remaining iterations deterministically
+    r1 = eng.run(mk(), max_iters=8, tol=0.0,
+                 checkpoint_dir=ck, checkpoint_every=1, resume=True)
+
+    np.testing.assert_array_equal(r0.v, r1.v)
+    assert r1.iterations == r0.iterations
+    assert eng._fault_injector.remaining == 0      # every fault fired
+    rec = eng.obs
+    assert _counter(rec, "fault.injected") == 4
+    assert _counter(rec, "fault.injected.corrupt_fetch") == 1
+    assert _counter(rec, "fault.injected.transient_io") == 2
+    assert _counter(rec, "fault.injected.kill") == 1
+    # one re-fetch per injected fetch fault, each within the retry budget
+    assert _counter(rec, "fault.retry") == 3
+    assert _counter(rec, "fault.recovered") == 3
+    assert _counter(rec, "store.verify_failures") == 1
+    assert FAST_RETRY.retry_budget >= 1
+
+
+def test_slow_fetch_is_absorbed(graph, store_dir):
+    """A straggler read delays but never corrupts: the run matches the
+    fault-free result and the slow_fetch event is consumed + counted."""
+    plan = FaultPlan(events=(SlowFetch(block=1, delay_s=0.02),), seed=3)
+    clean = PMVEngine(None, store=store_dir, residency="disk",
+                      strategy="vertical")
+    eng = PMVEngine(None, store=store_dir, residency="disk",
+                    strategy="vertical", faults=plan, obs=True)
+    r0 = clean.run(pagerank(N), max_iters=4, tol=0.0)
+    r1 = eng.run(pagerank(N), max_iters=4, tol=0.0)
+    np.testing.assert_array_equal(r0.v, r1.v)
+    assert eng._fault_injector.remaining == 0
+    assert _counter(eng.obs, "fault.injected.slow_fetch") == 1
+
+
+def test_faults_none_keeps_hot_path_clean(graph, store_dir):
+    """faults=None + checksums on: verification is auto-enabled (the store
+    carries digests) and the solve is bitwise the resident engine — the
+    PR 6 contract, now with integrity checking underneath."""
+    dstore = DiskBlockStore(open_store(store_dir), "vertical", pagerank(N))
+    assert dstore.verify          # auto-on: the manifest has checksums
+    assert dstore.faults is None
+    e_disk = PMVEngine(None, store=store_dir, residency="disk",
+                       strategy="vertical", obs=True)
+    e_dev = PMVEngine(graph, N, b=B, strategy="vertical")
+    r_disk = e_disk.run(pagerank(N), max_iters=6, tol=0.0)
+    r_dev = e_dev.run(pagerank(N), max_iters=6, tol=0.0)
+    np.testing.assert_array_equal(r_dev.v, r_disk.v)
+    assert _counter(e_disk.obs, "fault.injected") == 0
+    assert _counter(e_disk.obs, "fault.retry") == 0
+
+
+def test_random_plan_counts_and_determinism():
+    plan = FaultPlan.random(42, blocks=range(B), n_corrupt=1, n_transient=2,
+                            n_slow=1, kill_at=3)
+    assert plan.counts() == {"corrupt_fetch": 1, "transient_io": 2,
+                             "slow_fetch": 1, "kill": 1}
+    assert plan == FaultPlan.random(42, blocks=range(B), n_corrupt=1,
+                                    n_transient=2, n_slow=1, kill_at=3)
+    assert as_injector(None) is None
+    inj = plan.build()
+    assert as_injector(inj) is inj          # shared injector passes through
+    assert isinstance(as_injector(plan), FaultInjector)
+    with pytest.raises(TypeError):
+        as_injector("chaos")
+
+
+# ---------------------------------------------------------------------------
+# Retry policy unit behavior.
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_recovers_within_budget():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise InjectedIOError("transient")
+        return "ok"
+
+    pol = RetryPolicy(max_attempts=3, base_delay_s=1e-4)
+    assert pol.call(flaky) == "ok"
+    assert calls["n"] == 3 == pol.retry_budget + 1
+
+
+def test_retry_policy_exhaustion_keeps_typed_error():
+    pol = RetryPolicy(max_attempts=2, base_delay_s=1e-4)
+    err = ShardCorruptError("/x/w0.seg.npy", array="seg", worker=0, block=1)
+    with pytest.raises(ShardCorruptError) as ei:
+        pol.call(lambda: (_ for _ in ()).throw(err))
+    assert ei.value is err                   # diagnosis preserved verbatim
+
+
+def test_retry_policy_fails_fast_on_permanent_errors():
+    calls = {"n": 0}
+
+    def missing():
+        calls["n"] += 1
+        raise FileNotFoundError("gone")
+
+    with pytest.raises(FileNotFoundError):
+        RetryPolicy(max_attempts=5, base_delay_s=1e-4).call(missing)
+    assert calls["n"] == 1                   # no retry: the shard won't appear
+
+
+def test_retry_policy_deadline_raises_typed():
+    pol = RetryPolicy(max_attempts=100, base_delay_s=1e-3, deadline_s=0.0)
+    with pytest.raises(FetchDeadlineError) as ei:
+        pol.call(lambda: (_ for _ in ()).throw(InjectedIOError("x")))
+    assert isinstance(ei.value.__cause__, InjectedIOError)
+
+
+# ---------------------------------------------------------------------------
+# Store integrity: checksum round-trip (hypothesis) + typed manifest errors.
+# ---------------------------------------------------------------------------
+
+# built lazily OUTSIDE the fixture system: the hypothesis-compat shim's
+# @given wrapper is zero-arg, so property tests cannot take fixtures.
+_INTEGRITY_STORES: dict[tuple, str] = {}
+
+
+def _integrity_store(psi: str, sym: bool) -> str:
+    """One small ingested store per (psi, symmetrize), cached per session."""
+    key = (psi, sym)
+    if key not in _INTEGRITY_STORES:
+        import tempfile
+
+        root = os.path.join(tempfile.mkdtemp(prefix=f"integ_{psi}_{sym}_"), "s")
+        ingest_edges(rmat(7, 900, seed=5), 128, 4, root,
+                     psi=psi, symmetrize=sym)
+        _INTEGRITY_STORES[key] = root
+    return _INTEGRITY_STORES[key]
+
+
+@given(data=st.data())
+@settings(max_examples=16, deadline=None)
+def test_checksum_roundtrip_detects_any_single_byte_flip(data):
+    """Uncorrupted shards always verify; ANY single flipped byte in any
+    seg/gat/cnt shard, any striping, any ψ/symmetrize combination is caught
+    by verify_store — and, for the edge shards, by the fetch path too."""
+    psi = data.draw(st.sampled_from(["cyclic", "range"]), label="psi")
+    sym = data.draw(st.sampled_from([False, True]), label="symmetrize")
+    root = _integrity_store(psi, sym)
+    man = open_store(root)
+    assert verify_store(man).ok              # clean store: all digests match
+
+    striping = data.draw(st.sampled_from(["vertical", "horizontal"]),
+                         label="striping")
+    array = data.draw(st.sampled_from(["seg", "gat", "cnt"]), label="array")
+    w = data.draw(st.integers(0, man.b - 1), label="worker")
+    path = fmt.stripe_path(root, striping, w, array)
+    mm = np.load(path, mmap_mode="r+")
+    flat = mm.view(np.uint8).reshape(-1)
+    off = data.draw(st.integers(0, flat.size - 1), label="byte")
+    try:
+        flat[off] ^= 0xFF
+        mm.flush()
+        report = verify_store(root)
+        assert not report.ok
+        assert any(path in m for m in report.mismatches)
+        if array in ("seg", "gat"):
+            # the online path sees it too, with the precise diagnosis
+            k = int(off // (man.e_cap * 4))  # int32 rows of [b, e_cap]
+            dstore = DiskBlockStore(man, striping, pagerank(man.n))
+            with pytest.raises(ShardCorruptError) as ei:
+                dstore.fetch(k)
+            assert ei.value.worker == w and ei.value.block == k
+            assert ei.value.array == array
+        else:
+            with pytest.raises(ShardCorruptError) as ei:
+                DiskBlockStore(man, striping, pagerank(man.n))
+            assert ei.value.array == "cnt" and ei.value.worker == w
+    finally:
+        flat[off] ^= 0xFF                    # restore for the next example
+        mm.flush()
+    assert verify_store(root).ok
+
+
+def test_verify_store_reports_missing_files(tmp_path):
+    import shutil
+
+    root = str(tmp_path / "s")
+    shutil.copytree(_integrity_store("cyclic", False), root)
+    victim = fmt.stripe_path(root, "horizontal", 1, "gat")
+    os.remove(victim)
+    report = verify_store(root)
+    assert not report.ok and victim in report.missing
+    assert "MISSING" in report.summary()
+
+
+def test_prechecksum_store_verifies_as_skipped(tmp_path):
+    """A store ingested before checksums existed still opens and runs, and
+    verify_store says 'nothing to verify' instead of lying either way."""
+    import shutil
+
+    root = str(tmp_path / "s")
+    shutil.copytree(_integrity_store("cyclic", False), root)
+    man_path = os.path.join(root, MANIFEST_FILE)
+    with open(man_path) as f:
+        doc = json.load(f)
+    del doc["checksums"]
+    with open(man_path, "w") as f:
+        json.dump(doc, f)
+    report = verify_store(root)
+    assert report.skipped and not report.ok
+    dstore = DiskBlockStore(root, "vertical", pagerank(128))
+    assert not dstore.verify                 # auto-off without digests
+    dstore.fetch(0)                          # ...but fetching still works
+    with pytest.raises(ValueError, match="no checksums"):
+        DiskBlockStore(root, "vertical", pagerank(128), verify=True)
+
+
+def test_truncated_manifest_raises_typed_error(tmp_path):
+    import shutil
+
+    root = str(tmp_path / "s")
+    shutil.copytree(_integrity_store("cyclic", False), root)
+    man_path = os.path.join(root, MANIFEST_FILE)
+    with open(man_path) as f:
+        text = f.read()
+    with open(man_path, "w") as f:
+        f.write(text[: len(text) // 2])     # truncate mid-JSON
+    with pytest.raises(ManifestCorruptError) as ei:
+        open_store(root)
+    assert ei.value.path == man_path
+    assert ei.value.pos is not None          # parse position is in the error
+    assert "re-ingest" in str(ei.value)
+
+
+def test_invalid_and_incomplete_manifests_raise_typed_error(tmp_path):
+    root = str(tmp_path / "s")
+    os.makedirs(root)
+    man_path = os.path.join(root, MANIFEST_FILE)
+    with open(man_path, "w") as f:
+        f.write("not json at all {{{")
+    with pytest.raises(ManifestCorruptError):
+        open_store(root)
+    with open(man_path, "w") as f:
+        json.dump({"format": "pmv-block-store", "version": 1, "n": 8}, f)
+    with pytest.raises(ManifestCorruptError, match="field"):
+        open_store(root)
+
+
+# ---------------------------------------------------------------------------
+# Prefetch-thread degradation.
+# ---------------------------------------------------------------------------
+
+def test_prefetch_thread_failure_degrades_to_sync(graph, store_dir,
+                                                  monkeypatch):
+    """When the prefetch pool cannot take work at all, the executor falls
+    back to synchronous fetches — same bits, no deadlock — and counts the
+    downgrade."""
+    from repro.store import residency as res_mod
+
+    clean = PMVEngine(None, store=store_dir, residency="disk",
+                      strategy="vertical")
+    r0 = clean.run(pagerank(N), max_iters=4, tol=0.0)
+
+    class BrokenPool:
+        def __init__(self, *a, **k):
+            pass
+
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *exc):
+            return False
+
+        def submit(self, fn, *a, **k):
+            raise RuntimeError("cannot schedule new futures")
+
+    monkeypatch.setattr(res_mod, "ThreadPoolExecutor", BrokenPool)
+    eng = PMVEngine(None, store=store_dir, residency="disk",
+                    strategy="vertical", obs=True)
+    r1 = eng.run(pagerank(N), max_iters=4, tol=0.0)
+    np.testing.assert_array_equal(r0.v, r1.v)
+    assert _counter(eng.obs, "store.prefetch_degraded") >= 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the overflow retry path (disk branch + obs ledger).
+# ---------------------------------------------------------------------------
+
+def test_disk_overflow_retry_succeeds_and_is_counted(tmp_path):
+    """Disk vertical with a too-tight model capacity: the engine retries
+    once with the structural capacity, matches the clean result, and the
+    fallback lands in the obs ledger (pmv.fallback_events.<label>)."""
+    n, b = 64, 4
+    edges = star_graph(n)
+    root = str(tmp_path / "s")
+    ingest_edges(edges, n, b, root)
+    eng = PMVEngine(None, store=root, residency="disk", strategy="vertical",
+                    capacity="model", slack=0.01, obs=True)
+    res = eng.run(pagerank(n), max_iters=6, tol=0.0)
+    assert res.totals["fallback"] == "structural_capacity"
+    assert _counter(eng.obs, "pmv.fallbacks") == 1
+    assert _counter(eng.obs, "pmv.fallback_events.structural_capacity") == 1
+    ref = PMVEngine(edges, n, b=b, strategy="vertical").run(
+        pagerank(n), max_iters=6, tol=0.0)
+    np.testing.assert_array_equal(ref.v, res.v)
+
+
+def test_disk_overflow_still_overflowing_raises(tmp_path):
+    """The retried configuration is final: with the fallback disabled (the
+    retry itself runs with _allow_fallback=False) a persistent overflow is
+    a typed failure, not an infinite retry loop."""
+    n, b = 64, 4
+    edges = star_graph(n)
+    root = str(tmp_path / "s")
+    ingest_edges(edges, n, b, root)
+    eng = PMVEngine(None, store=root, residency="disk", strategy="vertical",
+                    capacity="model", slack=0.01)
+    with pytest.raises(RuntimeError, match="overflow"):
+        eng.run(pagerank(n), max_iters=6, tol=0.0, _allow_fallback=False)
+    # structural capacity has no tighter fallback: the table says so
+    structural = PMVEngine(None, store=root, residency="disk",
+                           strategy="vertical", capacity="structural")
+    assert structural.fallback_overrides("vertical") is None
+
+
+# ---------------------------------------------------------------------------
+# Serving degradation.
+# ---------------------------------------------------------------------------
+
+def test_serving_deadline_returns_partial_iterate(graph):
+    srv = PMVServer(graph, N, b=B, obs=True)
+    qid = srv.submit(Query(spec_kind="pagerank", tol=0.0, max_iters=50,
+                           deadline_s=0.0))
+    r = srv.drain()[qid]
+    assert r.reason == "deadline_exceeded" and not r.converged
+    assert r.vector is not None and r.iterations >= 1   # partial answer
+    st_ = srv.stats()
+    assert st_["retirement_reasons"]["deadline_exceeded"] == 1
+
+
+def test_serving_sheds_over_max_queue(graph):
+    srv = PMVServer(graph, N, b=B, max_queue=2, obs=True)
+    qids = [srv.submit(Query(spec_kind="pagerank", tol=1e-5))
+            for _ in range(5)]
+    res = srv.drain()
+    reasons = [res[q].reason for q in qids]
+    assert reasons == ["completed"] * 2 + ["shed"] * 3
+    assert all(res[q].vector is None for q in qids[2:])
+    st_ = srv.stats()
+    assert st_["shed"] == 3
+    assert st_["retirement_reasons"]["shed"] == 3
+    assert st_["retirement_reasons"]["completed"] == 2
+    # shed queries never entered a batch
+    assert st_["queries"] == 5 and st_["retired"] == 2
+
+
+def test_serving_failed_batch_keeps_server_alive(graph, tmp_path):
+    """Persistent on-disk corruption fails the batch with the typed
+    diagnosis in each result — and the server still answers the next
+    (clean) family afterwards."""
+    n, b = N, B
+    root = str(tmp_path / "s")
+    ingest_edges(graph, n, b, root, symmetrize=True)
+    # flip one byte of an edge shard ON DISK: every re-read fails the same way
+    path = fmt.stripe_path(root, "vertical", 0, "seg")
+    mm = np.load(path, mmap_mode="r+")
+    mm.view(np.uint8).reshape(-1)[7] ^= 0xFF
+    mm.flush()
+    del mm
+
+    srv = PMVServer(store=root, residency="disk", strategy="vertical",
+                    io_retry=RetryPolicy(max_attempts=2, base_delay_s=1e-4),
+                    obs=True)
+    qid = srv.submit(Query(spec_kind="pagerank", tol=1e-5))
+    r = srv.drain()[qid]
+    assert r.reason == "failed" and r.vector is None
+    assert "checksum mismatch" in r.error
+    st_ = srv.stats()
+    assert st_["failed_batches"] == 1
+    assert st_["retirement_reasons"]["failed"] == 1
+    # the corruption is in the VERTICAL striping; cc runs horizontal? no —
+    # same striping, so prove liveness with a different family on the same
+    # engine kwargs after restoring the shard.
+    mm = np.load(path, mmap_mode="r+")
+    mm.view(np.uint8).reshape(-1)[7] ^= 0xFF
+    mm.flush()
+    del mm
+    qid2 = srv.submit(Query(spec_kind="pagerank", tol=1e-5))
+    r2 = srv.drain()[qid2]
+    assert r2.reason == "completed" and r2.vector is not None
+
+
+def test_serving_chaos_plan_is_transparent(graph, tmp_path):
+    """A recoverable plan behind the serving tier: answers are bitwise the
+    fault-free answers and every fault is absorbed below the query API."""
+    root = str(tmp_path / "s")
+    ingest_edges(graph, N, B, root)
+    queries = [Query(spec_kind="pagerank", tol=1e-5),
+               Query(spec_kind="rwr", source=3, c=0.7, tol=1e-5)]
+    srv0 = PMVServer(store=root, residency="disk", strategy="vertical")
+    r0 = srv0.serve(queries)   # submit() re-stamps qids on resubmission
+
+    plan = FaultPlan(events=(CorruptFetch(block=1, array="gat"),
+                             TransientIO(block=2)), seed=9)
+    srv1 = PMVServer(store=root, residency="disk", strategy="vertical",
+                     faults=plan, io_retry=FAST_RETRY, obs=True)
+    r1 = srv1.serve(queries)
+    for a, c in zip(r1, r0):
+        assert a.reason == "completed"
+        np.testing.assert_array_equal(a.vector, c.vector)
+        assert a.iterations == c.iterations
+    assert _counter(srv1.obs, "fault.injected") == 2
+    assert _counter(srv1.obs, "fault.recovered") == 2
+
+
+# ---------------------------------------------------------------------------
+# CLI.
+# ---------------------------------------------------------------------------
+
+def test_cli_store_verify_exit_codes(tmp_path, capsys):
+    import shutil
+
+    from repro.cli import main
+
+    root = str(tmp_path / "s")
+    shutil.copytree(_integrity_store("cyclic", False), root)
+    assert main(["store", "verify", root]) == 0
+    out = capsys.readouterr().out
+    assert "0 mismatched" in out
+
+    path = fmt.stripe_path(root, "vertical", 0, "seg")
+    mm = np.load(path, mmap_mode="r+")
+    mm.view(np.uint8).reshape(-1)[0] ^= 0xFF
+    mm.flush()
+    del mm
+    assert main(["store", "verify", root]) == 1
+    assert "CORRUPT" in capsys.readouterr().out
+
+    man_path = os.path.join(root, MANIFEST_FILE)
+    with open(man_path) as f:
+        doc = json.load(f)
+    del doc["checksums"]
+    with open(man_path, "w") as f:
+        json.dump(doc, f)
+    assert main(["store", "verify", root]) == 2
