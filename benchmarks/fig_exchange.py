@@ -1,0 +1,105 @@
+"""CI smoke + figure data for the packed exchange (ISSUE 8 satellite).
+
+Runs PageRank on an RMAT graph under the padded sparse exchange and the
+packed (partition-centric) exchange, resident and out-of-core, plus a
+delta-iteration run (eps>0) on the same converging solve.  Emits
+``BENCH_exchange.json`` and gates on:
+
+    * bitwise parity: packed == sparse, resident and disk (segment scatter);
+    * wire bytes: the packed stream (ids once + payload/iter) undercuts the
+      padded (idx, val) stream over the run;
+    * delta decay: with eps>0 the per-iteration sent-row count strictly
+      drops from first to last iteration on converging PageRank.
+
+Exits non-zero if any gate fails, so CI catches transport regressions.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.core import PMVEngine, pagerank
+from repro.graph import rmat
+from repro.store import ingest_edges
+
+LOG2N = 10
+M_EDGES = 16_000
+B = 8
+ITERS = 10
+DELTA_EPS = 1e-4
+
+
+def _wire(res) -> dict:
+    return {
+        "wire_bytes": float(res.totals["wire_bytes"]),
+        "id_bytes": float(res.totals["exchange_id_bytes"]),
+        "payload_bytes": float(res.totals["exchange_payload_bytes"]),
+    }
+
+
+def main(out: str = "BENCH_exchange.json") -> int:
+    n = 1 << LOG2N
+    edges = rmat(LOG2N, M_EDGES, seed=7)
+    spec = pagerank(n)
+    kw = dict(b=B, strategy="vertical", scatter="segment")
+
+    res = {}
+    for xch in ("sparse", "packed"):
+        res[xch] = PMVEngine(edges, n, exchange=xch, **kw).run(
+            spec, max_iters=ITERS, tol=0.0)
+    res_delta = PMVEngine(edges, n, exchange="packed", delta_eps=DELTA_EPS,
+                          **kw).run(spec, max_iters=ITERS, tol=0.0)
+
+    root = os.path.join(os.path.dirname(out) or ".", "exchange_store")
+    man = ingest_edges(edges, n, B, root, chunk_edges=1 << 13)
+    disk = {}
+    for xch in ("sparse", "packed"):
+        disk[xch] = PMVEngine(None, store=man, residency="disk",
+                              strategy="vertical", exchange=xch).run(
+            spec, max_iters=ITERS, tol=0.0)
+
+    sent = [float(r["delta_sent_rows"]) for r in res_delta.per_iter]
+    gates = {
+        "bitwise_resident": bool(np.array_equal(res["sparse"].v,
+                                                res["packed"].v)),
+        "bitwise_disk": bool(np.array_equal(disk["sparse"].v,
+                                            disk["packed"].v)),
+        "bitwise_disk_vs_resident": bool(np.array_equal(disk["packed"].v,
+                                                        res["packed"].v)),
+        "packed_undercuts_padded": float(res["packed"].totals["wire_bytes"])
+        < float(res["sparse"].totals["wire_bytes"]),
+        "delta_sent_rows_decay": sent[-1] < sent[0],
+        # suppression error compounds once per iteration, so the bound
+        # scales with the iteration count, not bare eps
+        "delta_close_to_full": bool(np.allclose(res_delta.v, res["packed"].v,
+                                                atol=10 * ITERS * DELTA_EPS)),
+    }
+    report = {
+        "n": n, "m": len(edges), "b": B, "iters": ITERS,
+        "resident": {x: _wire(res[x]) for x in res},
+        "disk": {x: _wire(disk[x]) for x in disk},
+        "delta": {
+            "eps": DELTA_EPS,
+            "sent_rows_per_iter": sent,
+            "suppressed_rows": float(
+                res_delta.totals["delta_suppressed_rows"]),
+            **_wire(res_delta),
+        },
+        "gates": gates,
+    }
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report, indent=1))
+    failed = [k for k, ok in gates.items() if not ok]
+    if failed:
+        print("FAIL: gates failed: %s" % ", ".join(failed), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_exchange.json"))

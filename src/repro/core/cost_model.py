@@ -34,6 +34,10 @@ __all__ = [
     "kernel_scatter_cost",
     "segment_scatter_cost",
     "prefer_kernel_scatter",
+    "PACKED_ID_AMORTIZATION_ITERS",
+    "padded_exchange_bytes",
+    "packed_exchange_bytes",
+    "prefer_packed_exchange",
     "SLOT_TIME_S",
     "slot_seconds",
     "RESIDENCY_MODES",
@@ -260,6 +264,60 @@ def prefer_kernel_scatter(t: float, n_out: int, *, interpret: bool = False) -> b
     """scatter='auto' crossover: take the one-hot kernel only while its
     T*n_out streamed work undercuts T serial scatter writes."""
     return kernel_scatter_cost(t, n_out, interpret=interpret) < segment_scatter_cost(t)
+
+
+# ---------------------------------------------------------------------------
+# Packed-exchange transport (repro.exchange; ROADMAP item 2).
+#
+# The compact sparse exchange re-ships an int32 index for every capacity slot
+# every iteration; the packed exchange derives the per-(src, dst) index sets
+# once at prepare() time (they are STATIC — the matrix structure never
+# changes), ships the delta/bit-width-packed ids a single time, and streams
+# only value payloads thereafter.  The comparison is therefore
+#   padded:  b(b-1) * capacity * (4 + q*itemsize)          per iteration
+#   packed:  payload_slots * q * itemsize                  per iteration
+#            + id_bytes / PACKED_ID_AMORTIZATION_ITERS     (one-time, amortized)
+# where payload_slots = Σ off-diagonal index-set sizes <= b(b-1) * capacity.
+# ---------------------------------------------------------------------------
+
+# Iterations the one-time id shipment is amortized over when comparing
+# transports; typical PMV solves (PageRank/SSSP/CC to convergence) run well
+# past this, so the gate is conservative — a solve that stops earlier still
+# pays at most one padded-round-equivalent extra.
+PACKED_ID_AMORTIZATION_ITERS = 10.0
+
+
+def padded_exchange_bytes(b: int, capacity: int, nq: int | None,
+                          itemsize: int) -> float:
+    """Per-iteration wire bytes of the capacity-padded (idx, val) exchange —
+    the byte model of sparse_exchange.exchange_wire_bytes, importable without
+    jax for planning/explain."""
+    return float(b * (b - 1) * capacity * (4 + (nq or 1) * itemsize))
+
+
+def packed_exchange_bytes(payload_slots: int, nq: int | None,
+                          itemsize: int) -> float:
+    """Per-iteration wire bytes of the packed exchange's payload stream (the
+    static ids ship once and are amortized separately)."""
+    return float(payload_slots * (nq or 1) * itemsize)
+
+
+def prefer_packed_exchange(
+    b: int,
+    capacity: int,
+    payload_slots: int,
+    id_bytes: int,
+    nq: int | None,
+    itemsize: int,
+    *,
+    amortization_iters: float = PACKED_ID_AMORTIZATION_ITERS,
+) -> bool:
+    """exchange='auto' gate: take the packed transport when its amortized
+    per-iteration bytes undercut the padded stream's."""
+    padded = padded_exchange_bytes(b, capacity, nq, itemsize)
+    packed = (packed_exchange_bytes(payload_slots, nq, itemsize)
+              + id_bytes / amortization_iters)
+    return packed < padded
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import blocks as blocks_lib
 from repro.core import cost_model, placement, planner, sparse_exchange
 from repro.core.blocks import BlockEdges, DenseRegion
+from repro.exchange import plan as exchange_plan
 from repro.kernels.block_gimv import has_semiring, semiring_of
 from repro.core.gimv import GimvSpec
 from repro.core.partition import HybridMatrix, Partition, PartitionedMatrix, partition_graph
@@ -49,13 +50,18 @@ class StepConfig:
 
     strategy: str            # 'horizontal' | 'vertical' | 'hybrid'
     n_local: int
-    exchange: str = "sparse"  # vertical transport: 'sparse' | 'dense' | 'hier'
+    exchange: str = "sparse"  # resolved transport: 'sparse'|'dense'|'hier'|'packed'
     capacity: int | None = None
     payload_dtype: str | None = None  # e.g. 'bfloat16' wire values (§Perf)
     backend: str = "xla"     # resolved mode: 'xla' | 'pallas' | 'planned'
     interpret: bool = False  # Pallas interpret mode (CPU hosts / debugging)
     stream: str = "off"      # resolved partial schedule: 'on' | 'off'
     plan: planner.ExecutionPlan | None = None
+    # packed exchange (repro.exchange): the static byte-model plan (frozen,
+    # hashable) and the resolved delta-iteration threshold (None = full
+    # stream; set only when the semiring admits suppression — see prepare).
+    xplan: exchange_plan.ExchangePlan | None = None
+    delta_eps: float | None = None
 
 
 def _stack_stripes(stripes: list[BlockEdges]) -> BlockEdges:
@@ -67,11 +73,15 @@ def _squeeze0(tree):
     return jax.tree.map(lambda a: a[0], tree)
 
 
-def placement_call(spec: GimvSpec, cfg: StepConfig, matrix, v, ctx, mask, axis):
+def placement_call(spec: GimvSpec, cfg: StepConfig, matrix, v, ctx, mask, axis,
+                   xstate=None):
     """Dispatch one placement step for ``cfg.strategy``.
 
     Shared by the engine's scalar step and repro.serving's multi-query step
-    (v/ctx may carry a trailing query axis; placements are polymorphic)."""
+    (v/ctx may carry a trailing query axis; placements are polymorphic).
+    Returns (v_new, r, stats) — plus the new delta-iteration state as a
+    fourth element when ``xstate`` (the previously-shipped packed payload)
+    is passed."""
     n_local = cfg.n_local
     scatter = cfg.plan.scatter if cfg.plan is not None else "segment"
     if cfg.strategy == "horizontal":
@@ -86,15 +96,19 @@ def placement_call(spec: GimvSpec, cfg: StepConfig, matrix, v, ctx, mask, axis):
             exchange=cfg.exchange, capacity=cfg.capacity, payload_dtype=pd,
             ell=matrix.get("ell"), planned=matrix.get("planned"),
             streamed=matrix.get("streamed"),
+            xchg=matrix.get("xchg"), xplan=cfg.xplan,
+            delta_eps=cfg.delta_eps, delta_state=xstate,
             backend=cfg.backend, scatter=scatter, interpret=cfg.interpret)
     if cfg.strategy == "hybrid":
         pd = jnp.dtype(cfg.payload_dtype) if cfg.payload_dtype else None
         return placement.hybrid_step(
             spec, matrix["sparse_stripe"], matrix["dense_stripe"], matrix["dense_region"],
             v, ctx, mask, n_local=n_local, axis_name=axis, capacity=cfg.capacity,
+            exchange=cfg.exchange,
             payload_dtype=pd, sparse_ell=matrix.get("sparse_ell"),
             planned_sparse=matrix.get("planned_sparse"),
             streamed_sparse=matrix.get("streamed_sparse"),
+            xchg=matrix.get("xchg"), xplan=cfg.xplan,
             dense_matrix=matrix.get("dense_matrix"), backend=cfg.backend,
             scatter=scatter, interpret=cfg.interpret)
     raise ValueError(cfg.strategy)
@@ -109,15 +123,47 @@ def make_step(spec: GimvSpec, cfg: StepConfig, mesh: Mesh | None = None, axis_na
     stats come out replicated.
     """
 
-    def _placement_call(matrix, v, ctx, mask, axis):
-        return placement_call(spec, cfg, matrix, v, ctx, mask, axis)
+    def _placement_call(matrix, v, ctx, mask, axis, xstate=None):
+        return placement_call(spec, cfg, matrix, v, ctx, mask, axis, xstate)
+
+    with_state = cfg.delta_eps is not None
 
     if mesh is None:
+        if with_state:
+            def step(matrix, v, ctx, mask, xstate):
+                v_new, _r, stats, xnew = _placement_call(
+                    matrix, v, ctx, mask, None, xstate)
+                delta = spec.default_delta(v, v_new)
+                return v_new, delta, stats, xnew
+            return step
+
         def step(matrix, v, ctx, mask):
             v_new, _r, stats = _placement_call(matrix, v, ctx, mask, None)
             delta = spec.default_delta(v, v_new)
             return v_new, delta, stats
         return step
+
+    from jax.experimental.shard_map import shard_map
+
+    sharded = P(axis_name)
+    repl = P()
+    if with_state:
+        def body_state(matrix, v, ctx, mask, xstate):
+            matrix, v, ctx, mask, xstate = (
+                _squeeze0(t) for t in (matrix, v, ctx, mask, xstate))
+            v_new, _r, stats, xnew = _placement_call(
+                matrix, v, ctx, mask, axis_name, xstate)
+            delta = jax.lax.psum(spec.default_delta(v, v_new), axis_name)
+            stats = {k: (s if s.ndim == 0 else s) for k, s in stats.items()}
+            return v_new[None], delta, stats, xnew[None]
+
+        return shard_map(
+            body_state,
+            mesh=mesh,
+            in_specs=(sharded, sharded, sharded, sharded, sharded),
+            out_specs=(sharded, repl, repl, sharded),
+            check_rep=False,
+        )
 
     def body(matrix, v, ctx, mask):
         matrix, v, ctx, mask = (_squeeze0(t) for t in (matrix, v, ctx, mask))
@@ -126,10 +172,6 @@ def make_step(spec: GimvSpec, cfg: StepConfig, mesh: Mesh | None = None, axis_na
         stats = {k: (s if s.ndim == 0 else s) for k, s in stats.items()}
         return v_new[None], delta, stats
 
-    from jax.experimental.shard_map import shard_map
-
-    sharded = P(axis_name)
-    repl = P()
     step = shard_map(
         body,
         mesh=mesh,
@@ -172,12 +214,27 @@ class PMVEngine:
       between the two basics) | 'hybrid' (θ-split, the paper's best).
     theta: float or 'auto' (= θ* argmin of Lemma 3.3).
     exchange: 'sparse' (compacted, paper-faithful) | 'dense' (all_to_all the
-      full partial vectors — the strawman dense-collective schedule).
+      full partial vectors — the strawman dense-collective schedule) |
+      'packed' (repro.exchange: per-(src,dst) index sets derived once at
+      prepare() time, ids shipped a single time delta/bit-width packed, each
+      iteration streams only value payloads in that fixed order — bitwise
+      the sparse exchange, overflow-free by construction) | 'auto' (packed
+      when cost_model.prefer_packed_exchange says its amortized bytes
+      undercut the padded stream, else sparse).
     capacity: 'structural' (exact max partial nnz — overflow-free) |
       'model' (Eq. 4/8 x slack — tighter, may overflow -> engine retries
       with the dense exchange for that run).
     payload_dtype: wire dtype for the sparse-exchange values (e.g.
       'bfloat16' — §Perf); accumulation stays in the spec dtype.
+    delta_eps: convergence-driven delta iteration over the packed exchange
+      (vertical, in-memory): carry the previously-shipped payload and
+      re-send only rows that moved > delta_eps since the last send
+      (delta_eps=0.0 re-sends on any bitwise change — exact).  Enabled only
+      for combineAll='sum' semirings over floating payloads (PageRank/RWR
+      style), where an eps-stale value perturbs the sum by at most eps per
+      suppressed row; exact-selection semirings (min/max combineAll) keep
+      the full stream — their results must never carry approximation — and
+      explain() reports why.
     backend: 'auto' engages the per-block execution planner (core/planner.py):
       every b x b sub-block is classified at prepare() time into skip / ell
       (row-bucketed ELL slices) / dense (MXU matmul) tactics by density, and
@@ -227,6 +284,7 @@ class PMVEngine:
         capacity: str = "structural",
         slack: float = 1.5,
         payload_dtype: str | None = None,
+        delta_eps: float | None = None,
         backend: str = "xla",
         scatter: str = "auto",
         stream: str = "auto",
@@ -290,10 +348,13 @@ class PMVEngine:
         self.strategy = strategy
         self.theta = theta
         self.psi = psi
+        assert exchange in ("sparse", "dense", "hier", "packed", "auto"), exchange
+        assert delta_eps is None or delta_eps >= 0.0, delta_eps
         self.exchange = exchange
         self.capacity_mode = capacity
         self.slack = slack
         self.payload_dtype = payload_dtype
+        self.delta_eps = delta_eps
         self.backend = backend
         self.scatter = scatter
         self.stream = stream
@@ -497,13 +558,22 @@ class PMVEngine:
         pack_span.__exit__(None, None, None)
         real_mask = part.global_ids_grid() < self.n
 
+        # -- exchange transport resolution: build the packed index sets when
+        # requested (or when 'auto' should weigh them against the padded
+        # stream), and gate delta iteration on semiring soundness.
+        exchange, xplan, delta_eps, xmeta = self._resolve_exchange(
+            spec, strategy, capacity, plan,
+            pm.vertical if strategy == "vertical" else
+            (hm.sparse_vertical if hm is not None else None),
+            part, matrix)
+
         cfg = StepConfig(strategy=strategy, n_local=part.n_local,
-                         exchange=self.exchange, capacity=capacity,
+                         exchange=exchange, capacity=capacity,
                          payload_dtype=self.payload_dtype,
                          backend=backend, interpret=interpret, stream=stream,
-                         plan=plan)
+                         plan=plan, xplan=xplan, delta_eps=delta_eps)
         step = make_step(spec, cfg, self.mesh, self.axis_name)
-        donate = (1,)
+        donate = (1, 4) if delta_eps is not None else (1,)
         step_jit = jax.jit(step, donate_argnums=donate)
 
         device_span = rec.span("prepare.device_put")
@@ -532,8 +602,64 @@ class PMVEngine:
             "part": part, "pm": pm, "hm": hm, "cfg": cfg, "backend": backend,
             "plan": plan, "residency": self.residency,
             "n_dense": int(hm.dense.d_count.sum()) if hm is not None else 0,
+            **xmeta,
         }
         return step_jit, matrix, real_mask_dev, meta
+
+    def _wire_itemsize(self, spec: GimvSpec) -> int:
+        return jnp.dtype(self.payload_dtype or spec.dtype).itemsize
+
+    def _resolve_exchange(self, spec: GimvSpec, strategy: str,
+                          capacity: int | None, plan, stripes, part, matrix):
+        """Resolve self.exchange ('auto' weighs packed vs padded via the cost
+        model) and, for 'packed', derive the static index sets from the block
+        structure, stash the device arrays in the matrix pytree, and gate
+        delta iteration.  Returns (exchange, xplan, delta_eps, meta_extra)."""
+        exchange = self.exchange
+        xplan = None
+        delta_eps = None
+        decision = "forced"
+        if strategy == "horizontal" or stripes is None or capacity is None:
+            if exchange in ("packed", "auto"):
+                exchange = "sparse"  # no partial exchange to pack
+            return exchange, None, None, {"exchange": exchange,
+                                          "exchange_decision": "n/a"}
+        if exchange in ("packed", "auto"):
+            with self.obs.span("prepare.exchange") as sp:
+                row_sets = exchange_plan.row_sets_from_stripes(stripes, self.b)
+                xp, arrays = exchange_plan.build_exchange(
+                    row_sets, part.n_local, scatter=plan.scatter)
+                sp.set("p_cap", xp.p_cap)
+                sp.set("id_bytes", xp.id_bytes)
+            if exchange == "auto":
+                use_packed = cost_model.prefer_packed_exchange(
+                    self.b, capacity, xp.payload_slots, xp.id_bytes,
+                    None, self._wire_itemsize(spec))
+                exchange = "packed" if use_packed else "sparse"
+                decision = ("auto: packed undercuts padded" if use_packed
+                            else "auto: padded stream kept")
+            if exchange == "packed":
+                matrix["xchg"] = {k: np.asarray(v) for k, v in arrays.items()}
+                xplan = xp
+        delta_reason = None
+        if self.delta_eps is not None:
+            wire_dt = jnp.dtype(self.payload_dtype or spec.dtype)
+            if exchange != "packed":
+                delta_reason = "needs exchange='packed'"
+            elif strategy != "vertical":
+                delta_reason = "vertical-only (hybrid keeps the full stream)"
+            elif spec.combine_all != "sum":
+                delta_reason = (f"combineAll={spec.combine_all!r} is exact "
+                                "selection — full stream kept")
+            elif not jnp.issubdtype(wire_dt, jnp.floating):
+                delta_reason = "integer payloads keep the full stream"
+            else:
+                delta_eps = float(self.delta_eps)
+                delta_reason = "active"
+        return exchange, xplan, delta_eps, {
+            "exchange": exchange, "exchange_decision": decision,
+            "delta_eps": delta_eps, "delta_reason": delta_reason,
+        }
 
     def _record_plan_metrics(self, plan: planner.ExecutionPlan) -> None:
         """Plan-shape gauges: tactic mix, padding occupancy, predicted cost
@@ -573,10 +699,10 @@ class PMVEngine:
             raise ValueError(
                 "residency='disk' runs the streamed per-block xla path; "
                 "backend='pallas' is not available out of core")
-        if strategy == "vertical" and self.exchange != "sparse":
+        if strategy == "vertical" and self.exchange in ("dense", "hier"):
             raise ValueError(
-                "residency='disk' streams through the compact sparse "
-                f"exchange; exchange={self.exchange!r} is not supported")
+                "residency='disk' streams through the compact sparse or "
+                f"packed exchange; exchange={self.exchange!r} is not supported")
         if self.payload_dtype is not None:
             raise ValueError("payload_dtype is not supported out of core")
         part = Partition(n=self.n, b=self.b, psi=self.psi)
@@ -604,6 +730,13 @@ class PMVEngine:
                 interpret=interpret, residency="disk")
             sp.set("predicted_slots", plan.planned_slots)
         self._record_plan_metrics(plan)
+        exchange, xplan, xchg, decision = self._resolve_disk_exchange(
+            spec, strategy, capacity, plan, part)
+        delta_reason = None
+        if self.delta_eps is not None:
+            # delta needs per-row carry state across the executor's python
+            # loop; the out-of-core tier keeps the full (stateless) stream.
+            delta_reason = "residency='disk' keeps the full stream"
         striping = "vertical" if strategy == "vertical" else "horizontal"
         with rec.span("prepare.store"):
             dstore = DiskBlockStore(self.store, striping, spec,
@@ -611,22 +744,63 @@ class PMVEngine:
                                     obs=rec, faults=self._fault_injector)
             executor = DiskExecutor(spec, part, plan, dstore, capacity=capacity,
                                     scatter=plan.scatter, interpret=interpret,
-                                    obs=rec, retry=self.io_retry)
+                                    obs=rec, retry=self.io_retry,
+                                    exchange=exchange, xchg=xchg, xplan=xplan)
         step = make_disk_step(spec, executor)
         cfg = StepConfig(strategy=strategy, n_local=part.n_local,
-                         exchange=self.exchange, capacity=capacity,
+                         exchange=exchange, capacity=capacity,
                          payload_dtype=None, backend="xla",
                          interpret=interpret,
                          stream="on" if strategy == "vertical" else "off",
-                         plan=plan)
+                         plan=plan, xplan=xplan)
         real_mask_dev = jnp.asarray(part.global_ids_grid() < self.n)
         meta = {
             "strategy": strategy, "theta": theta, "capacity": capacity,
             "part": part, "pm": None, "hm": None, "cfg": cfg,
             "backend": "xla", "plan": plan, "residency": "disk",
             "store": dstore, "executor": executor, "n_dense": 0,
+            "exchange": exchange, "exchange_decision": decision,
+            "delta_eps": None, "delta_reason": delta_reason,
         }
         return step, dstore, real_mask_dev, meta
+
+    def _resolve_disk_exchange(self, spec: GimvSpec, strategy: str,
+                               capacity: int | None, plan, part):
+        """Out-of-core counterpart of ``_resolve_exchange``: the per-pair
+        index sets come from the store's v2 packed index shards (decoded,
+        never the edge shards).  A forced 'packed' against a v1 store raises
+        :class:`~repro.store.manifest.ManifestVersionError`; 'auto' degrades
+        to the padded stream with the reason recorded."""
+        exchange = self.exchange
+        if strategy != "vertical" or capacity is None:
+            if exchange in ("packed", "auto"):
+                exchange = "sparse"
+            return exchange, None, None, "n/a"
+        if exchange not in ("packed", "auto"):
+            return exchange, None, None, "forced"
+        if not self.store.has_packed_index:
+            if exchange == "packed":
+                self.store.require_packed_index()  # raises ManifestVersionError
+            return "sparse", None, None, (
+                "auto: store format v%d has no packed index shards"
+                % self.store.version)
+        with self.obs.span("prepare.exchange") as sp:
+            row_sets = self.store.packed_row_sets()
+            xp, arrays = exchange_plan.build_exchange(
+                row_sets, part.n_local, scatter=plan.scatter)
+            sp.set("p_cap", xp.p_cap)
+            sp.set("id_bytes", xp.id_bytes)
+        decision = "forced"
+        if exchange == "auto":
+            use_packed = cost_model.prefer_packed_exchange(
+                self.b, capacity, xp.payload_slots, xp.id_bytes,
+                None, self._wire_itemsize(spec))
+            exchange = "packed" if use_packed else "sparse"
+            decision = ("auto: packed undercuts padded" if use_packed
+                        else "auto: padded stream kept")
+        if exchange != "packed":
+            return exchange, None, None, decision
+        return exchange, xp, arrays, decision
 
     def _resolve_stream(self, strategy: str, backend: str, capacity: int | None,
                         part: Partition) -> str:
@@ -638,7 +812,8 @@ class PMVEngine:
         cost model's memory crossover (tiny b keeps the fused launches)."""
         streamable = (backend == "planned" and capacity is not None and
                       (strategy == "hybrid" or
-                       (strategy == "vertical" and self.exchange in ("sparse", "hier"))))
+                       (strategy == "vertical" and
+                        self.exchange in ("sparse", "hier", "packed", "auto"))))
         if not streamable:
             return "off"
         if self.stream == "auto":
@@ -671,10 +846,14 @@ class PMVEngine:
         wall/exchange series and I/O overlap to the report.  The engine's own
         ``obs`` recorder is restored afterwards."""
         _step, _matrix, _v0, _ctx, _mask, meta = self.prepare(spec, ctx)
-        extra = {"spec": spec.name, "exchange": self.exchange}
+        extra = {"spec": spec.name,
+                 "exchange": meta.get("exchange", self.exchange)}
         if meta["hm"] is not None:
             extra["dense_region_vertices"] = meta["n_dense"]
         text = planner.format_plan(meta["plan"], extra=extra)
+        xsec = self._format_exchange_section(spec, meta)
+        if xsec:
+            text = text + "\n" + xsec
         if not live:
             return text
         from repro.obs import Recorder
@@ -697,6 +876,39 @@ class PMVEngine:
             for t, o in saved:
                 t.obs = o
         return text + "\n" + format_live_report(probe, plan=meta["plan"])
+
+    def _format_exchange_section(self, spec: GimvSpec, meta) -> str | None:
+        """The explain() exchange section (per-pair index-set sizes, packed
+        bit widths, predicted bytes/iter under both transports, and the
+        prefer_packed_exchange decision).  When the packed arrays were not
+        built (sparse/dense modes), the byte model is estimated from the
+        structural partial-nnz template so the comparison still renders."""
+        if meta["strategy"] == "horizontal" or meta["capacity"] is None:
+            return None
+        cfg = meta["cfg"]
+        xp = cfg.xplan
+        estimated = False
+        if xp is None:
+            pm, hm = meta.get("pm"), meta.get("hm")
+            if meta["strategy"] == "vertical" and pm is not None:
+                nnz = pm.partial_nnz
+            elif hm is not None:
+                nnz = hm.sparse_partial_nnz
+            else:
+                return None
+            xp = exchange_plan.summarize_row_sizes(
+                exchange_plan.row_sets_from_nnz_template(np.asarray(nnz)),
+                meta["part"].n_local)
+            estimated = True
+        sec = exchange_plan.format_exchange(
+            xp, mode=meta.get("exchange", self.exchange),
+            decision=meta.get("exchange_decision", "n/a"),
+            capacity=meta["capacity"], itemsize=self._wire_itemsize(spec),
+            delta_eps=cfg.delta_eps, estimated=estimated)
+        reason = meta.get("delta_reason")
+        if self.delta_eps is not None and reason not in (None, "active"):
+            sec += f"\n  delta iteration      requested but OFF: {reason}"
+        return sec
 
     def _capacity(self, pm: PartitionedMatrix, hm: HybridMatrix | None) -> int:
         if self.capacity_mode == "structural":
@@ -723,6 +935,19 @@ class PMVEngine:
     ) -> PMVResult:
         step, matrix, v, ctx_b, mask, meta = self.prepare(spec, ctx)
         part: Partition = meta["part"]
+        cfg: StepConfig = meta["cfg"]
+
+        # delta-iteration carried state: the previously-shipped packed
+        # payload, fresh-initialized to the combineAll identity (a suppressed
+        # row then delivers the identity — a no-op — until it first moves).
+        xstate = None
+        if cfg.delta_eps is not None:
+            wire_dt = jnp.dtype(self.payload_dtype or spec.dtype)
+            xstate = jnp.full((self.b, self.b, cfg.xplan.p_dev),
+                              jnp.asarray(spec.identity, wire_dt))
+            if self.mesh is not None:
+                xstate = jax.device_put(
+                    xstate, NamedSharding(self.mesh, P(self.axis_name)))
 
         start_iter = 0
         if resume and checkpoint_dir and os.path.exists(_ckpt_path(checkpoint_dir)):
@@ -751,7 +976,10 @@ class PMVEngine:
                 self._fault_injector.on_iteration(it)
             t0 = time.perf_counter()
             with obs.span("pmv.iteration") as sp:
-                v_new, delta, stats = step(matrix, v, ctx_b, mask)
+                if xstate is not None:
+                    v_new, delta, stats, xstate = step(matrix, v, ctx_b, mask, xstate)
+                else:
+                    v_new, delta, stats = step(matrix, v, ctx_b, mask)
                 # the fence makes the span cover the device work, not just
                 # the dispatch; the null recorder's fence is identity, so the
                 # untraced path keeps XLA's async schedule untouched.
@@ -770,6 +998,20 @@ class PMVEngine:
                 obs.series("pmv.iter_wall_s").append(wall)
                 obs.series("pmv.exchanged_bytes").append(rec.get("exchanged_bytes", 0.0))
                 obs.series("pmv.gathered_bytes").append(rec.get("gathered_bytes", 0.0))
+                if "exchange_payload_bytes" in rec:
+                    obs.series("pmv.exchange_payload_bytes").append(
+                        rec["exchange_payload_bytes"])
+                    # packed transport ships ids once: the amortized leg
+                    # decays 1/iters; the padded stream re-pays it whole.
+                    id_b = rec.get("exchange_id_bytes", 0.0)
+                    iters_so_far = it - start_iter + 1
+                    obs.series("pmv.exchange_id_bytes_amortized").append(
+                        id_b / iters_so_far if meta.get("exchange") == "packed"
+                        else id_b)
+                if "delta_sent_rows" in rec:
+                    obs.series("pmv.delta_sent_rows").append(rec["delta_sent_rows"])
+                    obs.series("pmv.delta_suppressed_rows").append(
+                        rec["delta_suppressed_rows"])
                 if "store_bytes_read" in rec:  # disk residency: per-iter I/O
                     obs.series("pmv.io_bytes").append(rec["store_bytes_read"])
                     obs.series("pmv.io_overlap").append(rec["store_overlap"])
@@ -809,6 +1051,22 @@ class PMVEngine:
             "exchanged_bytes": sum(r.get("exchanged_bytes", 0.0) for r in per_iter),
             "gathered_bytes": sum(r.get("gathered_bytes", 0.0) for r in per_iter),
         }
+        if per_iter and "exchange_id_bytes" in per_iter[0]:
+            # packed transport: ids crossed the wire ONCE (prepare-time
+            # shipment), so the total counts them once; the padded stream
+            # re-ships its int32 ids every iteration.
+            id_per_iter = per_iter[0]["exchange_id_bytes"]
+            totals["exchange_id_bytes"] = (
+                id_per_iter if meta.get("exchange") == "packed"
+                else sum(r.get("exchange_id_bytes", 0.0) for r in per_iter))
+            totals["exchange_payload_bytes"] = sum(
+                r.get("exchange_payload_bytes", 0.0) for r in per_iter)
+            totals["wire_bytes"] = (totals["exchange_id_bytes"]
+                                    + totals["exchange_payload_bytes"])
+        if per_iter and "delta_sent_rows" in per_iter[0]:
+            totals["delta_sent_rows"] = sum(r["delta_sent_rows"] for r in per_iter)
+            totals["delta_suppressed_rows"] = sum(
+                r["delta_suppressed_rows"] for r in per_iter)
         totals.update(self._io_totals(per_iter))
         return PMVResult(
             v=v_np, iterations=it, converged=converged,
@@ -856,7 +1114,8 @@ class PMVEngine:
         kwargs = dict(
             strategy=meta["strategy"], theta=meta["theta"], psi=self.psi,
             exchange=self.exchange, capacity=self.capacity_mode, slack=self.slack,
-            payload_dtype=self.payload_dtype, backend=self.backend,
+            payload_dtype=self.payload_dtype, delta_eps=self.delta_eps,
+            backend=self.backend,
             scatter=self.scatter, stream=self.stream,
             pallas_interpret=self.pallas_interpret, base_weights=self.base_weights,
             mesh=self.mesh, axis_name=self.axis_name, obs=self.obs,

@@ -55,6 +55,7 @@ from jax import lax
 from repro.core import sparse_exchange
 from repro.core.blocks import BlockEdges, DenseRegion, EllStripe, PlannedStripe
 from repro.core.gimv import GimvSpec, combine2, combine_elementwise, segment_combine
+from repro.exchange import runtime as packed_rt
 from repro.kernels.block_gimv import dense_gimv, dense_gimv_multi, semiring_of
 from repro.kernels.ell_spmv import ell_gimv, ell_gimv_multi
 
@@ -66,6 +67,7 @@ __all__ = [
     "gathered_gimv",
     "ell_gimv_call",
     "single_block_compact",
+    "single_block_partial",
     "single_block_contrib",
     "apply_assign",
 ]
@@ -153,6 +155,18 @@ def _single_block_x(spec: GimvSpec, seg, gat, w, cnt, v_rows, batched: bool):
     return jnp.where(mask[:, None] if batched else mask, x, ident)
 
 
+def single_block_partial(spec: GimvSpec, seg, gat, w, cnt, v_local,
+                         n_local: int):
+    """One destination block's vertical sub-multiplication: seg/gat/w [E_cap]
+    edge arrays against the worker-local vector v_local [n_local(, Q)] ->
+    the dense partial [n_local(, Q)].  Shared by the value-compacting path
+    (``single_block_compact``) and the packed-exchange path (which gathers
+    the partial at its static index set instead of compacting)."""
+    batched = v_local.ndim == 2
+    x = _single_block_x(spec, seg, gat, w, cnt, v_local, batched)
+    return segment_combine(spec, x, seg, n_local)
+
+
 def single_block_compact(spec: GimvSpec, seg, gat, w, cnt, v_local,
                          n_local: int, capacity: int):
     """One destination block's vertical sub-multiplication + immediate
@@ -162,11 +176,9 @@ def single_block_compact(spec: GimvSpec, seg, gat, w, cnt, v_local,
     — shared verbatim with the disk-residency executor (repro.store), which
     fetches each block's shard slice from disk and must stay bitwise
     identical to the resident path."""
-    batched = v_local.ndim == 2
-    x = _single_block_x(spec, seg, gat, w, cnt, v_local, batched)
-    partial = segment_combine(spec, x, seg, n_local)
+    partial = single_block_partial(spec, seg, gat, w, cnt, v_local, n_local)
     return sparse_exchange.compact_partials(
-        spec, partial, capacity, None, batched=batched)
+        spec, partial, capacity, None, batched=v_local.ndim == 2)
 
 
 def single_block_contrib(spec: GimvSpec, seg, gat, w, cnt, v_src, n_local: int):
@@ -208,6 +220,29 @@ def block_gimv_partials_compact(
           stripe.count)
     _, (idx, val, over, logical) = jax.lax.scan(body, None, xs)
     return idx, val, jnp.sum(over), jnp.sum(logical)
+
+
+def block_gimv_partials_payload(
+    spec: GimvSpec, stripe: BlockEdges, v_local: jnp.ndarray,
+    send_rows: jnp.ndarray, n_local: int
+):
+    """Streamed vertical sub-multiplications gathered at the static packed
+    order (the paper's schedule, with the packed exchange's structure-free
+    payload instead of (idx, val) compaction).  ``send_rows`` [b, p] is the
+    prepare()-time gather order per destination block; the scan keeps live
+    memory at O(n_local + b*p).  Returns (payload [b, p(, Q)], logical)."""
+
+    def body(_, blk):
+        seg, gat, w, cnt, srows = blk
+        partial_ = single_block_partial(spec, seg, gat, w, cnt, v_local, n_local)
+        pay = packed_rt.gather_payload(spec, partial_, srows)
+        return None, (pay, sparse_exchange.count_non_identity(spec, pay))
+
+    xs = (stripe.seg_local, stripe.gat_local,
+          stripe.w if stripe.w is not None else jnp.zeros_like(stripe.seg_local),
+          stripe.count, send_rows)
+    _, (val, logical) = jax.lax.scan(body, None, xs)
+    return val, jnp.sum(logical)
 
 
 def gathered_gimv(spec: GimvSpec, stripe: BlockEdges, v_all: jnp.ndarray, n_local: int) -> jnp.ndarray:
@@ -329,6 +364,44 @@ def _ell_partials_compact(spec: GimvSpec, ell: EllStripe, v_local, n_local: int,
 
     _, (idx, val, over, logical) = lax.scan(body, None, (ell.cols, ell.w))
     return idx, val, jnp.sum(over), jnp.sum(logical)
+
+
+def _ell_partials_payload(spec: GimvSpec, ell: EllStripe, v_local, n_local: int,
+                          send_rows, axis_name, interpret: bool):
+    """Pallas analog of block_gimv_partials_payload: scan destination blocks,
+    ELL kernel per block, immediate gather at the static packed send order.
+    Returns (payload, logical) — payload [b, p(, Q)] per worker (emulation:
+    [b_w, b, p(, Q)])."""
+    emulation = axis_name is None
+    if emulation:
+        b_w = ell.cols.shape[0]
+        off = (jnp.arange(b_w, dtype=jnp.int32) * n_local)[:, None, None]
+        v_flat = v_local.reshape((b_w * n_local,) + v_local.shape[2:])
+        cols_s = jnp.swapaxes(ell.cols, 0, 1)    # [b, b_w, n_local, D]
+        w_s = None if ell.w is None else jnp.swapaxes(ell.w, 0, 1)
+        srows_s = jnp.swapaxes(send_rows, 0, 1)  # [b, b_w, p]
+
+        def body(_, blk):
+            cols, w, srows = blk                 # [b_w, n_local, D] / [b_w, p]
+            cols = jnp.where(cols >= 0, cols + off, -1)
+            cols2 = cols.reshape(b_w * n_local, -1)
+            w2 = None if w is None else w.reshape(cols2.shape)
+            r = ell_gimv_call(spec, cols2, w2, v_flat, interpret)
+            partial_ = r.reshape((b_w, n_local) + r.shape[1:])
+            pay = packed_rt.gather_payload(spec, partial_, srows)
+            return None, (pay, sparse_exchange.count_non_identity(spec, pay))
+
+        _, (val, logical) = lax.scan(body, None, (cols_s, w_s, srows_s))
+        return jnp.swapaxes(val, 0, 1), jnp.sum(logical)
+
+    def body(_, blk):
+        cols, w, srows = blk                     # [n_local, D] / [p]
+        r = ell_gimv_call(spec, cols, w, v_local, interpret)
+        pay = packed_rt.gather_payload(spec, r, srows)
+        return None, (pay, sparse_exchange.count_non_identity(spec, pay))
+
+    _, (val, logical) = lax.scan(body, None, (ell.cols, ell.w, send_rows))
+    return val, jnp.sum(logical)
 
 
 def _dense_region_gimv(spec: GimvSpec, dense_matrix, v_d, n_local: int,
@@ -573,6 +646,114 @@ def _streamed_planned_compact(spec: GimvSpec, streamed: PlannedStripe, v_local,
     return idx, val, over, logical
 
 
+def _streamed_planned_payload(spec: GimvSpec, streamed: PlannedStripe, v_local,
+                              n_local: int, send_rows, axis_name,
+                              interpret: bool):
+    """Bucket-streamed planned vertical compute feeding the packed exchange:
+    the scan of ``_streamed_planned_compact`` with each destination block's
+    [n_local(, Q)] partial gathered at its static send order instead of
+    value-compacted.  Dense-tactic blocks run after the scan and overwrite
+    their (tactic-exclusive) payload rows — the gather order for a block is
+    the same whichever tactic produced its partial.  Returns
+    (payload, logical)."""
+    ident = jnp.asarray(spec.identity, spec.dtype)
+    emulation = axis_name is None
+    b = streamed.rows_out // n_local
+
+    def bucket_xs():
+        return tuple((bk.rows, bk.cols, bk.w) for bk in streamed.buckets)
+
+    if emulation:
+        b_w = v_local.shape[0]
+        tail = v_local.shape[2:]
+        v_flat = v_local.reshape((b_w * n_local,) + tail)
+        coff = (jnp.arange(b_w, dtype=jnp.int32) * n_local)[:, None, None]
+        roff = (jnp.arange(b_w, dtype=jnp.int32) * n_local)[:, None]
+        drop = b_w * n_local
+        srows_s = jnp.swapaxes(send_rows, 0, 1)  # [b, b_w, p]
+
+        def body(_, xs_):
+            bks, srows = xs_
+            out = jnp.full((drop + 1,) + tail, ident, spec.dtype)
+            for rows, cols, w in bks:            # [b_w, R(, D)] per bucket
+                cols2 = jnp.where(cols >= 0, cols + coff, -1)
+                cols2 = cols2.reshape((-1,) + cols2.shape[-1:])
+                w2 = None if w is None else w.reshape(cols2.shape)
+                rows2 = jnp.where(rows >= 0, rows + roff, -1).reshape(-1)
+                r = ell_gimv_call(spec, cols2, w2, v_flat, interpret)
+                out = _scatter_set(out, rows2, r, drop)
+            partial_ = out[:drop].reshape((b_w, n_local) + tail)
+            pay = packed_rt.gather_payload(spec, partial_, srows)
+            return None, (pay, sparse_exchange.count_non_identity(spec, pay))
+
+        _, (val, logical) = lax.scan(body, None, (bucket_xs(), srows_s), length=b)
+        val = jnp.swapaxes(val, 0, 1)            # [b, b_w, p(, Q)] -> [b_w, b, ...]
+        logical = jnp.sum(logical)
+        if streamed.dense is not None:
+            for wk in range(b_w):
+                for t in range(streamed.dense.index.shape[-1]):
+                    r_d = _planned_dense_call(
+                        spec, streamed.dense.matrix[wk, t], v_local[wk], interpret)
+                    i = streamed.dense.index[wk, t]
+                    srows_d = send_rows[wk][jnp.where(i >= 0, i, 0)]
+                    pay_d = packed_rt.gather_payload(spec, r_d, srows_d)
+                    safe_i = jnp.where(i >= 0, i, b)   # -1 stacking pads drop
+                    # replace the scan's identity payload for this block, then
+                    # correct the count (scan contributed 0 for it).
+                    val = val.at[wk, safe_i].set(pay_d, mode="drop")
+                    logical = logical + jnp.where(
+                        i >= 0, sparse_exchange.count_non_identity(spec, pay_d), 0.0)
+        return val, logical
+
+    def body(_, xs_):
+        bks, srows = xs_
+        out = jnp.full((n_local + 1,) + v_local.shape[1:], ident, spec.dtype)
+        for rows, cols, w in bks:                # [R(, D)] per bucket
+            r = ell_gimv_call(spec, cols, w, v_local, interpret)
+            out = _scatter_set(out, rows, r, n_local)
+        pay = packed_rt.gather_payload(spec, out[:n_local], srows)
+        return None, (pay, sparse_exchange.count_non_identity(spec, pay))
+
+    _, (val, logical) = lax.scan(body, None, (bucket_xs(), send_rows), length=b)
+    logical = jnp.sum(logical)
+    if streamed.dense is not None:
+        for t in range(streamed.dense.index.shape[-1]):
+            r_d = _planned_dense_call(spec, streamed.dense.matrix[t], v_local, interpret)
+            i = streamed.dense.index[t]
+            srows_d = send_rows[jnp.where(i >= 0, i, 0)]
+            pay_d = packed_rt.gather_payload(spec, r_d, srows_d)
+            safe_i = jnp.where(i >= 0, i, b)
+            val = val.at[safe_i].set(pay_d, mode="drop")
+            logical = logical + jnp.where(
+                i >= 0, sparse_exchange.count_non_identity(spec, pay_d), 0.0)
+    return val, logical
+
+
+def _packed_payload(spec: GimvSpec, v_local, n_local: int, send_rows, *,
+                    stripe=None, ell=None, planned=None, streamed=None,
+                    use_planned: bool, use_pallas: bool, axis_name,
+                    interpret: bool):
+    """Vertical partials through whichever backend, gathered at the packed
+    send order.  Mirrors the compact-path backend dispatch one-for-one so the
+    packed exchange composes with every compute mode.  Returns
+    (payload [b, p_dev(, Q)] per worker, logical_elems [unreduced])."""
+    if use_planned and streamed is not None:
+        return _streamed_planned_payload(
+            spec, streamed, v_local, n_local, send_rows, axis_name, interpret)
+    if use_planned:
+        partials = _planned_vertical_partials(
+            spec, planned, v_local, n_local, axis_name, interpret)
+        payload = packed_rt.gather_payload(spec, partials, send_rows)
+        return payload, sparse_exchange.count_non_identity(spec, payload)
+    if use_pallas:
+        return _ell_partials_payload(
+            spec, ell, v_local, n_local, send_rows, axis_name, interpret)
+    pay = partial(block_gimv_partials_payload, spec, n_local=n_local)
+    if axis_name is not None:
+        return pay(stripe, v_local, send_rows)
+    return jax.vmap(lambda s, v, sr: pay(s, v, sr))(stripe, v_local, send_rows)
+
+
 def hierarchical_exchange(spec: GimvSpec, idx, val, n_local: int, axis_name, *,
                           scatter: str = "segment", interpret: bool = False):
     """Two-hop topology-aware exchange (beyond-paper, DESIGN §6 / §Perf).
@@ -708,6 +889,10 @@ def vertical_step(
     ell: EllStripe | None = None,
     planned: PlannedStripe | None = None,
     streamed: PlannedStripe | None = None,
+    xchg: dict | None = None,
+    xplan=None,
+    delta_eps: float | None = None,
+    delta_state=None,
     backend: str = "xla",
     scatter: str = "segment",
     interpret: bool = False,
@@ -717,7 +902,12 @@ def vertical_step(
     exchange='dense': all_to_all the full [b, n_local] partials (what dense
     collectives would do).  exchange='sparse': compact to (idx, val) pairs of
     static ``capacity`` first — the paper's "only non-empty v^(i,j) entries
-    hit the distributed storage".  exchange='hier': sparse hop within the
+    hit the distributed storage".  exchange='packed': ship structure-free
+    payloads in the prepare()-time static per-pair row order (``xchg`` holds
+    the send/recv index arrays, ``xplan`` the repro.exchange.ExchangePlan
+    byte model); with ``delta_state`` (the previously-shipped payload) rows
+    that moved <= ``delta_eps`` are suppressed and the step returns a fourth
+    element, the new state.  exchange='hier': sparse hop within the
     pod + combined dense hop across pods (needs a tuple axis_name whose
     first element is the pod axis; SPMD only).  A trailing query axis on
     v_local batches all exchanges (hier ships [cap, Q] values on one shared
@@ -812,6 +1002,53 @@ def vertical_step(
                 jnp.float32),
             "logical_elems": logical,
         }
+    elif exchange == "packed":
+        assert xchg is not None and xplan is not None, \
+            "packed exchange needs the prepare()-built index arrays + plan"
+        send_rows = xchg["send_rows"]
+        payload, logical = _packed_payload(
+            spec, v_local, n_local, send_rows,
+            stripe=stripe, ell=ell, planned=planned, streamed=streamed,
+            use_planned=use_planned, use_pallas=use_pallas,
+            axis_name=axis_name, interpret=interpret)
+        if axis_name is not None:
+            logical = lax.psum(jnp.sum(logical), axis_name)
+        else:
+            logical = jnp.sum(logical)
+        if payload_dtype is not None:
+            payload = payload.astype(payload_dtype)  # wire format BEFORE delta
+        itemsize = payload.dtype.itemsize
+        if delta_state is not None:
+            pair_mask = packed_rt.pair_slot_mask(send_rows, n_local, axis_name)
+            payload, sent, suppressed = packed_rt.delta_update(
+                spec, payload, delta_state, delta_eps or 0.0, pair_mask, axis_name)
+            delta_state_new = payload
+            payload_bytes = sent * float((nq or 1) * itemsize) \
+                + float(xplan.bitmap_bytes)
+        else:
+            payload_bytes = jnp.asarray(
+                xplan.payload_bytes_per_iter(nq, itemsize), jnp.float32)
+        val_x = _all_to_all(payload, axis_name)
+        r = packed_rt.scatter_payload(
+            spec, val_x.astype(spec.dtype), n_local,
+            recv_rows=xchg.get("recv_rows"), recv_words=xchg.get("recv_words"),
+            p_dev=xplan.p_dev, width=xplan.width_dev,
+            method=scatter, interpret=interpret)
+        b = send_rows.shape[-2]
+        stats = {  # GLOBAL elements; payload values only, ids shipped once
+            "gathered_elems": jnp.asarray(0.0, jnp.float32),
+            "exchanged_elems": jnp.asarray(
+                b * (b - 1) * xplan.p_dev * (nq or 1), jnp.float32),
+            "gathered_bytes": jnp.asarray(0.0, jnp.float32),
+            "exchanged_bytes": jnp.asarray(payload_bytes, jnp.float32),
+            "exchange_payload_bytes": jnp.asarray(payload_bytes, jnp.float32),
+            "exchange_id_bytes": jnp.asarray(float(xplan.id_bytes), jnp.float32),
+            "logical_elems": logical,
+            "overflow": jnp.asarray(0.0, jnp.float32),
+        }
+        if delta_state is not None:
+            stats["delta_sent_rows"] = sent
+            stats["delta_suppressed_rows"] = suppressed
     else:
         assert capacity is not None, "sparse exchange needs a static capacity"
         if use_planned:
@@ -838,6 +1075,8 @@ def vertical_step(
             spec, idx_x.astype(jnp.int32), val_x.astype(spec.dtype), n_local,
             method=scatter, interpret=interpret)
         b = idx.shape[-2]
+        id_b, pay_b = sparse_exchange.exchange_wire_split(
+            b, capacity, nq, val.dtype.itemsize)
         stats = {  # GLOBAL elements; idx word + (1 or Q) value words per slot
             "gathered_elems": jnp.asarray(0.0, jnp.float32),
             "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * (1 + (nq or 1)), jnp.float32),
@@ -845,6 +1084,9 @@ def vertical_step(
             "exchanged_bytes": jnp.asarray(
                 sparse_exchange.exchange_wire_bytes(
                     b, capacity, nq, val.dtype.itemsize), jnp.float32),
+            # the padded stream re-ships its int32 ids EVERY iteration
+            "exchange_id_bytes": jnp.asarray(id_b, jnp.float32),
+            "exchange_payload_bytes": jnp.asarray(pay_b, jnp.float32),
             "logical_elems": logical,
             "overflow": overflow,
         }
@@ -853,6 +1095,8 @@ def vertical_step(
         v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
     else:
         v_new = jax.vmap(partial(_apply_assign, spec))(v_local, r, ctx_local, real_mask)
+    if delta_state is not None:
+        return v_new, r, stats, delta_state_new
     return v_new, r, stats
 
 
@@ -868,10 +1112,13 @@ def hybrid_step(
     n_local: int,
     axis_name,
     capacity: int,
+    exchange: str = "sparse",
     payload_dtype=None,
     sparse_ell: EllStripe | None = None,
     planned_sparse: PlannedStripe | None = None,
     streamed_sparse: PlannedStripe | None = None,
+    xchg: dict | None = None,
+    xplan=None,
     dense_matrix=None,
     backend: str = "xla",
     scatter: str = "segment",
@@ -915,54 +1162,89 @@ def hybrid_step(
             r_dense = jax.vmap(lambda s, va: gathered_gimv(spec, s, va, n_local))(
                 dense_stripe, v_d_all)
 
-    # -- sparse region: vertical partials + compact exchange.
-    if use_planned and streamed_sparse is not None:
-        idx, val, overflow, logical = _streamed_planned_compact(
-            spec, streamed_sparse, v_local, n_local, capacity, axis_name, interpret)
-    elif use_planned:
-        partials = _planned_vertical_partials(
-            spec, planned_sparse, v_local, n_local, axis_name, interpret)
-        idx, val, overflow, logical = sparse_exchange.compact_partials(
-            spec, partials, capacity, None, batched=nq is not None)
-    elif use_pallas:
-        idx, val, overflow, logical = _ell_partials_compact(
-            spec, sparse_ell, v_local, n_local, capacity, axis_name, interpret)
+    # -- sparse region: vertical partials + compact or packed exchange.
+    if exchange == "packed":
+        assert xchg is not None and xplan is not None, \
+            "packed exchange needs the prepare()-built index arrays + plan"
+        send_rows = xchg["send_rows"]
+        payload, logical = _packed_payload(
+            spec, v_local, n_local, send_rows,
+            stripe=sparse_stripe, ell=sparse_ell, planned=planned_sparse,
+            streamed=streamed_sparse, use_planned=use_planned,
+            use_pallas=use_pallas, axis_name=axis_name, interpret=interpret)
+        if axis_name is not None:
+            logical = lax.psum(jnp.sum(logical), axis_name)
+        else:
+            logical = jnp.sum(logical)
+        if payload_dtype is not None:
+            payload = payload.astype(payload_dtype)
+        wire_itemsize = payload.dtype.itemsize
+        overflow = jnp.asarray(0.0, jnp.float32)
+        val_x = _all_to_all(payload, axis_name)
+        r_sparse = packed_rt.scatter_payload(
+            spec, val_x.astype(spec.dtype), n_local,
+            recv_rows=xchg.get("recv_rows"), recv_words=xchg.get("recv_words"),
+            p_dev=xplan.p_dev, width=xplan.width_dev,
+            method=scatter, interpret=interpret)
+        b = send_rows.shape[-2]
+        exchanged_elems = b * (b - 1) * xplan.p_dev * (nq or 1)
+        id_b = float(xplan.id_bytes)
+        pay_b = xplan.payload_bytes_per_iter(nq, wire_itemsize)
+        exchanged_bytes = pay_b
     else:
-        compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
-        fn_c = compact if axis_name is not None else jax.vmap(lambda s, v: compact(s, v))
-        idx, val, overflow, logical = fn_c(sparse_stripe, v_local)
-    if payload_dtype is not None:
-        val = val.astype(payload_dtype)  # wire format (§Perf); accumulate in spec dtype
-    if axis_name is not None:
-        overflow = lax.psum(overflow, axis_name)
-        logical = lax.psum(logical, axis_name)
-    else:
-        overflow, logical = jnp.sum(overflow), jnp.sum(logical)
-    idx_x = _all_to_all(idx, axis_name)
-    val_x = _all_to_all(val, axis_name)
+        if use_planned and streamed_sparse is not None:
+            idx, val, overflow, logical = _streamed_planned_compact(
+                spec, streamed_sparse, v_local, n_local, capacity, axis_name, interpret)
+        elif use_planned:
+            partials = _planned_vertical_partials(
+                spec, planned_sparse, v_local, n_local, axis_name, interpret)
+            idx, val, overflow, logical = sparse_exchange.compact_partials(
+                spec, partials, capacity, None, batched=nq is not None)
+        elif use_pallas:
+            idx, val, overflow, logical = _ell_partials_compact(
+                spec, sparse_ell, v_local, n_local, capacity, axis_name, interpret)
+        else:
+            compact = partial(block_gimv_partials_compact, spec, n_local=n_local, capacity=capacity)
+            fn_c = compact if axis_name is not None else jax.vmap(lambda s, v: compact(s, v))
+            idx, val, overflow, logical = fn_c(sparse_stripe, v_local)
+        if payload_dtype is not None:
+            val = val.astype(payload_dtype)  # wire format (§Perf); accumulate in spec dtype
+        if axis_name is not None:
+            overflow = lax.psum(overflow, axis_name)
+            logical = lax.psum(logical, axis_name)
+        else:
+            overflow, logical = jnp.sum(overflow), jnp.sum(logical)
+        idx_x = _all_to_all(idx, axis_name)
+        val_x = _all_to_all(val, axis_name)
 
-    # owner combine: plan-selected receive-side scatter, then elementwise
-    # combineAll with the dense region and assign.
-    r_sparse = sparse_exchange.scatter_partials(
-        spec, idx_x.astype(jnp.int32), val_x.astype(spec.dtype), n_local,
-        method=scatter, interpret=interpret)
+        # owner combine: plan-selected receive-side scatter.
+        r_sparse = sparse_exchange.scatter_partials(
+            spec, idx_x.astype(jnp.int32), val_x.astype(spec.dtype), n_local,
+            method=scatter, interpret=interpret)
+        b = idx.shape[-2]
+        exchanged_elems = b * (b - 1) * capacity * (1 + (nq or 1))
+        exchanged_bytes = sparse_exchange.exchange_wire_bytes(
+            b, capacity, nq, val.dtype.itemsize)
+        id_b, pay_b = sparse_exchange.exchange_wire_split(
+            b, capacity, nq, val.dtype.itemsize)
+
+    # elementwise combineAll with the dense region, then assign.
     r = combine_elementwise(spec, r_sparse, r_dense)
     if axis_name is not None:
         v_new = _apply_assign(spec, v_local, r, ctx_local, real_mask)
     else:
         v_new = jax.vmap(partial(_apply_assign, spec))(v_local, r, ctx_local, real_mask)
 
-    b = idx.shape[-2]
     d_cap = dense_region.d_cap
     stats = {  # GLOBAL elements per iteration
         "gathered_elems": jnp.asarray(b * (b - 1) * d_cap * (nq or 1), jnp.float32),
-        "exchanged_elems": jnp.asarray(b * (b - 1) * capacity * (1 + (nq or 1)), jnp.float32),
+        "exchanged_elems": jnp.asarray(exchanged_elems, jnp.float32),
         "gathered_bytes": jnp.asarray(
             b * (b - 1) * d_cap * (nq or 1) * jnp.dtype(spec.dtype).itemsize,
             jnp.float32),
-        "exchanged_bytes": jnp.asarray(
-            sparse_exchange.exchange_wire_bytes(
-                b, capacity, nq, val.dtype.itemsize), jnp.float32),
+        "exchanged_bytes": jnp.asarray(exchanged_bytes, jnp.float32),
+        "exchange_id_bytes": jnp.asarray(id_b, jnp.float32),
+        "exchange_payload_bytes": jnp.asarray(pay_b, jnp.float32),
         "logical_elems": logical,
         "overflow": overflow,
     }

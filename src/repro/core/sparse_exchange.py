@@ -37,7 +37,7 @@ from jax import lax
 from repro.core.gimv import GimvSpec, segment_combine
 
 __all__ = ["compact_partials", "compact_chunk", "scatter_partials",
-           "count_non_identity", "exchange_wire_bytes"]
+           "count_non_identity", "exchange_wire_bytes", "exchange_wire_split"]
 
 COMPACT_METHODS = ("scan", "topk")
 
@@ -50,6 +50,17 @@ def exchange_wire_bytes(b: int, capacity: int, nq: int | None,
     payload values (payload_dtype='bfloat16' halves the value leg, which is
     exactly what this surfaces in stats['exchanged_bytes'])."""
     return float(b * (b - 1) * capacity * (4 + (nq or 1) * payload_itemsize))
+
+
+def exchange_wire_split(b: int, capacity: int, nq: int | None,
+                        payload_itemsize: int) -> tuple[float, float]:
+    """``exchange_wire_bytes`` split into its (id_bytes, payload_bytes) legs.
+    The padded stream re-ships its int32 indices every iteration; the packed
+    exchange ships ids once, so this split is what makes the two wire models
+    comparable in stats()/obs."""
+    id_bytes = float(b * (b - 1) * capacity * 4)
+    payload_bytes = float(b * (b - 1) * capacity * (nq or 1) * payload_itemsize)
+    return id_bytes, payload_bytes
 
 
 def _reduce_sum(x, axis_name):

@@ -1,0 +1,136 @@
+"""Device-side primitives of the packed exchange (send gather, receive
+scatter, delta suppression).
+
+The sender gathers its partials at the static per-pair row order
+(``send_rows``) — no per-iteration compaction, no overflow (the index sets
+ARE the structural support).  The receiver scatters the arriving payload at
+the mirrored ``recv_rows`` (or decodes the bit-packed ``recv_words`` inside
+the Pallas kernel).  Delta iteration keeps the previously-sent payload as
+carried state and re-sends only rows whose value moved beyond ε; for ε=0 the
+"stale" rows are bitwise the current ones, so the receive is exact.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.gimv import GimvSpec
+from repro.core.sparse_exchange import count_non_identity, scatter_partials
+
+__all__ = ["gather_payload", "scatter_payload", "delta_update", "pair_slot_mask"]
+
+
+def _reduce_sum(x, axis_name):
+    return lax.psum(x, axis_name) if axis_name is not None else x
+
+
+def gather_payload(spec: GimvSpec, partials: jnp.ndarray,
+                   send_rows: jnp.ndarray) -> jnp.ndarray:
+    """Gather partials [..., b, n_local(, Q)] at send_rows [..., b, p] ->
+    payload [..., b, p(, Q)].  Sentinel slots (row == n_local) yield the
+    combineAll identity, so the receive's drop slot sees exact no-ops."""
+    n_local = partials.shape[-2] if partials.ndim == send_rows.ndim + 1 \
+        else partials.shape[-1]
+    ident = jnp.asarray(spec.identity, partials.dtype)
+    pad = send_rows >= n_local
+    safe = jnp.where(pad, 0, send_rows)
+    if partials.ndim == send_rows.ndim + 1:  # trailing query axis
+        val = jnp.take_along_axis(partials, safe[..., None], axis=-2)
+        return jnp.where(pad[..., None], ident, val)
+    val = jnp.take_along_axis(partials, safe, axis=-1)
+    return jnp.where(pad, ident, val)
+
+
+def payload_logical(spec: GimvSpec, payload: jnp.ndarray, axis_name) -> jnp.ndarray:
+    """Value-level non-identity count of a payload — identical to the sparse
+    path's ``logical_elems`` because the structural row sets cover exactly the
+    slots a value-compacted exchange could ship."""
+    return _reduce_sum(count_non_identity(spec, payload), axis_name)
+
+
+def scatter_payload(
+    spec: GimvSpec,
+    val: jnp.ndarray,
+    n_local: int,
+    *,
+    recv_rows: jnp.ndarray | None = None,
+    recv_words: jnp.ndarray | None = None,
+    p_dev: int = 0,
+    width: int = 0,
+    method: str = "segment",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """combineAll of received payloads val [..., b, p(, Q)] -> r [..., n_local(, Q)].
+
+    method='segment' scatters via the int32 ``recv_rows`` (sentinel rows land
+    in the per-worker drop slot, exactly like ``scatter_partials``).
+    method='kernel' with ``recv_words`` decodes the uniform-width bit-packed
+    ids inside the Pallas indexed-payload kernel — the ids never exist as
+    int32 on device.
+    """
+    if method == "kernel" and recv_words is not None:
+        from repro.kernels.block_gimv import semiring_of
+        from repro.kernels.scatter_combine import (
+            packed_scatter_combine_gimv, packed_scatter_combine_gimv_multi)
+
+        batched = (val.ndim - recv_words.ndim) == 2
+        q = val.shape[-1] if batched else None
+        lead = val.shape[:-3] if batched else val.shape[:-2]
+        b = val.shape[-3] if batched else val.shape[-2]
+        n_sets = math.prod(lead) if lead else 1
+        seg_w = n_local + 1
+        set_slots = b * p_dev  # slots sharing one worker's output segment
+        flat_val = val.reshape((n_sets * set_slots, q) if batched else (-1,))
+        semiring = semiring_of(spec.combine2, spec.combine_all)
+        fn = packed_scatter_combine_gimv_multi if batched else packed_scatter_combine_gimv
+        out = fn(recv_words.reshape(-1), flat_val, n_sets * seg_w,
+                 set_slots=set_slots, n_local=n_local, width=width,
+                 semiring=semiring, interpret=interpret)
+        out = out.reshape(lead + ((seg_w, q) if batched else (seg_w,)))
+        return out[..., :n_local, :] if batched else out[..., :n_local]
+    return scatter_partials(spec, recv_rows, val, n_local,
+                            method=method, interpret=interpret)
+
+
+def pair_slot_mask(send_rows: jnp.ndarray, n_local: int, axis_name) -> jnp.ndarray:
+    """Bool [..., b, p]: slots that count toward wire accounting — valid
+    (non-sentinel) rows of OFF-DIAGONAL pairs (the diagonal partial never
+    crosses the interconnect; both the padded formula and the packed byte
+    model are b(b-1) quantities)."""
+    valid = send_rows < n_local
+    b = send_rows.shape[-2]
+    dst = jnp.arange(b, dtype=jnp.int32)
+    if axis_name is not None:
+        src = lax.axis_index(axis_name)
+        off = dst != src                                   # [b]
+    else:
+        b_w = send_rows.shape[0]
+        off = jnp.arange(b_w, dtype=jnp.int32)[:, None] != dst[None, :]  # [b_w, b]
+    return valid & off[..., None]
+
+
+def delta_update(spec: GimvSpec, payload: jnp.ndarray, prev: jnp.ndarray,
+                 eps: float, pair_mask: jnp.ndarray, axis_name):
+    """Suppress rows whose payload moved <= eps since the last send.
+
+    Returns (shipped, sent_rows, suppressed_rows).  ``shipped`` carries the
+    fresh payload on rows that moved and the previously-sent value elsewhere
+    (the receiver-side cache, folded into the stream so the scatter stays
+    oblivious).  eps=0 compares with ``!=`` — bitwise exact, and immune to
+    the inf - inf = NaN trap of an |diff| test.  A trailing query axis
+    re-sends a row when ANY query moved (one shared send mask per row keeps
+    the id-free wire order intact).
+    """
+    batched = payload.ndim == pair_mask.ndim + 1
+    if eps == 0.0:
+        changed = payload != prev
+    else:
+        changed = jnp.abs(payload - prev) > eps
+    if batched:
+        changed = jnp.any(changed, axis=-1)
+    shipped = jnp.where(changed[..., None] if batched else changed, payload, prev)
+    sent = _reduce_sum(jnp.sum((changed & pair_mask).astype(jnp.float32)), axis_name)
+    total = _reduce_sum(jnp.sum(pair_mask.astype(jnp.float32)), axis_name)
+    return shipped, sent, total - sent

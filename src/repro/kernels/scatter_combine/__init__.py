@@ -1,4 +1,11 @@
-from repro.kernels.scatter_combine.ops import scatter_combine_gimv, scatter_combine_gimv_multi
+from repro.kernels.scatter_combine.ops import (
+    packed_scatter_combine_gimv,
+    packed_scatter_combine_gimv_multi,
+    scatter_combine_gimv,
+    scatter_combine_gimv_multi,
+)
 from repro.kernels.scatter_combine.ref import scatter_combine_ref
 
-__all__ = ["scatter_combine_gimv", "scatter_combine_gimv_multi", "scatter_combine_ref"]
+__all__ = ["scatter_combine_gimv", "scatter_combine_gimv_multi",
+           "packed_scatter_combine_gimv", "packed_scatter_combine_gimv_multi",
+           "scatter_combine_ref"]

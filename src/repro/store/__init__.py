@@ -15,6 +15,7 @@ from repro.store.ingest import ingest_edges
 from repro.store.manifest import (
     Manifest,
     ManifestCorruptError,
+    ManifestVersionError,
     ShardCorruptError,
     load_partitioned,
     open_store,
@@ -33,6 +34,7 @@ __all__ = [
     "ingest_edges",
     "Manifest",
     "ManifestCorruptError",
+    "ManifestVersionError",
     "ShardCorruptError",
     "open_store",
     "load_partitioned",

@@ -10,6 +10,11 @@ A store directory holds one pre-partitioning of one graph:
     <dir>/blocks/deg_hist.npy            [b, b, H] int64 pow2 degree histogram
     <dir>/vertical/w{j}.seg.npy ...      per-worker stripe shards
     <dir>/horizontal/w{i}.seg.npy ...
+    <dir>/vertical/w{j}.pidx.words.npy   packed exchange index shards (v2):
+    <dir>/vertical/w{j}.pidx.meta.npy    per-(dst block, src worker j) wire-
+                                         codec id sets, flat uint32 words +
+                                         [b, 3] int64 (word offset, count,
+                                         bit width) — repro.exchange.codec
 
 Shards are plain ``.npy`` files so ``np.load(mmap_mode='r')`` gives zero-copy
 memmap access for the disk-residency executor.  Each stripe shard holds the
@@ -31,8 +36,10 @@ __all__ = [
     "FORMAT_NAME",
     "FORMAT_VERSION",
     "STRIPE_ARRAYS",
+    "PIDX_ARRAYS",
     "CHECKSUM_ALGORITHM",
     "stripe_path",
+    "pidx_path",
     "array_path",
     "save_array",
     "open_array",
@@ -45,7 +52,11 @@ __all__ = [
 ]
 
 FORMAT_NAME = "pmv-block-store"
-FORMAT_VERSION = 1
+# v2 adds the packed-exchange index shards (vertical/w{j}.pidx.*) that the
+# packed transport ships once instead of re-sending (idx, val) pairs each
+# iteration.  v1 stores still load for every non-packed path; requesting the
+# packed exchange against one raises manifest.ManifestVersionError.
+FORMAT_VERSION = 2
 
 # ---------------------------------------------------------------------------
 # Integrity checksums (ISSUE 7).  Digests cover the RAW ARRAY BYTES (not the
@@ -109,6 +120,18 @@ def stripe_path(root: str, striping: str, worker: int, array: str) -> str:
     assert striping in ("vertical", "horizontal"), striping
     assert array in STRIPE_ARRAYS, array
     return os.path.join(root, striping, f"w{worker}.{array}.npy")
+
+
+PIDX_ARRAYS = ("words", "meta")
+
+
+def pidx_path(root: str, worker: int, array: str) -> str:
+    """Packed-exchange index shard of one VERTICAL worker (v2 stores): the
+    wire-codec id sets of every (dst block i, src worker j) pair, as flat
+    uint32 delta-field words plus a [b, 3] int64 (word offset, id count, bit
+    width) directory — exactly what exchange.codec.unpack_fields decodes."""
+    assert array in PIDX_ARRAYS, array
+    return os.path.join(root, "vertical", f"w{worker}.pidx.{array}.npy")
 
 
 def save_array(path: str, arr: np.ndarray) -> None:

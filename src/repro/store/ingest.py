@@ -15,8 +15,11 @@ sequential partition-granular I/O):
   pass B   per bin: (dedup when symmetrizing — duplicate pairs share their
            src block, so per-bin dedup IS the global dedup), accumulate
            degrees, per-block nnz / planner measurements / structural
-           partial sizes, and re-spill rows to destination-block bins for
-           the horizontal striping.
+           partial sizes, write the packed-exchange index shards (the
+           per-(i, j) sorted unique destination rows, delta/bit-width
+           packed — repro.exchange.codec; the unique site is already here,
+           so the v2 shards cost no extra pass), and re-spill rows to
+           destination-block bins for the horizontal striping.
   pass C/D per bin: pack the worker's stripe arrays against the GLOBAL
            E_cap (format.pack_worker_stripe — bitwise what build_stripes
            lays out) and write the memmap-able shards.
@@ -34,6 +37,7 @@ import numpy as np
 
 from repro.core import planner
 from repro.core.partition import Partition
+from repro.exchange import codec as xcodec
 from repro.graph.generators import dedup_edges
 from repro.graph.io import DEFAULT_CHUNK_EDGES, iter_edges
 from repro.store import format as fmt
@@ -144,6 +148,33 @@ def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
     deg_hist = np.zeros((b, b, planner.DEG_HIST_BINS), dtype=np.int64)
     m_total = 0
     peak_bin = 0
+    n_local = part.n_local
+    pidx_sums: list[dict] = []
+
+    def _write_pidx(w: int, packed_list: list) -> None:
+        """One vertical worker's packed-exchange index shard: flat uint32
+        delta-field words + a [b, 3] (word offset, count, width) directory,
+        one row per destination block (empty pairs keep a zero row)."""
+        meta = np.zeros((b, 3), dtype=np.int64)
+        chunks = []
+        off = 0
+        for i, pk in enumerate(packed_list):
+            if pk is not None:
+                meta[i] = (off, pk.count, pk.width)
+                if pk.words.size:
+                    chunks.append(pk.words)
+                    off += int(pk.words.size)
+            else:
+                meta[i, 0] = off
+        words = (np.concatenate(chunks).astype(np.uint32)
+                 if chunks else np.zeros(0, np.uint32))
+        fmt.save_array(fmt.pidx_path(out_dir, w, "words"), words)
+        fmt.save_array(fmt.pidx_path(out_dir, w, "meta"), meta)
+        pidx_sums.append({
+            "words": fmt.checksum_array(words, fmt.CHECKSUM_ALGORITHM),
+            "meta": fmt.checksum_array(meta, fmt.CHECKSUM_ALGORITHM),
+        })
+
     for j in range(b):
         e = vbins.read(j)
         if symmetrize:
@@ -152,6 +183,7 @@ def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
         peak_bin = max(peak_bin, len(e))
         m_total += len(e)
         if len(e) == 0:
+            _write_pidx(j, [None] * b)
             continue
         src, dst = e[:, 0], e[:, 1]
         out_deg += np.bincount(src, minlength=n)
@@ -165,16 +197,20 @@ def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
         order = np.argsort(db, kind="stable")
         db_s, dl_s = db[order], dl[order]
         bounds = np.searchsorted(db_s, np.arange(b + 1))
+        packed_j: list = [None] * b
         for i in range(b):
             lo, hi = bounds[i], bounds[i + 1]
             if hi == lo:
                 continue
-            deg = np.bincount(dl_s[lo:hi])
-            deg = deg[deg > 0]
+            counts = np.bincount(dl_s[lo:hi])
+            ids = np.flatnonzero(counts)          # sorted unique dest rows
+            deg = counts[ids]
+            packed_j[i] = xcodec.pack_ids(ids.astype(np.int64), n_local)
             partial_nnz[i, j] = int(deg.size)
             rows[i, j] = int(deg.size)
             d_max[i, j] = int(deg.max())
             deg_hist[i, j] = planner.deg_hist_of(deg)
+        _write_pidx(j, packed_j)
         hbins.append(db, e)
 
     e_cap = max(int(counts_sb_db.max()), 1)
@@ -231,7 +267,7 @@ def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
         root=out_dir, n=n, m=m_total, b=b, psi=psi, symmetrized=symmetrize,
         e_cap=e_cap, partial_cap=max(int(partial_nnz.max()), 1),
         checksums={"algorithm": algo, "arrays": array_sums,
-                   "stripes": stripe_sums},
+                   "stripes": stripe_sums, "pidx": pidx_sums},
         ingest={
             "chunk_edges": int(chunk_edges),
             "peak_chunk_rows": int(peak_chunk),

@@ -38,6 +38,7 @@ from repro.store import format as fmt
 __all__ = [
     "Manifest",
     "ManifestCorruptError",
+    "ManifestVersionError",
     "ShardCorruptError",
     "open_store",
     "load_partitioned",
@@ -62,6 +63,23 @@ class ManifestCorruptError(RuntimeError):
                  if pos is not None else "")
         super().__init__(f"{path}: corrupt manifest{where}: {msg} — "
                          "re-ingest the store (repro.store.ingest_edges)")
+
+
+class ManifestVersionError(RuntimeError):
+    """The store's format version lacks a feature this run requires (e.g. a
+    v1 store has no packed-exchange index shards).  Raised at prepare() time
+    with the exact versions and the fix, instead of a shape/missing-file
+    error deep inside the first fetch."""
+
+    def __init__(self, path: str, *, found: int, needed: int, feature: str):
+        self.path = path
+        self.found = found
+        self.needed = needed
+        self.feature = feature
+        super().__init__(
+            f"{path}: store format version {found} predates {feature} "
+            f"(needs version >= {needed}) — re-ingest the store with "
+            "repro.store.ingest_edges, or run with exchange='sparse'")
 
 
 class ShardCorruptError(RuntimeError):
@@ -252,6 +270,57 @@ class Manifest:
             raise ShardCorruptError(fmt.array_path(self.root, name),
                                     array=name, expected=expected,
                                     actual=actual)
+
+    # -- packed exchange (format v2) -----------------------------------
+    @property
+    def has_packed_index(self) -> bool:
+        return self.version >= 2
+
+    def require_packed_index(self) -> None:
+        """Raise :class:`ManifestVersionError` when this store predates the
+        packed-exchange index shards (format v1)."""
+        if not self.has_packed_index:
+            raise ManifestVersionError(
+                os.path.join(self.root, MANIFEST_FILE), found=self.version,
+                needed=2, feature="the packed-exchange index shards")
+
+    def packed_index_arrays(self, worker: int) -> tuple[np.ndarray, np.ndarray]:
+        """(words uint32, meta [b, 3] int64) of one vertical worker's packed
+        index shard, checksum-verified when the manifest carries digests."""
+        self.require_packed_index()
+        words = np.asarray(
+            fmt.open_array(fmt.pidx_path(self.root, worker, "words")))
+        meta = np.asarray(
+            fmt.open_array(fmt.pidx_path(self.root, worker, "meta")))
+        sums = (self.checksums or {}).get("pidx")
+        if sums:
+            algo = self.checksum_algorithm
+            for name, arr in (("words", words), ("meta", meta)):
+                expected = sums[worker][name]
+                actual = fmt.checksum_array(arr, algo)
+                if actual != expected:
+                    raise ShardCorruptError(
+                        fmt.pidx_path(self.root, worker, name),
+                        array=f"pidx.{name}", worker=worker,
+                        expected=expected, actual=actual)
+        return words, meta
+
+    def packed_row_sets(self) -> list:
+        """``rows[i][j]`` sorted unique destination-local ids decoded from
+        the v2 packed index shards — ``exchange.plan.build_exchange``'s
+        input, derived without touching the edge shards."""
+        from repro.exchange import codec as xcodec
+
+        b = self.b
+        rows = [[None] * b for _ in range(b)]
+        for j in range(b):
+            words, meta = self.packed_index_arrays(j)
+            for i in range(b):
+                off, count, width = (int(x) for x in meta[i])
+                n_words = -(-count * width // 32)
+                rows[i][j] = xcodec.unpack_fields(
+                    words[off: off + n_words], count, width)
+        return rows
 
 
 def open_store(store) -> Manifest:

@@ -19,6 +19,11 @@ matrix lives:
 
 The vertical executor is bitwise identical to the resident vertical step
 (same per-block jaxpr, same compact exchange, same scatter/assign tail).
+With ``exchange='packed'`` it instead gathers each block's partial at the
+prepare()-time static send order (repro.exchange) and runs the payload-only
+scatter tail — again the exact jaxprs the resident packed path runs, so the
+packed disk executor matches the packed resident step bitwise (and hence the
+sparse paths, per the exchange parity contract).
 The horizontal executor streams the gather per SOURCE block (the ROADMAP
 "stream the horizontal gather" follow-up): selection semirings are exact;
 plus_times folds sequentially, so it matches the resident all-block
@@ -48,6 +53,7 @@ import numpy as np
 
 from repro.core import cost_model, placement, sparse_exchange
 from repro.core.gimv import GimvSpec, combine_elementwise
+from repro.exchange import runtime as packed_rt
 from repro.core.partition import Partition
 from repro.core.planner import ExecutionPlan
 from repro.faults import DEFAULT_RETRY, RetryPolicy, as_injector
@@ -292,7 +298,8 @@ class DiskExecutor:
     def __init__(self, spec: GimvSpec, part: Partition, plan: ExecutionPlan,
                  store: DiskBlockStore, *, capacity: int | None = None,
                  scatter: str = "segment", interpret: bool = False, obs=None,
-                 retry: RetryPolicy | None = None):
+                 retry: RetryPolicy | None = None, exchange: str = "sparse",
+                 xchg: dict | None = None, xplan=None):
         self.spec = spec
         self.part = part
         self.plan = plan
@@ -302,6 +309,16 @@ class DiskExecutor:
         self.interpret = interpret
         self.obs = as_recorder(obs)
         self.retry = retry if retry is not None else DEFAULT_RETRY
+        self.exchange = exchange
+        self.xplan = xplan
+        if exchange == "packed":
+            assert plan.strategy == "vertical", "packed exchange is vertical-only"
+            assert xchg is not None and xplan is not None, \
+                "packed exchange needs the prepare()-built index arrays + plan"
+            self._send_rows = np.asarray(xchg["send_rows"])  # [b, b, p_dev]
+            self._recv_rows = jnp.asarray(xchg["recv_rows"])
+            rw = xchg.get("recv_words")
+            self._recv_words = None if rw is None else jnp.asarray(rw)
         b = part.b
         nnz = store.block_nnz
         if plan.strategy == "vertical":
@@ -351,6 +368,40 @@ class DiskExecutor:
 
         return tail
 
+    def _vertical_packed_block_fn(self):
+        spec, n_local = self.spec, self.part.n_local
+
+        @jax.jit
+        def block_fn(seg, gat, w, cnt, v, srows):
+            def one(s, g, ww, c, vl, sr):
+                partial_ = placement.single_block_partial(
+                    spec, s, g, ww, c, vl, n_local)
+                pay = packed_rt.gather_payload(spec, partial_, sr)
+                return pay, sparse_exchange.count_non_identity(spec, pay)
+
+            return jax.vmap(one)(seg, gat, w, cnt, v, srows)
+
+        return block_fn
+
+    def _vertical_packed_tail_fn(self):
+        spec, n_local = self.spec, self.part.n_local
+        scatter, interpret = self.scatter, self.interpret
+        xplan = self.xplan
+        recv_rows, recv_words = self._recv_rows, self._recv_words
+
+        @jax.jit
+        def tail(val, v, ctx, mask):
+            val_x = jnp.swapaxes(val, 0, 1)     # emulated all_to_all
+            r = packed_rt.scatter_payload(
+                spec, val_x.astype(spec.dtype), n_local,
+                recv_rows=recv_rows, recv_words=recv_words,
+                p_dev=xplan.p_dev, width=xplan.width_dev,
+                method=scatter, interpret=interpret)
+            v_new = jax.vmap(partial(placement.apply_assign, spec))(v, r, ctx, mask)
+            return v_new, r, spec.default_delta(v, v_new)
+
+        return tail
+
     def _horizontal_contrib_fn(self):
         spec, n_local = self.spec, self.part.n_local
 
@@ -387,10 +438,48 @@ class DiskExecutor:
                        jnp.asarray(self.spec.identity, self.spec.dtype))
         return idx, val
 
+    def _identity_payload(self, b_w: int, tail_shape: tuple) -> jnp.ndarray:
+        """The payload an all-identity (skipped) block ships: every slot —
+        valid or sentinel — gathers the identity, exactly what gathering its
+        zero-edge partial yields."""
+        return jnp.full((b_w, self.xplan.p_dev) + tail_shape,
+                        jnp.asarray(self.spec.identity, self.spec.dtype))
+
+    def _vertical_iteration_packed(self, v, ctx, mask):
+        """One vertical iteration through the packed exchange: per scheduled
+        destination block, partials gathered at the static send order (no
+        (idx, val) compaction), then the payload-only scatter tail."""
+        store = self.store
+        store.begin_iteration()
+        store.stats.blocks_skipped = self.skipped
+        b, b_w = self.part.b, v.shape[0]
+        tail_shape = v.shape[2:]
+        block_fn = self._jit("vblock_packed", self._vertical_packed_block_fn)
+        pay_pad = self._identity_payload(b_w, tail_shape)
+        val_rows = [pay_pad] * b
+        logical = jnp.zeros((), jnp.float32)
+        obs = self.obs
+        for i, sl in _prefetched(store, self.schedule, self.retry):
+            t0 = time.perf_counter()
+            with obs.span("launch.disk_block", self._launch_attrs.get(i)):
+                val_i, lg_i = obs.fence(block_fn(
+                    sl["seg"], sl["gat"], sl["w"], sl["cnt"], v,
+                    self._send_rows[:, i]))
+            val_rows[i] = val_i
+            logical = logical + jnp.sum(lg_i)
+            store.stats.compute_s += time.perf_counter() - t0
+        val = jnp.stack(val_rows, axis=1)       # [b_w, b, p_dev(, Q)]
+        tail = self._jit("vtail_packed", self._vertical_packed_tail_fn)
+        v_new, r, delta = tail(val, v, ctx, mask)
+        # payload slots are structurally sized: overflow is impossible
+        return v_new, r, delta, jnp.zeros((), jnp.float32), logical
+
     def vertical_iteration(self, v, ctx, mask):
         """One vertical iteration: schedule-driven per-block compact compute
         from disk, then the shared exchange/scatter/assign tail.  Returns
         (v_new, r, overflow, logical)."""
+        if self.exchange == "packed":
+            return self._vertical_iteration_packed(v, ctx, mask)
         store = self.store
         store.begin_iteration()
         store.stats.blocks_skipped = self.skipped
@@ -458,19 +547,39 @@ class DiskExecutor:
         vb = jnp.dtype(self.spec.dtype).itemsize
         if self.plan.strategy == "vertical":
             v_new, _r, delta, over, logical = self.vertical_iteration(v, ctx, mask)
-            stats = {
-                "gathered_elems": jnp.asarray(0.0, jnp.float32),
-                # unclamped capacity, matching the resident vertical_step's
-                # accounting (compact_partials clamps the actual buffers)
-                "exchanged_elems": jnp.asarray(
-                    b * (b - 1) * self.capacity * (1 + (nq or 1)), jnp.float32),
-                "gathered_bytes": jnp.asarray(0.0, jnp.float32),
-                "exchanged_bytes": jnp.asarray(
-                    sparse_exchange.exchange_wire_bytes(
-                        b, self.capacity, nq, vb), jnp.float32),
-                "logical_elems": logical,
-                "overflow": over,
-            }
+            if self.exchange == "packed":
+                xp = self.xplan
+                pay_b = xp.payload_bytes_per_iter(nq, vb)
+                stats = {  # values only on the wire; ids shipped once
+                    "gathered_elems": jnp.asarray(0.0, jnp.float32),
+                    "exchanged_elems": jnp.asarray(
+                        b * (b - 1) * xp.p_dev * (nq or 1), jnp.float32),
+                    "gathered_bytes": jnp.asarray(0.0, jnp.float32),
+                    "exchanged_bytes": jnp.asarray(pay_b, jnp.float32),
+                    "exchange_id_bytes": jnp.asarray(xp.id_bytes, jnp.float32),
+                    "exchange_payload_bytes": jnp.asarray(pay_b, jnp.float32),
+                    "logical_elems": logical,
+                    "overflow": over,
+                }
+            else:
+                id_b, pay_b = sparse_exchange.exchange_wire_split(
+                    b, self.capacity, nq, vb)
+                stats = {
+                    "gathered_elems": jnp.asarray(0.0, jnp.float32),
+                    # unclamped capacity, matching the resident vertical_step's
+                    # accounting (compact_partials clamps the actual buffers)
+                    "exchanged_elems": jnp.asarray(
+                        b * (b - 1) * self.capacity * (1 + (nq or 1)), jnp.float32),
+                    "gathered_bytes": jnp.asarray(0.0, jnp.float32),
+                    "exchanged_bytes": jnp.asarray(
+                        sparse_exchange.exchange_wire_bytes(
+                            b, self.capacity, nq, vb), jnp.float32),
+                    # the padded stream re-ships its int32 ids EVERY iteration
+                    "exchange_id_bytes": jnp.asarray(id_b, jnp.float32),
+                    "exchange_payload_bytes": jnp.asarray(pay_b, jnp.float32),
+                    "logical_elems": logical,
+                    "overflow": over,
+                }
         else:
             v_new, _r, delta = self.horizontal_iteration(v, ctx, mask)
             stats = {

@@ -105,4 +105,18 @@ def verify_store(store) -> VerifyReport:
                        sums["gat"][k], fmt.checksum_array(np.asarray(gat[k]), algo))
             _check(report, paths["cnt"],
                    sums["cnt"], fmt.checksum_array(np.asarray(cnt), algo))
+
+    pidx_sums = manifest.checksums.get("pidx")
+    if pidx_sums:
+        for w in range(manifest.b):
+            paths = {a: fmt.pidx_path(manifest.root, w, a)
+                     for a in fmt.PIDX_ARRAYS}
+            if any(not os.path.exists(p) for p in paths.values()):
+                report.missing += [p for p in paths.values()
+                                   if not os.path.exists(p)]
+                continue
+            for name in fmt.PIDX_ARRAYS:
+                arr = np.asarray(fmt.open_array(paths[name]))
+                _check(report, f"{paths[name]} [pidx.{name}]",
+                       pidx_sums[w][name], fmt.checksum_array(arr, algo))
     return report

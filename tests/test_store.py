@@ -17,6 +17,7 @@ from repro.core import blocks as blocks_lib
 from repro.core.partition import partition_graph
 from repro.graph import io as gio
 from repro.graph.generators import rmat, symmetrize_edges
+from repro.store import format as fmt
 from repro.store import (
     ingest_edges,
     load_partitioned,
@@ -253,7 +254,7 @@ def test_manifest_version_guard(tmp_path):
     root = str(tmp_path / "s")
     ingest_edges(edges, 32, 2, root)
     man = open_store(root)
-    assert man.version == 1
+    assert man.version == fmt.FORMAT_VERSION
     mpath = os.path.join(root, "manifest.json")
     with open(mpath) as f:
         doc = json.load(f)
