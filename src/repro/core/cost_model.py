@@ -44,6 +44,9 @@ __all__ = [
     "EDGE_SLOT_BYTES",
     "disk_block_io_cost",
     "disk_io_seconds",
+    "per_host_io_seconds",
+    "pipelined_iteration_seconds",
+    "predicted_overlap",
     "stripe_slice_bytes",
     "prefer_disk_residency",
 ]
@@ -374,6 +377,37 @@ def disk_block_io_cost(e_cap: int, *, has_w: bool = False) -> float:
 def disk_io_seconds(bytes_read: float) -> float:
     """Model time for streaming ``bytes_read`` shard bytes from disk."""
     return bytes_read / DISK_READ_BW
+
+
+def per_host_io_seconds(bytes_read: float, workers: int) -> float:
+    """Model time for the SPMD disk leg: ``bytes_read`` TOTAL shard bytes
+    split across ``workers`` hosts, each streaming its own stripe range
+    from its own disk concurrently — the critical path is one host's
+    share, which is how the multi-host engine scales the paper's I/O
+    term."""
+    if workers <= 0:
+        raise ValueError(f"workers must be positive, got {workers}")
+    return disk_io_seconds(bytes_read / workers)
+
+
+def pipelined_iteration_seconds(io_s: float, wire_s: float,
+                                compute_s: float) -> float:
+    """Predicted wall time of one pipelined out-of-core iteration: the
+    prefetch pipeline overlaps disk I/O with exchange + compute (fetch of
+    block k+1 behind compute of k, and iteration t+1's first fetch behind
+    t's tail), so the iteration costs the MAX of the legs plus the
+    un-overlappable pipeline fill (one block's fetch ~ io_s spread over
+    the schedule, charged as the non-critical legs' startup)."""
+    return max(io_s, wire_s + compute_s)
+
+
+def predicted_overlap(io_s: float, wire_s: float, compute_s: float) -> float:
+    """Fraction of disk time the pipeline is predicted to hide (the model
+    counterpart of ``ResidencyStats.overlap``): compute+wire time covers
+    that much of the I/O leg."""
+    if io_s <= 0.0:
+        return 1.0
+    return max(0.0, min(1.0, (wire_s + compute_s) / io_s))
 
 
 def prefer_disk_residency(shard_bytes: int, budget_bytes: int | None) -> bool:

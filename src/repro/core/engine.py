@@ -683,18 +683,11 @@ class PMVEngine:
         manifest's persisted measurements and build the schedule-driven
         executor (repro.store.residency) that streams shard slices per
         launch-schedule step with double-buffered prefetch."""
-        from repro.store import DiskBlockStore, DiskExecutor, make_disk_step
+        from repro.store import DiskExecutor, make_disk_step
         from repro.store import plan_from_manifest
 
-        if self.mesh is not None:
-            raise NotImplementedError(
-                "residency='disk' runs in emulation mode (mesh=None); SPMD "
-                "disk residency needs per-host shard serving")
         if strategy == "hybrid":
-            raise NotImplementedError(
-                "residency='disk' supports the basic strategies; use "
-                "strategy='vertical' (bitwise) or 'horizontal' (streamed "
-                "gather), or residency='host' for hybrid")
+            return self._prepare_disk_hybrid(spec, theta)
         if self.backend == "pallas":
             raise ValueError(
                 "residency='disk' runs the streamed per-block xla path; "
@@ -739,9 +732,7 @@ class PMVEngine:
             delta_reason = "residency='disk' keeps the full stream"
         striping = "vertical" if strategy == "vertical" else "horizontal"
         with rec.span("prepare.store"):
-            dstore = DiskBlockStore(self.store, striping, spec,
-                                    budget_bytes=self.store_budget_bytes,
-                                    obs=rec, faults=self._fault_injector)
+            dstore = self._disk_store(striping, spec, rec)
             executor = DiskExecutor(spec, part, plan, dstore, capacity=capacity,
                                     scatter=plan.scatter, interpret=interpret,
                                     obs=rec, retry=self.io_retry,
@@ -753,7 +744,7 @@ class PMVEngine:
                          interpret=interpret,
                          stream="on" if strategy == "vertical" else "off",
                          plan=plan, xplan=xplan)
-        real_mask_dev = jnp.asarray(part.global_ids_grid() < self.n)
+        real_mask_dev = self._disk_mask(part)
         meta = {
             "strategy": strategy, "theta": theta, "capacity": capacity,
             "part": part, "pm": None, "hm": None, "cfg": cfg,
@@ -763,6 +754,114 @@ class PMVEngine:
             "delta_eps": None, "delta_reason": delta_reason,
         }
         return step, dstore, real_mask_dev, meta
+
+    def _disk_store(self, striping: str, spec: GimvSpec, rec, *,
+                    dense_gather_idx=None):
+        """The block store serving one striping of this solve: a single
+        DiskBlockStore in emulation mode (mesh=None), a per-worker
+        :class:`~repro.store.SpmdDiskGroup` under a mesh — each mesh device
+        gets a shard view owning its stripe range, its OWN
+        ``store_budget_bytes`` residency budget, and its own prefetch
+        thread (mesh size must divide b)."""
+        from repro.store import DiskBlockStore, SpmdDiskGroup
+
+        if self.mesh is None:
+            return DiskBlockStore(self.store, striping, spec,
+                                  budget_bytes=self.store_budget_bytes,
+                                  obs=rec, faults=self._fault_injector,
+                                  dense_gather_idx=dense_gather_idx)
+        return SpmdDiskGroup.build(self.store, striping, spec, self.mesh,
+                                   self.axis_name,
+                                   budget_bytes=self.store_budget_bytes,
+                                   obs=rec, faults=self._fault_injector,
+                                   dense_gather_idx=dense_gather_idx)
+
+    def _disk_mask(self, part: Partition):
+        real_mask_dev = jnp.asarray(part.global_ids_grid() < self.n)
+        if self.mesh is not None:
+            real_mask_dev = jax.device_put(
+                real_mask_dev, NamedSharding(self.mesh, P(self.axis_name)))
+        return real_mask_dev
+
+    def _prepare_disk_hybrid(self, spec: GimvSpec, theta: float | None):
+        """strategy='hybrid' out of core: runs from the θ-split shards the
+        ingest persisted (``ingest_edges(..., theta=...)`` writes
+        sparse_vertical + dense_horizontal stripings).  The schedule is
+        structural (no planner plan — ``plan_from_manifest`` has no hybrid
+        disk plan, and the launch order cannot change the result: both legs
+        fold order-independently), capacity covers the SPARSE region only,
+        and the exchange is the compact sparse stream (the packed index
+        shards describe FULL vertical stripes, not the sparse region)."""
+        from repro.store import HybridDiskExecutor, make_disk_step
+
+        if self.backend == "pallas":
+            raise ValueError(
+                "residency='disk' runs the streamed per-block xla path; "
+                "backend='pallas' is not available out of core")
+        if self.payload_dtype is not None:
+            raise ValueError("payload_dtype is not supported out of core")
+        if self.exchange not in ("sparse", "auto"):
+            raise ValueError(
+                "hybrid out-of-core streams the compact sparse exchange; "
+                f"exchange={self.exchange!r} is not supported (the packed "
+                "index shards describe full vertical stripes, not the "
+                "sparse region)")
+        stored = self.store.hybrid_theta()   # raises if no θ-split shards
+        if theta is not None and float(theta) != stored:
+            raise ValueError(
+                f"theta={theta} does not match the store's θ-split shards "
+                f"(θ={stored}) — re-ingest with that θ, or pass "
+                f"theta={stored} / theta='auto'")
+        theta = stored
+        part = Partition(n=self.n, b=self.b, psi=self.psi)
+        interpret = (jax.default_backend() != "tpu"
+                     if self.pallas_interpret is None else self.pallas_interpret)
+        if self.capacity_mode == "structural":
+            capacity = int(self.store.hybrid["sparse_partial_cap"])
+        else:
+            capacity = cost_model.capacity_from_cost_model(
+                self.b, self.n, self._num_edges(),
+                stats=self.store.graph_stats(), theta=theta, slack=self.slack)
+        # the disk tier streams the xla path, where 'auto' (and the kernel
+        # gate) always lands on the segment combine — same resolution
+        # plan_from_manifest applies for the basic strategies.
+        scatter = (self.scatter
+                   if has_semiring(spec.combine2, spec.combine_all) else "segment")
+        if scatter == "auto":
+            scatter = "segment"
+        rec = self.obs
+        region, _slot_of = self.store.dense_region()
+        with rec.span("prepare.store") as sp:
+            sp.set("spec", spec.name)
+            sp.set("strategy", "hybrid")
+            sparse_store = self._disk_store("sparse_vertical", spec, rec)
+            dense_store = self._disk_store(
+                "dense_horizontal", spec, rec,
+                dense_gather_idx=region.gather_idx)
+            executor = HybridDiskExecutor(
+                spec, part, sparse_store, dense_store, region,
+                capacity=capacity, scatter=scatter, interpret=interpret,
+                obs=rec, retry=self.io_retry)
+        step = make_disk_step(spec, executor)
+        cfg = StepConfig(strategy="hybrid", n_local=part.n_local,
+                         exchange="sparse", capacity=capacity,
+                         payload_dtype=None, backend="xla",
+                         interpret=interpret, stream="off",
+                         plan=None, xplan=None)
+        delta_reason = None
+        if self.delta_eps is not None:
+            delta_reason = "residency='disk' keeps the full stream"
+        meta = {
+            "strategy": "hybrid", "theta": theta, "capacity": capacity,
+            "part": part, "pm": None, "hm": None, "cfg": cfg,
+            "backend": "xla", "plan": None, "residency": "disk",
+            "store": sparse_store, "executor": executor,
+            "n_dense": int(np.asarray(region.d_count).sum()),
+            "exchange": "sparse",
+            "exchange_decision": "hybrid disk: compact sparse-region stream",
+            "delta_eps": None, "delta_reason": delta_reason,
+        }
+        return step, sparse_store, self._disk_mask(part), meta
 
     def _resolve_disk_exchange(self, spec: GimvSpec, strategy: str,
                                capacity: int | None, plan, part):
@@ -850,7 +949,15 @@ class PMVEngine:
                  "exchange": meta.get("exchange", self.exchange)}
         if meta["hm"] is not None:
             extra["dense_region_vertices"] = meta["n_dense"]
-        text = planner.format_plan(meta["plan"], extra=extra)
+        if meta["plan"] is None:
+            # hybrid out-of-core bypasses the planner: there is nothing
+            # tactic-shaped to format, but explain() still reports the shape.
+            text = ("hybrid out-of-core: structural schedule over the "
+                    "θ-split shards (sparse_vertical + dense_horizontal)\n"
+                    f"  theta={meta['theta']}  capacity={meta['capacity']}"
+                    f"  dense_region_vertices={meta['n_dense']}")
+        else:
+            text = planner.format_plan(meta["plan"], extra=extra)
         xsec = self._format_exchange_section(spec, meta)
         if xsec:
             text = text + "\n" + xsec
@@ -988,7 +1095,11 @@ class PMVEngine:
                 sp.set("iteration", it)
                 sp.set("delta", delta)
             wall = time.perf_counter() - t0
-            rec = {k: float(np.asarray(x)) for k, x in stats.items()}
+            # store_worker_* breakdowns are per-worker LISTS; everything else
+            # is a scalar.
+            rec = {k: ([float(np.asarray(e)) for e in x]
+                       if isinstance(x, list) else float(np.asarray(x)))
+                   for k, x in stats.items()}
             rec.update(delta=delta, wall_s=wall, iteration=it)
             rec["io_elems"] = self._paper_io(meta, rec)
             per_iter.append(rec)
@@ -1015,6 +1126,12 @@ class PMVEngine:
                 if "store_bytes_read" in rec:  # disk residency: per-iter I/O
                     obs.series("pmv.io_bytes").append(rec["store_bytes_read"])
                     obs.series("pmv.io_overlap").append(rec["store_overlap"])
+                    # SPMD disk: per-worker prefetch-wait vs overlap series
+                    for wk, (ws, ov) in enumerate(zip(
+                            rec.get("store_worker_wait_s", ()),
+                            rec.get("store_worker_overlap", ()))):
+                        obs.series(f"pmv.io_wait_s.w{wk}").append(ws)
+                        obs.series(f"pmv.io_overlap.w{wk}").append(ov)
             v = v_new
             if rec.get("overflow", 0.0) > 0:
                 fb = self.fallback_overrides(meta["strategy"]) if _allow_fallback else None

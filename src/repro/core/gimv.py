@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["GimvSpec", "combine2", "segment_combine", "scatter_combine", "identity_of"]
+__all__ = ["GimvSpec", "combine2", "segment_combine", "scatter_combine",
+           "identity_of", "combine_elementwise", "tree_combine"]
 
 _COMBINE2 = ("mul", "add", "src")
 _COMBINE_ALL = ("sum", "min", "max")
@@ -151,3 +152,27 @@ def combine_elementwise(spec: GimvSpec, a: jnp.ndarray, b: jnp.ndarray) -> jnp.n
     if spec.combine_all == "max":
         return jnp.maximum(a, b)
     raise ValueError(spec.combine_all)
+
+
+def tree_combine(spec: GimvSpec, parts: list) -> jnp.ndarray:
+    """combineAll over a list of equal-shaped partial vectors via a pairwise
+    tree fold: level k combines neighbors (0,1), (2,3), ... carrying an odd
+    tail up unchanged.
+
+    The association order depends only on ``len(parts)`` — never on the order
+    the parts were *produced* — so a streamed executor that folds per-source-
+    block contributions as they arrive off disk is bitwise identical to the
+    resident path folding the same ``b`` contributions, for every semiring
+    including float ``sum`` (plus_times).  Selection semirings are order-
+    independent anyway; this makes the float case order-independent too.
+    """
+    if not parts:
+        raise ValueError("tree_combine needs at least one partial")
+    level = list(parts)
+    while len(level) > 1:
+        nxt = [combine_elementwise(spec, level[i], level[i + 1])
+               for i in range(0, len(level) - 1, 2)]
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+    return level[0]

@@ -54,7 +54,8 @@ from jax import lax
 
 from repro.core import sparse_exchange
 from repro.core.blocks import BlockEdges, DenseRegion, EllStripe, PlannedStripe
-from repro.core.gimv import GimvSpec, combine2, combine_elementwise, segment_combine
+from repro.core.gimv import (GimvSpec, combine2, combine_elementwise,
+                             segment_combine, tree_combine)
 from repro.exchange import runtime as packed_rt
 from repro.kernels.block_gimv import dense_gimv, dense_gimv_multi, semiring_of
 from repro.kernels.ell_spmv import ell_gimv, ell_gimv_multi
@@ -258,12 +259,11 @@ def gathered_gimv(spec: GimvSpec, stripe: BlockEdges, v_all: jnp.ndarray, n_loca
     else:
         flat = segment_combine(spec, x.reshape(-1), seg.reshape(-1), b * n_local)
         contribs = flat.reshape(b, n_local)
-    # combineAll across source blocks.
-    if spec.combine_all == "sum":
-        return jnp.sum(contribs, axis=0)
-    if spec.combine_all == "min":
-        return jnp.min(contribs, axis=0)
-    return jnp.max(contribs, axis=0)
+    # combineAll across source blocks: a pairwise-tree fold whose association
+    # order depends only on b, so the streamed disk executor folding the same
+    # per-block contributions (in any launch order) is bitwise identical —
+    # including float sum (plus_times).
+    return tree_combine(spec, [contribs[j] for j in range(b)])
 
 
 # --------------------------------------------------------------------------

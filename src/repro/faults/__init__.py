@@ -15,6 +15,7 @@ injected fault visible in the obs metrics.
 """
 from repro.faults.plan import (
     FAULT_KINDS,
+    BreakPrefetch,
     CorruptFetch,
     FaultInjector,
     FaultPlan,
@@ -34,6 +35,7 @@ __all__ = [
     "CorruptFetch",
     "TransientIO",
     "SlowFetch",
+    "BreakPrefetch",
     "KillAtIteration",
     "InjectedIOError",
     "InjectedKill",

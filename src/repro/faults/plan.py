@@ -43,6 +43,7 @@ __all__ = [
     "CorruptFetch",
     "TransientIO",
     "SlowFetch",
+    "BreakPrefetch",
     "KillAtIteration",
     "FaultPlan",
     "FaultInjector",
@@ -51,7 +52,8 @@ __all__ = [
     "as_injector",
 ]
 
-FAULT_KINDS = ("corrupt_fetch", "transient_io", "slow_fetch", "kill")
+FAULT_KINDS = ("corrupt_fetch", "transient_io", "slow_fetch",
+               "break_prefetch", "kill")
 
 
 class InjectedIOError(IOError):
@@ -73,21 +75,27 @@ class CorruptFetch:
     """Flip one byte of ``array`` in the slice fetched for ``block``, the
     ``occurrence``-th time that block is fetched (1-based).  The flip happens
     before checksum verification, so a checksummed store detects it and the
-    re-fetch (occurrence consumed) reads clean data."""
+    re-fetch (occurrence consumed) reads clean data.  ``worker=None`` hits
+    whichever store fetches first; an int targets one mesh worker's per-host
+    store (fetch-attempt counts are kept per (worker, block), so a shared
+    injector never miscounts occurrences across workers)."""
 
     block: int
     array: str = "seg"           # 'seg' | 'gat' | 'cnt'
     occurrence: int = 1
+    worker: int | None = None
     kind: str = dataclasses.field(default="corrupt_fetch", init=False)
 
 
 @dataclasses.dataclass(frozen=True)
 class TransientIO:
     """Raise :class:`InjectedIOError` for the next ``times`` fetch attempts
-    of ``block`` (each raise consumes one)."""
+    of ``block`` (each raise consumes one).  ``worker`` scopes the fault to
+    one mesh worker's store (None: any store)."""
 
     block: int
     times: int = 1
+    worker: int | None = None
     kind: str = dataclasses.field(default="transient_io", init=False)
 
 
@@ -95,12 +103,25 @@ class TransientIO:
 class SlowFetch:
     """Sleep ``delay_s`` inside the ``occurrence``-th fetch of ``block`` — a
     straggler read (exercises prefetch wait accounting and, when a deadline
-    is configured, the per-launch deadline path)."""
+    is configured, the per-launch deadline path).  ``worker`` scopes the
+    fault to one mesh worker's store (None: any store)."""
 
     block: int
     delay_s: float = 0.05
     occurrence: int = 1
+    worker: int | None = None
     kind: str = dataclasses.field(default="slow_fetch", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakPrefetch:
+    """Break worker ``worker``'s prefetch THREAD (None: the next pipeline to
+    start): the pipeline degrades to synchronous fetches for its lifetime —
+    ``store.prefetch_degraded`` counts it — and the solve must still finish
+    bitwise.  Deterministic stand-in for a pool that dies mid-run."""
+
+    worker: int | None = None
+    kind: str = dataclasses.field(default="break_prefetch", init=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,7 +133,15 @@ class KillAtIteration:
     kind: str = dataclasses.field(default="kill", init=False)
 
 
-_EVENT_TYPES = (CorruptFetch, TransientIO, SlowFetch, KillAtIteration)
+_EVENT_TYPES = (CorruptFetch, TransientIO, SlowFetch, BreakPrefetch,
+                KillAtIteration)
+
+
+def _scope_matches(event, scope) -> bool:
+    """A worker-scoped event fires only on its worker's store; an unscoped
+    event fires on any store (single-host stores pass scope=None)."""
+    target = getattr(event, "worker", None)
+    return target is None or target == scope
 
 
 # ---------------------------------------------------------------------------
@@ -187,8 +216,10 @@ class FaultInjector:
         self._lock = threading.Lock()
         # remaining "shots" per event index (TransientIO carries `times`)
         self._remaining = [int(getattr(e, "times", 1)) for e in plan.events]
-        # per-block fetch-attempt counts (occurrence matching)
-        self._fetch_counts: dict[int, int] = {}
+        # per-(scope, block) fetch-attempt counts (occurrence matching).
+        # Keyed by scope so W mesh workers sharing one injector don't
+        # inflate each other's occurrence counters.
+        self._fetch_counts: dict[tuple, int] = {}
         self._rng = np.random.default_rng(plan.seed)
         self.injected: dict[str, int] = {k: 0 for k in FAULT_KINDS}
 
@@ -207,15 +238,18 @@ class FaultInjector:
         self.obs.counter(f"fault.injected.{e.kind}").add(1)
 
     # -- injection sites ------------------------------------------------
-    def on_fetch(self, block: int) -> None:
+    def on_fetch(self, block: int, scope: int | None = None) -> None:
         """Called at the top of every fetch ATTEMPT for ``block``.  May raise
-        InjectedIOError (transient_io) or sleep (slow_fetch)."""
+        InjectedIOError (transient_io) or sleep (slow_fetch).  ``scope`` is
+        the calling store's worker id (None for single-host stores)."""
         delay = None
         with self._lock:
-            count = self._fetch_counts.get(block, 0) + 1
-            self._fetch_counts[block] = count
+            count = self._fetch_counts.get((scope, block), 0) + 1
+            self._fetch_counts[(scope, block)] = count
             for i, e in enumerate(self.plan.events):
-                if self._remaining[i] <= 0 or getattr(e, "block", None) != block:
+                if (self._remaining[i] <= 0
+                        or getattr(e, "block", None) != block
+                        or not _scope_matches(e, scope)):
                     continue
                 if e.kind == "transient_io":
                     self._fire(i)
@@ -229,15 +263,17 @@ class FaultInjector:
             with self.obs.span("fault.slow_fetch", {"block": block}):
                 time.sleep(delay)
 
-    def corrupt_slice(self, block: int, arrays: dict) -> None:
+    def corrupt_slice(self, block: int, arrays: dict,
+                      scope: int | None = None) -> None:
         """Called with the freshly read (mutable, host-side) slice arrays of
         ``block``; flips one seeded byte in the scheduled array.  Runs before
         checksum verification, so the corruption is detectable."""
         with self._lock:
-            count = self._fetch_counts.get(block, 1)
+            count = self._fetch_counts.get((scope, block), 1)
             for i, e in enumerate(self.plan.events):
                 if (self._remaining[i] <= 0 or e.kind != "corrupt_fetch"
-                        or e.block != block or e.occurrence != count):
+                        or e.block != block or e.occurrence != count
+                        or not _scope_matches(e, scope)):
                     continue
                 arr = arrays.get(e.array)
                 if arr is None:
@@ -247,6 +283,19 @@ class FaultInjector:
                 flat[off] ^= 0xFF          # guaranteed to change the byte
                 self._fire(i)
                 self.obs.counter("fault.corrupt_bytes").add(1)
+
+    def break_prefetch(self, scope: int | None = None) -> bool:
+        """Consume a scheduled ``BreakPrefetch`` matching ``scope`` (worker
+        id, None for single-host pipelines).  Returns True exactly once per
+        scheduled event — the pipeline that sees True degrades to
+        synchronous fetches for its lifetime."""
+        with self._lock:
+            for i, e in enumerate(self.plan.events):
+                if (self._remaining[i] > 0 and e.kind == "break_prefetch"
+                        and _scope_matches(e, scope)):
+                    self._fire(i)
+                    return True
+        return False
 
     def on_iteration(self, iteration: int) -> None:
         """Called at the top of every engine iteration; raises InjectedKill

@@ -25,9 +25,13 @@ from repro.store.residency import (
     RESIDENCY_MODES,
     DiskBlockStore,
     DiskExecutor,
+    HybridDiskExecutor,
+    PrefetchPipeline,
     ResidencyStats,
     make_disk_step,
 )
+from repro.store.shard import merge_stores, split_store
+from repro.store.spmd import SpmdDiskGroup, SpmdPrefetchPipeline
 from repro.store.verify import VerifyReport, verify_store
 
 __all__ = [
@@ -42,8 +46,14 @@ __all__ = [
     "RESIDENCY_MODES",
     "DiskBlockStore",
     "DiskExecutor",
+    "HybridDiskExecutor",
+    "PrefetchPipeline",
     "ResidencyStats",
     "make_disk_step",
+    "SpmdDiskGroup",
+    "SpmdPrefetchPipeline",
+    "split_store",
+    "merge_stores",
     "VerifyReport",
     "verify_store",
 ]

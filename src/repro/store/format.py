@@ -35,8 +35,10 @@ import numpy as np
 __all__ = [
     "FORMAT_NAME",
     "FORMAT_VERSION",
+    "STRIPINGS",
     "STRIPE_ARRAYS",
     "PIDX_ARRAYS",
+    "nnz_array_of",
     "CHECKSUM_ALGORITHM",
     "stripe_path",
     "pidx_path",
@@ -105,11 +107,27 @@ def row_checksums(arr: np.ndarray, algorithm: str = CHECKSUM_ALGORITHM) -> list[
     return [checksum_array(arr[k], algorithm) for k in range(arr.shape[0])]
 
 STRIPE_ARRAYS = ("seg", "gat", "cnt")
+# The two basic stripings plus the θ-split hybrid pair: sparse-region edges
+# laid out vertically (src out-degree < θ) and dense-region edges laid out
+# horizontally with compact dense SLOTS in the gather column (src >= θ).
+STRIPINGS = ("vertical", "horizontal", "sparse_vertical", "dense_horizontal")
 _ARRAY_DIRS = {
     "out_deg": "stats", "in_deg": "stats",
     "nnz": "blocks", "partial_nnz": "blocks",
     "rows": "blocks", "d_max": "blocks", "deg_hist": "blocks",
+    "sparse_nnz": "blocks", "dense_nnz": "blocks",
 }
+
+
+def nnz_array_of(striping: str) -> str:
+    """The [b, b] block-nnz array a striping's launch schedule derives from:
+    the full matrix for the basic stripings, the θ-split region counts for
+    the hybrid pair."""
+    if striping == "sparse_vertical":
+        return "sparse_nnz"
+    if striping == "dense_horizontal":
+        return "dense_nnz"
+    return "nnz"
 
 
 def array_path(root: str, name: str) -> str:
@@ -117,7 +135,7 @@ def array_path(root: str, name: str) -> str:
 
 
 def stripe_path(root: str, striping: str, worker: int, array: str) -> str:
-    assert striping in ("vertical", "horizontal"), striping
+    assert striping in STRIPINGS, striping
     assert array in STRIPE_ARRAYS, array
     return os.path.join(root, striping, f"w{worker}.{array}.npy")
 

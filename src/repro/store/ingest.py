@@ -83,6 +83,7 @@ def ingest_edges(
     chunk_edges: int = DEFAULT_CHUNK_EDGES,
     symmetrize: bool = False,
     keep_spill: bool = False,
+    theta: float | str | None = None,
 ) -> Manifest:
     """Stream ``source`` (path, [m, 2] array, or chunk iterator) into a
     pre-partitioned block store at ``out_dir``; returns the Manifest.
@@ -92,6 +93,13 @@ def ingest_edges(
     ``symmetrize_edges`` when ``symmetrize``) for every GimvSpec — see
     manifest.load_partitioned.  ``symmetrize`` requires a re-iterable
     ``source`` (path or array: the stream is read twice).
+
+    ``theta`` (a float, or 'auto' for the θ* of Lemma 3.3 on the streamed
+    degrees) additionally writes the θ-split HYBRID shards — sparse-region
+    edges as a 'sparse_vertical' striping, dense-region edges as a
+    'dense_horizontal' striping whose gather column holds compact dense
+    slots — which is what lets ``strategy='hybrid'`` run under
+    ``residency='disk'`` without ever materializing the edge list.
     """
     assert n > 0, "ingest_edges needs the vertex count n >= 1"
     part = Partition(n=n, b=b, psi=psi)
@@ -111,19 +119,22 @@ def ingest_edges(
 
     vbins = fmt.EdgeBins(spill_root, b, "v")
     hbins = fmt.EdgeBins(spill_root, b, "h")
+    dbins = fmt.EdgeBins(spill_root, b, "d") if theta is not None else None
     try:
         return _ingest_binned(source, n, b, out_dir, part, vbins, hbins,
                               chunk_edges=chunk_edges, symmetrize=symmetrize,
-                              psi=psi)
+                              psi=psi, theta=theta, dbins=dbins)
     finally:
         vbins.close(remove=not keep_spill)
         hbins.close(remove=not keep_spill)
+        if dbins is not None:
+            dbins.close(remove=not keep_spill)
         if not keep_spill and os.path.exists(spill_root):
             shutil.rmtree(spill_root, ignore_errors=True)
 
 
 def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
-                   chunk_edges, symmetrize, psi):
+                   chunk_edges, symmetrize, psi, theta=None, dbins=None):
     peak_chunk = 0
     # ---- pass A: spill to source-block bins ------------------------------
     for chunk in _chunks(source, chunk_edges):
@@ -256,16 +267,28 @@ def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
             cnt = np.zeros((b,), np.int32)
         _write_stripe("horizontal", i, seg, gat, cnt)
 
+    # ---- θ-split post-pass: hybrid shards (sparse_vertical +
+    # dense_horizontal) from the same spill bins, no edge-list resurrection.
+    # Runs after pass B so out_deg is complete: the θ mask needs the full
+    # degrees, and 'auto' resolves θ* exactly as the engine does.
+    hybrid_doc = None
+    whole_arrays = [("out_deg", out_deg), ("in_deg", in_deg),
+                    ("nnz", block_nnz), ("partial_nnz", partial_nnz),
+                    ("rows", rows), ("d_max", d_max), ("deg_hist", deg_hist)]
+    if theta is not None:
+        hybrid_doc = _write_hybrid_shards(
+            out_dir, part, n, b, theta, out_deg, in_deg, m_total,
+            vbins, dbins, stripe_sums, whole_arrays, _write_stripe)
+
     array_sums: dict[str, str] = {}
-    for name, arr in (("out_deg", out_deg), ("in_deg", in_deg),
-                      ("nnz", block_nnz), ("partial_nnz", partial_nnz),
-                      ("rows", rows), ("d_max", d_max), ("deg_hist", deg_hist)):
+    for name, arr in whole_arrays:
         fmt.save_array(fmt.array_path(out_dir, name), arr)
         array_sums[name] = fmt.checksum_array(arr, algo)
 
     manifest = Manifest(
         root=out_dir, n=n, m=m_total, b=b, psi=psi, symmetrized=symmetrize,
         e_cap=e_cap, partial_cap=max(int(partial_nnz.max()), 1),
+        hybrid=hybrid_doc,
         checksums={"algorithm": algo, "arrays": array_sums,
                    "stripes": stripe_sums, "pidx": pidx_sums},
         ingest={
@@ -279,3 +302,101 @@ def _ingest_binned(source, n, b, out_dir, part, vbins, hbins, *,
         })
     manifest.save()
     return manifest
+
+
+def _write_hybrid_shards(out_dir, part, n, b, theta, out_deg, in_deg, m_total,
+                         vbins, dbins, stripe_sums, whole_arrays,
+                         _write_stripe):
+    """θ-split the binned edges into the hybrid shard pair (paper §3.5).
+
+    Sparse-region edges (src out-degree < θ) keep the vertical layout per
+    source bin; dense-region edges are re-spilled to destination-block bins
+    and packed horizontally with the compact dense SLOT in the gather column
+    — bitwise what ``partition.build_hybrid`` lays out, because the θ mask
+    preserves each bin's edge order and ``pack_worker_stripe``'s stable
+    per-bin lexsort is ``build_stripes``'s global one restricted to the
+    owner.  Returns the manifest ``hybrid`` doc.
+    """
+    from repro.core import cost_model
+    from repro.core.partition import dense_region_of
+    from repro.graph.stats import GraphStats
+
+    if theta == "auto":
+        stats = GraphStats(n=n, n_edges=m_total, out_deg=out_deg,
+                           in_deg=in_deg, density=float(m_total) / float(n) ** 2)
+        theta, _ = cost_model.theta_star(b, n, stats)
+    theta = float(theta)
+    is_dense = out_deg >= theta
+    region, slot_of = dense_region_of(part, is_dense, theta)
+
+    # split pass: θ-mask each source bin, count both regions, spill dense
+    # edges to destination-block bins (their horizontal owner).
+    sparse_nnz = np.zeros((b, b), dtype=np.int64)    # [dst block, src block]
+    dense_nnz = np.zeros((b, b), dtype=np.int64)     # [dst block, src block]
+    sparse_partial = np.zeros((b, b), dtype=np.int64)
+    sparse_m = dense_m = 0
+    for j in range(b):
+        e = vbins.read(j)
+        if not len(e):
+            continue
+        mask = is_dense[e[:, 0]]
+        s_e, d_e = e[~mask], e[mask]
+        sparse_m += len(s_e)
+        dense_m += len(d_e)
+        if len(s_e):
+            sdb = part.block_of(s_e[:, 1])
+            sdl = part.local_of(s_e[:, 1])
+            sparse_nnz[:, j] = np.bincount(sdb, minlength=b)
+            order = np.argsort(sdb, kind="stable")
+            db_s, dl_s = sdb[order], sdl[order]
+            bounds = np.searchsorted(db_s, np.arange(b + 1))
+            for i in range(b):
+                lo, hi = bounds[i], bounds[i + 1]
+                if hi > lo:
+                    sparse_partial[i, j] = len(np.unique(dl_s[lo:hi]))
+        if len(d_e):
+            ddb = part.block_of(d_e[:, 1])
+            dense_nnz[:, j] = np.bincount(ddb, minlength=b)
+            dbins.append(ddb, d_e)
+    sparse_e_cap = max(int(sparse_nnz.max()), 1)
+    dense_e_cap = max(int(dense_nnz.max()), 1)
+
+    stripe_sums["sparse_vertical"] = []
+    stripe_sums["dense_horizontal"] = []
+    for j in range(b):
+        e = vbins.read(j)
+        s_e = e[~is_dense[e[:, 0]]] if len(e) else e
+        if len(s_e):
+            src, dst = s_e[:, 0], s_e[:, 1]
+            seg, gat, cnt = fmt.pack_worker_stripe(
+                part.block_of(dst), part.local_of(dst), part.local_of(src),
+                b, sparse_e_cap)
+        else:
+            seg = np.zeros((b, sparse_e_cap), np.int32)
+            gat = np.zeros((b, sparse_e_cap), np.int32)
+            cnt = np.zeros((b,), np.int32)
+        _write_stripe("sparse_vertical", j, seg, gat, cnt)
+    for i in range(b):
+        e = dbins.read(i)
+        if len(e):
+            src, dst = e[:, 0], e[:, 1]
+            seg, gat, cnt = fmt.pack_worker_stripe(
+                part.block_of(src), part.local_of(dst),
+                slot_of[src].astype(np.int64), b, dense_e_cap)
+        else:
+            seg = np.zeros((b, dense_e_cap), np.int32)
+            gat = np.zeros((b, dense_e_cap), np.int32)
+            cnt = np.zeros((b,), np.int32)
+        _write_stripe("dense_horizontal", i, seg, gat, cnt)
+
+    whole_arrays.append(("sparse_nnz", sparse_nnz))
+    whole_arrays.append(("dense_nnz", dense_nnz))
+    return {
+        "theta": theta,
+        "sparse_e_cap": sparse_e_cap,
+        "dense_e_cap": dense_e_cap,
+        "sparse_partial_cap": max(int(sparse_partial.max()), 1),
+        "d_cap": int(region.d_cap),
+        "sparse_m": int(sparse_m),
+        "dense_m": int(dense_m),
+    }

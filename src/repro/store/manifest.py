@@ -43,6 +43,8 @@ __all__ = [
     "open_store",
     "load_partitioned",
     "plan_from_manifest",
+    "row_weights",
+    "row_weights_dense",
 ]
 
 MANIFEST_FILE = "manifest.json"
@@ -127,6 +129,18 @@ class Manifest:
     #    "stripes": {striping: [per-worker {"seg": [b row digests],
     #                                       "gat": [...], "cnt": digest}]}}
     checksums: dict | None = None
+    # θ-split hybrid shards (sparse_vertical / dense_horizontal stripings);
+    # None when the store was ingested without theta=.  Holds
+    #   {"theta": float, "sparse_e_cap": int, "dense_e_cap": int,
+    #    "sparse_partial_cap": int, "d_cap": int,
+    #    "sparse_m": int, "dense_m": int}
+    # — everything else (gather index, slot map) is recomputed
+    # deterministically from out_deg >= theta at load time.
+    hybrid: dict | None = None
+    # Per-host manifest partitioning: None for a whole store; a shard
+    # manifest carries {"count": W, "worker": w, "lo": int, "hi": int} —
+    # mesh worker w of W owns the stripe files of global workers [lo, hi).
+    worker_shard: dict | None = None
 
     # ------------------------------------------------------------------
     def save(self) -> None:
@@ -140,6 +154,12 @@ class Manifest:
         }
         if self.checksums is not None:
             doc["checksums"] = self.checksums
+        if self.hybrid is not None:
+            doc["hybrid"] = self.hybrid
+        # absent (not null) when whole, so a split -> merge round trip
+        # reproduces the original manifest.json byte-for-byte
+        if self.worker_shard is not None:
+            doc["worker_shard"] = self.worker_shard
         tmp = os.path.join(self.root, MANIFEST_FILE + ".tmp")
         with open(tmp, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -181,7 +201,9 @@ class Manifest:
                        partial_cap=int(doc["partial_cap"]),
                        ingest=doc.get("ingest", {}),
                        version=int(doc.get("version", fmt.FORMAT_VERSION)),
-                       checksums=doc.get("checksums"))
+                       checksums=doc.get("checksums"),
+                       hybrid=doc.get("hybrid"),
+                       worker_shard=doc.get("worker_shard"))
         except (KeyError, TypeError, ValueError) as e:
             raise ManifestCorruptError(
                 path, f"missing or malformed required field ({e!r})") from e
@@ -190,6 +212,69 @@ class Manifest:
     @property
     def part(self) -> Partition:
         return Partition(n=self.n, b=self.b, psi=self.psi)
+
+    # -- per-host shards / hybrid stripings ----------------------------
+    def stripings(self) -> tuple[str, ...]:
+        """The stripings this store carries shard files for."""
+        basic = ("vertical", "horizontal")
+        if self.hybrid is not None:
+            return basic + ("sparse_vertical", "dense_horizontal")
+        return basic
+
+    def e_cap_of(self, striping: str) -> int:
+        """Padded edge capacity of one striping's stripe rows."""
+        if striping == "sparse_vertical":
+            return int(self.hybrid["sparse_e_cap"])
+        if striping == "dense_horizontal":
+            return int(self.hybrid["dense_e_cap"])
+        return self.e_cap
+
+    def owned_workers(self, *, default=None):
+        """Global worker (stripe file) ids this manifest owns: everything
+        for a whole store (or ``default`` when given), the [lo, hi) range
+        for a per-host shard manifest."""
+        if self.worker_shard is not None:
+            return range(int(self.worker_shard["lo"]),
+                         int(self.worker_shard["hi"]))
+        return range(self.b) if default is None else default
+
+    def worker_shard_view(self, worker: int, count: int) -> "Manifest":
+        """A VIRTUAL per-host shard over the same store directory: worker
+        ``worker`` of ``count`` owns the contiguous stripe range
+        [worker*b/count, (worker+1)*b/count).  No bytes move — this is how
+        the SPMD disk engine scopes each mesh worker to its own shard
+        without physically splitting the store (shard.split_store does the
+        physical split)."""
+        if count <= 0 or self.b % count != 0:
+            raise ValueError(
+                f"cannot shard b={self.b} stripes across {count} workers "
+                "(count must divide b)")
+        if not 0 <= worker < count:
+            raise ValueError(f"worker {worker} out of range for {count}")
+        stride = self.b // count
+        view = dataclasses.replace(
+            self, worker_shard={"count": int(count), "worker": int(worker),
+                                "lo": worker * stride,
+                                "hi": (worker + 1) * stride})
+        return view
+
+    def hybrid_theta(self) -> float:
+        if self.hybrid is None:
+            raise ValueError(
+                "store has no θ-split hybrid shards — re-ingest with "
+                "ingest_edges(..., theta=...) to cover strategy='hybrid' "
+                "under residency='disk'")
+        return float(self.hybrid["theta"])
+
+    def dense_region(self):
+        """(DenseRegion, slot_of) of the hybrid shards, recomputed
+        deterministically from the stored out-degrees and θ — bitwise what
+        ``build_hybrid`` computes on the original edge list."""
+        from repro.core.partition import dense_region_of
+
+        theta = self.hybrid_theta()
+        out_deg = np.asarray(self.array("out_deg"))
+        return dense_region_of(self.part, out_deg >= theta, theta)
 
     def array(self, name: str, *, mmap: bool = False) -> np.ndarray:
         return fmt.open_array(fmt.array_path(self.root, name), mmap=mmap)
@@ -346,6 +431,24 @@ def row_weights(spec, part: Partition, src_block: int, gat_row: np.ndarray,
     c = int(cnt)
     if c:
         src = part.global_of(src_block, gat_row[:c].astype(np.int64))
+        w[:c] = edge_weights_for(spec, out_deg, src)
+    return w
+
+
+def row_weights_dense(spec, part: Partition, src_block: int,
+                      gat_row: np.ndarray, cnt: int, out_deg: np.ndarray,
+                      gather_idx: np.ndarray) -> np.ndarray:
+    """``row_weights`` for a dense_horizontal stripe row, whose gather column
+    holds compact dense-region SLOTS instead of local ids: the slot resolves
+    to the source's local id through ``gather_idx[src_block]`` (the
+    dense-region layout, recomputed from out_deg >= θ), then to the global
+    id exactly as the basic path does."""
+    w = np.zeros(gat_row.shape, dtype=np.float32)
+    c = int(cnt)
+    if c:
+        local = np.asarray(gather_idx[src_block])[
+            gat_row[:c].astype(np.int64)].astype(np.int64)
+        src = part.global_of(src_block, local)
         w[:c] = edge_weights_for(spec, out_deg, src)
     return w
 

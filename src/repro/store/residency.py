@@ -25,9 +25,10 @@ scatter tail — again the exact jaxprs the resident packed path runs, so the
 packed disk executor matches the packed resident step bitwise (and hence the
 sparse paths, per the exchange parity contract).
 The horizontal executor streams the gather per SOURCE block (the ROADMAP
-"stream the horizontal gather" follow-up): selection semirings are exact;
-plus_times folds sequentially, so it matches the resident all-block
-reduction to float tolerance rather than bitwise.
+"stream the horizontal gather" follow-up) and folds the per-block
+contributions with the same pairwise tree ``gathered_gimv`` uses, so every
+semiring — including float plus_times — is bitwise the resident reduction,
+independent of the launch order the schedule happened to walk.
 
 Robustness (ISSUE 7): every fetched slice is verified against the
 manifest's ingest-time per-row checksums (a mismatch raises a typed
@@ -52,7 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model, placement, sparse_exchange
-from repro.core.gimv import GimvSpec, combine_elementwise
+from repro.core.gimv import GimvSpec, combine_elementwise, tree_combine
 from repro.exchange import runtime as packed_rt
 from repro.core.partition import Partition
 from repro.core.planner import ExecutionPlan
@@ -64,10 +65,12 @@ from repro.store.manifest import (
     ShardCorruptError,
     open_store,
     row_weights,
+    row_weights_dense,
 )
 
 __all__ = ["RESIDENCY_MODES", "DiskBlockStore", "DiskExecutor",
-           "ResidencyStats", "make_disk_step"]
+           "HybridDiskExecutor", "PrefetchPipeline", "ResidencyStats",
+           "make_disk_step"]
 
 RESIDENCY_MODES = cost_model.RESIDENCY_MODES
 
@@ -107,15 +110,28 @@ class DiskBlockStore:
 
     def __init__(self, store, striping: str, spec: GimvSpec, *,
                  budget_bytes: int | None = None, obs=None, faults=None,
-                 verify: bool | None = None):
-        assert striping in ("vertical", "horizontal"), striping
+                 verify: bool | None = None, workers=None,
+                 fault_scope: int | None = None, dense_gather_idx=None):
+        assert striping in fmt.STRIPINGS, striping
         self.manifest: Manifest = open_store(store)
         self.striping = striping
         self.spec = spec
         self.obs = as_recorder(obs)
         self.faults = as_injector(faults, self.obs)
+        # which fetches this store serves: a per-host shard view opens only
+        # its OWNED stripe files; fault events carry a worker scope so an
+        # injector shared across worker stores fires on the right one.
+        self.fault_scope = fault_scope
         self.part: Partition = self.manifest.part
         b = self.manifest.b
+        if workers is None:
+            workers = self.manifest.owned_workers(default=range(b))
+        self.workers = list(workers)
+        self.dense_gather_idx = dense_gather_idx
+        if striping == "dense_horizontal" and dense_gather_idx is None:
+            raise ValueError(
+                "dense_horizontal stripes need the dense-region gather index "
+                "to recompute weights (pass dense_gather_idx)")
         # verify=None: auto — on exactly when the manifest carries digests
         # (pre-checksum stores keep working, unverified).
         if verify is None:
@@ -126,33 +142,36 @@ class DiskBlockStore:
                 "(repro.store.ingest_edges now digests every shard)")
         self.verify = verify
         self._sums = ([self.manifest.stripe_checksums(striping, w)
-                       for w in range(b)] if verify else None)
+                       for w in self.workers] if verify else None)
         self._algo = self.manifest.checksum_algorithm
         self._mm = [self.manifest.stripe_arrays(striping, w, mmap=True)
-                    for w in range(b)]
+                    for w in self.workers]
         # counts are [b] int32 per worker — tiny; keep them resident so the
         # schedule can skip empty blocks without touching the edge shards.
         # They (and the degree array the weights derive from) are read ONCE,
         # so verify them here rather than per fetch.
         self._cnt = np.stack([np.asarray(mm[2]) for mm in self._mm])  # [b_w, b]
         if self.verify:
-            for w in range(b):
-                expected = self._sums[w]["cnt"]
-                actual = fmt.checksum_array(self._cnt[w], self._algo)
+            for wi, w in enumerate(self.workers):
+                expected = self._sums[wi]["cnt"]
+                actual = fmt.checksum_array(self._cnt[wi], self._algo)
                 if actual != expected:
                     raise ShardCorruptError(
                         fmt.stripe_path(self.manifest.root, striping, w, "cnt"),
                         array="cnt", worker=w,
                         expected=expected, actual=actual)
             self.manifest.verify_array("out_deg")
-            self.manifest.verify_array("nnz")
+            self.manifest.verify_array(fmt.nnz_array_of(striping))
         self.out_deg = np.asarray(self.manifest.array("out_deg"))
-        self.block_nnz = np.asarray(self.manifest.array("nnz"))
-        self.total_bytes = self.manifest.total_shard_bytes(striping)
+        self.block_nnz = np.asarray(
+            self.manifest.array(fmt.nnz_array_of(striping)))
+        self.e_cap = self.manifest.e_cap_of(striping)
+        frac = len(self.workers) / b
+        self.total_bytes = int(self.manifest.total_shard_bytes(striping) * frac)
         # RESIDENT bytes per fetched slice: seg + gat read from disk plus the
         # recomputed weight array when the spec needs one (in RAM, not read).
         self.slice_bytes = cost_model.stripe_slice_bytes(
-            b, self.manifest.e_cap, has_w=spec.needs_weights)
+            len(self.workers), self.e_cap, has_w=spec.needs_weights)
         self.budget_bytes = budget_bytes
         if budget_bytes is not None and 2 * self.slice_bytes > budget_bytes:
             raise ValueError(
@@ -165,13 +184,19 @@ class DiskBlockStore:
     def begin_iteration(self) -> None:
         self.stats = ResidencyStats()
 
+    def make_pipeline(self, schedule, retry: RetryPolicy = DEFAULT_RETRY):
+        """The prefetch pipeline serving this store (the SPMD store group
+        overrides this with its fan-out pipeline — executors stay
+        residency-agnostic by always going through it)."""
+        return PrefetchPipeline(self, schedule, retry)
+
     def _verify_rows(self, k: int, seg: np.ndarray, gat: np.ndarray) -> None:
         """Check the fetched rows against the manifest's per-row digests;
         raises ShardCorruptError naming the exact shard file / worker /
         block row on the first mismatch."""
-        for w in range(self.manifest.b):
-            sums = self._sums[w]
-            for name, arr in (("seg", seg[w]), ("gat", gat[w])):
+        for wi, w in enumerate(self.workers):
+            sums = self._sums[wi]
+            for name, arr in (("seg", seg[wi]), ("gat", gat[wi])):
                 expected = sums[name][k]
                 actual = fmt.checksum_array(arr, self._algo)
                 if actual != expected:
@@ -191,103 +216,166 @@ class DiskBlockStore:
         ``OSError`` on I/O failure — both retryable (the caller's
         RetryPolicy re-fetches; transient corruption reads clean the second
         time, persistent corruption keeps the precise diagnosis)."""
-        b = self.manifest.b
         if self.faults is not None:
-            self.faults.on_fetch(k)          # may raise InjectedIOError
+            # may raise InjectedIOError; scoped so an injector shared across
+            # per-host worker stores fires only on its targeted worker
+            self.faults.on_fetch(k, scope=self.fault_scope)
         with self.obs.span("store.fetch") as sp:
-            seg = np.stack([np.asarray(self._mm[w][0][k]) for w in range(b)])
-            gat = np.stack([np.asarray(self._mm[w][1][k]) for w in range(b)])
+            seg = np.stack([np.asarray(mm[0][k]) for mm in self._mm])
+            gat = np.stack([np.asarray(mm[1][k]) for mm in self._mm])
             cnt = self._cnt[:, k]
             if self.faults is not None:
                 # flips a scheduled byte BEFORE verification — a checksummed
                 # store must catch it, an unchecksummed one would be silently
                 # corrupted (which is the point of the checksums)
-                self.faults.corrupt_slice(k, {"seg": seg, "gat": gat})
+                self.faults.corrupt_slice(k, {"seg": seg, "gat": gat},
+                                          scope=self.fault_scope)
             if self.verify:
                 self._verify_rows(k, seg, gat)
-            w = None
-            if self.spec.needs_weights:
-                w = np.stack([
-                    row_weights(self.spec, self.part,
-                                wk if self.striping == "vertical" else k,
-                                gat[wk], cnt[wk], self.out_deg)
-                    for wk in range(b)])
+            w = self._row_weights(k, gat, cnt)
             read = seg.nbytes + gat.nbytes + cnt.nbytes
             sp.set("block", k)
             sp.set("bytes", read)
             sp.set("predicted_s", cost_model.disk_io_seconds(read))
         self.obs.counter("store.bytes_read").add(read)
         self.obs.counter("store.blocks_fetched").add(1)
-        self.stats.bytes_read += read
-        self.stats.blocks_fetched += 1
         resident = read + (0 if w is None else w.nbytes)
         self.peak_resident_bytes = max(self.peak_resident_bytes, 2 * resident)
-        return {"seg": seg, "gat": gat, "w": w, "cnt": cnt}
+        return {"seg": seg, "gat": gat, "w": w, "cnt": cnt, "nbytes": read}
+
+    def _row_weights(self, k: int, gat: np.ndarray, cnt: np.ndarray):
+        """Per-spec matrix values for the fetched rows, recomputed host-side
+        exactly as partition time computes them (never stored).  Vertical
+        stripings read source block = the stripe's worker id; horizontal
+        reads source block = the fetched block k; dense_horizontal's gather
+        column holds compact dense SLOTS, resolved to local ids through the
+        dense-region gather index first."""
+        if not self.spec.needs_weights:
+            return None
+        if self.striping in ("vertical", "sparse_vertical"):
+            return np.stack([
+                row_weights(self.spec, self.part, w, gat[wi], cnt[wi],
+                            self.out_deg)
+                for wi, w in enumerate(self.workers)])
+        if self.striping == "dense_horizontal":
+            return np.stack([
+                row_weights_dense(self.spec, self.part, k, gat[wi], cnt[wi],
+                                  self.out_deg, self.dense_gather_idx)
+                for wi in range(len(self.workers))])
+        return np.stack([
+            row_weights(self.spec, self.part, k, gat[wi], cnt[wi],
+                        self.out_deg)
+            for wi in range(len(self.workers))])
 
 
-def _prefetched(store: DiskBlockStore, schedule: list[int],
-                retry: RetryPolicy = DEFAULT_RETRY):
-    """Iterate (block_id, slice) over the launch schedule, double-buffering
-    the NEXT scheduled block's fetch behind the current block's compute.
+class PrefetchPipeline:
+    """Double-buffered prefetch over an ENDLESSLY REPEATING launch schedule.
+
+    One pipeline lives as long as its executor: a cursor walks the schedule
+    modulo its length, keeping one fetch in flight behind the block being
+    computed.  After the last block of iteration *t* is handed out, the next
+    submit is iteration *t+1*'s FIRST block — the exchange/assign tail and
+    the convergence check of iteration *t* overlap the disk leg of *t+1*
+    (GraphD's overlap-I/O-with-everything discipline applied across the
+    iteration boundary, not just inside one pass).
 
     Every fetch runs under ``retry`` (bounded attempts, backoff + jitter,
     per-launch deadline) whether it happens on the prefetch thread or
-    inline.  If the prefetch THREAD fails — the pool refuses a submit or a
-    future dies of executor breakage rather than a fetch error — the loop
-    degrades to synchronous fetches for the rest of the iteration instead
-    of deadlocking or crashing the solve (``store.prefetch_degraded``
-    counts the downgrade).  Fetch errors that survive the retry budget
-    propagate typed (ShardCorruptError / OSError / FetchDeadlineError)."""
-    from concurrent.futures import BrokenExecutor, CancelledError
+    inline.  If the prefetch THREAD fails — the pool refuses a submit, a
+    future dies of executor breakage, or a ``BreakPrefetch`` fault is
+    scheduled — the pipeline degrades to synchronous fetches instead of
+    deadlocking or crashing the solve (``store.prefetch_degraded`` counts
+    the downgrade).  Fetch errors that survive the retry budget propagate
+    typed (ShardCorruptError / OSError / FetchDeadlineError).
 
-    stats = store.stats
-    obs = store.obs
+    I/O accounting happens at CONSUMPTION time into the store's *current*
+    ``ResidencyStats``: a slice prefetched during iteration *t* but consumed
+    by iteration *t+1* bills its bytes/io/wait to *t+1*, so per-iteration
+    records stay exact even though fetches cross the boundary.
+    """
 
-    def timed_fetch(k):
+    def __init__(self, store: DiskBlockStore, schedule: list[int],
+                 retry: RetryPolicy = DEFAULT_RETRY):
+        self.store = store
+        self.schedule = list(schedule)
+        self.retry = retry
+        self.obs = store.obs
+        self._ex = None
+        self._fut = None                 # (block, future) in flight
+        self._cursor = 0                 # next schedule position, mod len
+        self._sync = False
+        if self.schedule:
+            self._ex = ThreadPoolExecutor(max_workers=1)
+        inj = store.faults
+        if inj is not None and inj.break_prefetch(store.fault_scope):
+            self._degrade()
+
+    def _degrade(self) -> None:
+        if not self._sync:
+            self._sync = True
+            self.obs.counter("store.prefetch_degraded").add(1)
+
+    def _timed_fetch(self, k: int):
         t0 = time.perf_counter()
-        sl = retry.call(lambda: store.fetch(k), obs=obs, label="fetch")
+        sl = self.retry.call(lambda: self.store.fetch(k), obs=self.obs,
+                             label="fetch")
         return sl, time.perf_counter() - t0
 
-    if not schedule:
-        return
-    sync = False
+    def _next_block(self) -> int:
+        k = self.schedule[self._cursor % len(self.schedule)]
+        self._cursor += 1
+        return k
 
-    def degrade() -> None:
-        nonlocal sync
-        if not sync:
-            sync = True
-            obs.counter("store.prefetch_degraded").add(1)
+    def _submit(self) -> None:
+        if self._sync or self._fut is not None or self._ex is None:
+            return
+        k = self.schedule[self._cursor % len(self.schedule)]
+        try:
+            fut = self._ex.submit(self._timed_fetch, k)
+        except RuntimeError:     # pool shut down / cannot take work
+            self._degrade()
+            return
+        self._cursor += 1
+        self._fut = (k, fut)
 
-    with ThreadPoolExecutor(max_workers=1) as ex:
-        def submit(k):
-            if sync:
-                return None
-            try:
-                return ex.submit(timed_fetch, k)
-            except RuntimeError:     # pool shut down / interpreter teardown
-                degrade()
-                return None
+    def iteration(self):
+        """Yield (block, slice) for ONE pass over the schedule."""
+        from concurrent.futures import BrokenExecutor, CancelledError
 
-        fut = submit(schedule[0])
-        for t, k in enumerate(schedule):
+        obs = self.obs
+        for _ in range(len(self.schedule)):
+            self._submit()
             t0 = time.perf_counter()
             with obs.span("store.wait"):
-                if fut is None:
-                    sl, io_s = timed_fetch(k)
+                if self._fut is None:
+                    k = self._next_block()
+                    sl, io_s = self._timed_fetch(k)
                 else:
+                    k, fut = self._fut
+                    self._fut = None
                     try:
                         sl, io_s = fut.result()
                     except (BrokenExecutor, CancelledError):
-                        degrade()
-                        sl, io_s = timed_fetch(k)
+                        self._degrade()
+                        sl, io_s = self._timed_fetch(k)
             wait = time.perf_counter() - t0
+            stats = self.store.stats     # the CURRENT iteration's record
             stats.wait_s += wait
             stats.io_s += io_s
+            stats.bytes_read += sl["nbytes"]
+            stats.blocks_fetched += 1
             obs.counter("store.io_s").add(io_s)
             obs.counter("store.wait_s").add(wait)
-            if t + 1 < len(schedule):
-                fut = submit(schedule[t + 1])
+            self._submit()               # may cross into the next iteration
             yield k, sl
+
+    def close(self) -> None:
+        self._fut = None
+        shutdown = getattr(self._ex, "shutdown", None)
+        if shutdown is not None:
+            shutdown(wait=False, cancel_futures=True)
+        self._ex = None
+        self._sync = True
 
 
 class DiskExecutor:
@@ -338,6 +426,27 @@ class DiskExecutor:
         self._launch_attrs = {
             k: plan.launch_attrs(k, axis=axis) for k in self.schedule}
         self._jits: dict = {}
+        self._pipeline: PrefetchPipeline | None = None
+
+    def _prefetched(self):
+        """One schedule pass off the executor's persistent prefetch pipeline
+        (created lazily; survives across iterations so the tail of iteration
+        t overlaps the first fetch of t+1).  Built by the store itself, so a
+        per-worker SPMD store group transparently substitutes its fan-out
+        pipeline."""
+        if self._pipeline is None:
+            self._pipeline = self.store.make_pipeline(self.schedule,
+                                                      self.retry)
+        return self._pipeline.iteration()
+
+    def _begin_iteration(self) -> None:
+        self.store.begin_iteration()
+        self.store.stats.blocks_skipped = self.skipped
+
+    def close(self) -> None:
+        if self._pipeline is not None:
+            self._pipeline.close()
+            self._pipeline = None
 
     # -- jitted bodies (built per (batched,) signature, cached) ----------
     def _vertical_block_fn(self):
@@ -450,8 +559,7 @@ class DiskExecutor:
         destination block, partials gathered at the static send order (no
         (idx, val) compaction), then the payload-only scatter tail."""
         store = self.store
-        store.begin_iteration()
-        store.stats.blocks_skipped = self.skipped
+        self._begin_iteration()
         b, b_w = self.part.b, v.shape[0]
         tail_shape = v.shape[2:]
         block_fn = self._jit("vblock_packed", self._vertical_packed_block_fn)
@@ -459,7 +567,7 @@ class DiskExecutor:
         val_rows = [pay_pad] * b
         logical = jnp.zeros((), jnp.float32)
         obs = self.obs
-        for i, sl in _prefetched(store, self.schedule, self.retry):
+        for i, sl in self._prefetched():
             t0 = time.perf_counter()
             with obs.span("launch.disk_block", self._launch_attrs.get(i)):
                 val_i, lg_i = obs.fence(block_fn(
@@ -481,8 +589,7 @@ class DiskExecutor:
         if self.exchange == "packed":
             return self._vertical_iteration_packed(v, ctx, mask)
         store = self.store
-        store.begin_iteration()
-        store.stats.blocks_skipped = self.skipped
+        self._begin_iteration()
         b, b_w = self.part.b, v.shape[0]
         tail_shape = v.shape[2:]
         block_fn = self._jit("vblock", self._vertical_block_fn)
@@ -492,7 +599,7 @@ class DiskExecutor:
         over = jnp.zeros((), jnp.float32)
         logical = jnp.zeros((), jnp.float32)
         obs = self.obs
-        for i, sl in _prefetched(store, self.schedule, self.retry):
+        for i, sl in self._prefetched():
             t0 = time.perf_counter()
             with obs.span("launch.disk_block", self._launch_attrs.get(i)):
                 idx_i, val_i, ov_i, lg_i = obs.fence(block_fn(
@@ -508,28 +615,35 @@ class DiskExecutor:
         return v_new, r, delta, over, logical
 
     def horizontal_iteration(self, v, ctx, mask):
-        """One horizontal iteration streaming the gather per source block
-        (live buffer: one contribution [b_w, n_local(, Q)] + the running
-        combineAll fold — never the [b, n_local] gathered matrix)."""
+        """One horizontal iteration streaming the gather per source block.
+
+        Contributions are collected per source block as they come off disk
+        and folded ONCE, in block-index order, with the same pairwise tree
+        ``gathered_gimv`` uses (skipped blocks contribute the identity the
+        resident path computes for them) — so the result is bitwise the
+        resident horizontal step for every semiring, including plus_times,
+        no matter what order the launch schedule walked the blocks."""
         store = self.store
-        store.begin_iteration()
-        store.stats.blocks_skipped = self.skipped
+        self._begin_iteration()
         contrib_fn = self._jit("hcontrib", self._horizontal_contrib_fn)
-        r = jnp.full(v.shape, jnp.asarray(self.spec.identity, self.spec.dtype))
+        pad = jnp.full(v.shape, jnp.asarray(self.spec.identity, self.spec.dtype))
+        contribs: dict[int, jnp.ndarray] = {}
         obs = self.obs
-        for jj, sl in _prefetched(store, self.schedule, self.retry):
+        for jj, sl in self._prefetched():
             t0 = time.perf_counter()
             with obs.span("launch.disk_block", self._launch_attrs.get(jj)):
                 c = obs.fence(contrib_fn(sl["seg"], sl["gat"], sl["w"], sl["cnt"], v[jj]))
-            r = combine_elementwise(self.spec, r, c)
+            contribs[jj] = c
             store.stats.compute_s += time.perf_counter() - t0
+        r = tree_combine(self.spec,
+                         [contribs.get(jj, pad) for jj in range(self.part.b)])
         tail = self._jit("htail", self._horizontal_tail_fn)
         v_new, delta = tail(r, v, ctx, mask)
         return v_new, r, delta
 
     def io_stats(self) -> dict:
         s = self.store.stats
-        return {
+        out = {
             "store_bytes_read": np.float32(s.bytes_read),
             "store_blocks_fetched": np.float32(s.blocks_fetched),
             "store_blocks_skipped": np.float32(s.blocks_skipped),
@@ -537,6 +651,10 @@ class DiskExecutor:
             "store_wait_s": np.float32(s.wait_s),
             "store_overlap": np.float32(s.overlap),
         }
+        # SPMD store groups additionally expose per-worker breakdowns
+        # (store_worker_* lists) — forwarded so run() can chart each host.
+        out.update(getattr(self.store, "worker_io_stats", lambda: {})())
+        return out
 
     def iteration(self, v, ctx, mask):
         """One full out-of-core iteration (scalar or trailing-Q batched):
@@ -592,6 +710,205 @@ class DiskExecutor:
             }
         stats.update(self.io_stats())
         return v_new, delta, stats
+
+
+class HybridDiskExecutor(DiskExecutor):
+    """θ-split hybrid solve from disk (``strategy='hybrid'`` under
+    ``residency='disk'``).
+
+    Works over the TWO stripings the hybrid ingest persisted: the sparse
+    region's ``sparse_vertical`` stripes walk the vertical compact/exchange
+    path per destination block, the dense region's ``dense_horizontal``
+    stripes stream the gathered contribution per SOURCE block against the
+    compact dense slice ``v_d = take_along_axis(v, gather_idx)`` — the exact
+    two legs the resident ``hybrid_step`` fuses, combined elementwise
+    sparse-first before the assign, so the result is bitwise the resident
+    hybrid step.  Each leg owns its own prefetch pipeline; the dense leg
+    runs first, so its next-iteration prefetch overlaps the entire sparse
+    leg on top of the usual block-to-block double buffering.
+    """
+
+    def __init__(self, spec: GimvSpec, part: Partition, sparse_store,
+                 dense_store, region, *, capacity: int,
+                 scatter: str = "segment", interpret: bool = False, obs=None,
+                 retry: RetryPolicy | None = None):
+        self.spec = spec
+        self.part = part
+        self.plan = None                    # structural schedule, no planner
+        self.sparse_store = sparse_store
+        self.dense_store = dense_store
+        self.store = sparse_store           # primary store for budget/peaks
+        self.region = region
+        self.capacity = capacity
+        self.cap_eff = min(capacity, part.n_local)
+        self.scatter = scatter
+        self.interpret = interpret
+        self.obs = as_recorder(obs)
+        self.retry = retry if retry is not None else DEFAULT_RETRY
+        self.exchange = "sparse"
+        b = part.b
+        nnz_s = sparse_store.block_nnz      # [dst, src]
+        nnz_d = dense_store.block_nnz
+        self.schedule = [i for i in range(b) if nnz_s[i, :].any()]
+        self.dense_schedule = [jj for jj in range(b) if nnz_d[:, jj].any()]
+        self.skipped = b - len(self.schedule)
+        self.dense_skipped = b - len(self.dense_schedule)
+        self._launch_attrs: dict = {}
+        self._jits: dict = {}
+        self._pipeline: PrefetchPipeline | None = None       # sparse leg
+        self._dense_pipeline: PrefetchPipeline | None = None
+
+    def _begin_iteration(self) -> None:
+        self.sparse_store.begin_iteration()
+        self.sparse_store.stats.blocks_skipped = self.skipped
+        self.dense_store.begin_iteration()
+        self.dense_store.stats.blocks_skipped = self.dense_skipped
+
+    def _dense_prefetched(self):
+        if self._dense_pipeline is None:
+            self._dense_pipeline = self.dense_store.make_pipeline(
+                self.dense_schedule, self.retry)
+        return self._dense_pipeline.iteration()
+
+    def close(self) -> None:
+        super().close()
+        if self._dense_pipeline is not None:
+            self._dense_pipeline.close()
+            self._dense_pipeline = None
+
+    def _dense_gather_fn(self):
+        gidx = jnp.asarray(self.region.gather_idx)
+
+        @jax.jit
+        def vd_fn(v):
+            g = gidx if v.ndim == 2 else gidx[:, :, None]
+            return jnp.take_along_axis(v, g, axis=1)
+
+        return vd_fn
+
+    def _hybrid_tail_fn(self):
+        spec, n_local = self.spec, self.part.n_local
+        scatter, interpret = self.scatter, self.interpret
+
+        @jax.jit
+        def tail(idx, val, r_dense, v, ctx, mask):
+            idx_x = jnp.swapaxes(idx, 0, 1)
+            val_x = jnp.swapaxes(val, 0, 1)
+            r_sparse = sparse_exchange.scatter_partials(
+                spec, idx_x.astype(jnp.int32), val_x.astype(spec.dtype),
+                n_local, method=scatter, interpret=interpret)
+            r = combine_elementwise(spec, r_sparse, r_dense)
+            v_new = jax.vmap(partial(placement.apply_assign, spec))(v, r, ctx, mask)
+            return v_new, r, spec.default_delta(v, v_new)
+
+        return tail
+
+    def iteration(self, v, ctx, mask):
+        """One full hybrid out-of-core iteration: dense gathered leg
+        streamed per source block, sparse compact/exchange leg per
+        destination block, one combined tail.  Stats mirror the resident
+        hybrid_step's keys plus the store_* I/O accounting over BOTH legs."""
+        self._begin_iteration()
+        b, b_w = self.part.b, v.shape[0]
+        nq = v.shape[-1] if v.ndim == 3 else None
+        vb = jnp.dtype(self.spec.dtype).itemsize
+        tail_shape = v.shape[2:]
+        obs = self.obs
+
+        # dense leg first — its pipeline's next-iteration prefetch then
+        # overlaps the whole sparse leg below.
+        vd_fn = self._jit("vd", self._dense_gather_fn)
+        v_d = vd_fn(v)
+        contrib_fn = self._jit("hcontrib", self._horizontal_contrib_fn)
+        pad = jnp.full(v.shape, jnp.asarray(self.spec.identity, self.spec.dtype))
+        contribs: dict[int, jnp.ndarray] = {}
+        for jj, sl in self._dense_prefetched():
+            t0 = time.perf_counter()
+            with obs.span("launch.disk_block", self._launch_attrs.get(jj)):
+                c = obs.fence(contrib_fn(
+                    sl["seg"], sl["gat"], sl["w"], sl["cnt"], v_d[jj]))
+            contribs[jj] = c
+            self.dense_store.stats.compute_s += time.perf_counter() - t0
+        r_dense = tree_combine(
+            self.spec, [contribs.get(jj, pad) for jj in range(b)])
+
+        # sparse leg: per-destination-block compact compute, as vertical.
+        block_fn = self._jit("vblock", self._vertical_block_fn)
+        idx_pad, val_pad = self._identity_compact(b_w, tail_shape)
+        idx_rows = [idx_pad] * b
+        val_rows = [val_pad] * b
+        over = jnp.zeros((), jnp.float32)
+        logical = jnp.zeros((), jnp.float32)
+        for i, sl in self._prefetched():
+            t0 = time.perf_counter()
+            with obs.span("launch.disk_block", self._launch_attrs.get(i)):
+                idx_i, val_i, ov_i, lg_i = obs.fence(block_fn(
+                    sl["seg"], sl["gat"], sl["w"], sl["cnt"], v))
+            idx_rows[i], val_rows[i] = idx_i, val_i
+            over = over + jnp.sum(ov_i)
+            logical = logical + jnp.sum(lg_i)
+            self.sparse_store.stats.compute_s += time.perf_counter() - t0
+        idx = jnp.stack(idx_rows, axis=1)          # [b_w, b, cap]
+        val = jnp.stack(val_rows, axis=1)
+        tail = self._jit("hybrid_tail", self._hybrid_tail_fn)
+        v_new, _r, delta = tail(idx, val, r_dense, v, ctx, mask)
+
+        d_cap = self.region.d_cap
+        id_b, pay_b = sparse_exchange.exchange_wire_split(
+            b, self.capacity, nq, vb)
+        stats = {  # GLOBAL elements per iteration, as resident hybrid_step
+            "gathered_elems": jnp.asarray(
+                b * (b - 1) * d_cap * (nq or 1), jnp.float32),
+            "exchanged_elems": jnp.asarray(
+                b * (b - 1) * self.capacity * (1 + (nq or 1)), jnp.float32),
+            "gathered_bytes": jnp.asarray(
+                b * (b - 1) * d_cap * (nq or 1) * vb, jnp.float32),
+            "exchanged_bytes": jnp.asarray(
+                sparse_exchange.exchange_wire_bytes(
+                    b, self.capacity, nq, vb), jnp.float32),
+            "exchange_id_bytes": jnp.asarray(id_b, jnp.float32),
+            "exchange_payload_bytes": jnp.asarray(pay_b, jnp.float32),
+            "logical_elems": logical,
+            "overflow": over,
+        }
+        stats.update(self.io_stats())
+        return v_new, delta, stats
+
+    def io_stats(self) -> dict:
+        ss, ds = self.sparse_store.stats, self.dense_store.stats
+        io_s = ss.io_s + ds.io_s
+        wait_s = ss.wait_s + ds.wait_s
+        out = {
+            "store_bytes_read": np.float32(ss.bytes_read + ds.bytes_read),
+            "store_blocks_fetched": np.float32(
+                ss.blocks_fetched + ds.blocks_fetched),
+            "store_blocks_skipped": np.float32(
+                ss.blocks_skipped + ds.blocks_skipped),
+            "store_io_s": np.float32(io_s),
+            "store_wait_s": np.float32(wait_s),
+            "store_overlap": np.float32(
+                1.0 if io_s <= 0.0 else max(0.0, 1.0 - wait_s / io_s)),
+        }
+        sw = getattr(self.sparse_store, "worker_io_stats", lambda: {})()
+        dw = getattr(self.dense_store, "worker_io_stats", lambda: {})()
+        if sw and dw:
+            wio = [a + c for a, c in zip(sw["store_worker_io_s"],
+                                         dw["store_worker_io_s"])]
+            wwait = [a + c for a, c in zip(sw["store_worker_wait_s"],
+                                           dw["store_worker_wait_s"])]
+            out.update({
+                "store_worker_bytes_read": [
+                    a + c for a, c in zip(sw["store_worker_bytes_read"],
+                                          dw["store_worker_bytes_read"])],
+                "store_worker_io_s": wio,
+                "store_worker_wait_s": wwait,
+                "store_worker_overlap": [
+                    1.0 if i <= 0.0 else max(0.0, 1.0 - w / i)
+                    for w, i in zip(wwait, wio)],
+            })
+        else:
+            out.update(sw or dw)
+        return out
 
 
 def make_disk_step(spec: GimvSpec, executor: DiskExecutor):

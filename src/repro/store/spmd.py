@@ -1,0 +1,199 @@
+"""Multi-host SPMD view over the out-of-core block store.
+
+One :class:`SpmdDiskGroup` binds W per-worker shard views of one ingested
+store to the W devices of a mesh (emulated hosts under
+``--xla_force_host_platform_device_count``, real hosts under
+``jax.distributed``).  Each worker's :class:`DiskBlockStore` opens ONLY its
+owned stripe files (``Manifest.worker_shard_view``), enforces its OWN
+residency budget, and runs its OWN double-buffered prefetch thread; the
+group's :class:`SpmdPrefetchPipeline` walks all W pipelines in lockstep over
+the shared launch schedule and reassembles each scheduled block's full
+[b, E_cap] slice from the per-worker [b/W, E_cap] rows, device_put with the
+mesh sharding so every row lands on the device whose host read it.
+
+The disk executors never know the difference: the group quacks like a
+DiskBlockStore (``block_nnz`` / ``stats`` / ``begin_iteration`` /
+``make_pipeline``), so the same ``DiskExecutor`` / ``HybridDiskExecutor``
+code runs single-host and SPMD — which is exactly why the SPMD result is
+bitwise the single-host one (same slices, same jaxprs, same fold order;
+GSPMD only partitions the already-order-fixed per-block kernels).
+
+Aggregate I/O accounting sums bytes/io/wait across workers (the fleet's
+work) but takes ``blocks_fetched`` as the per-worker MAX of logical blocks,
+so ``fetched + skipped == b`` keeps holding for schedules and dashboards.
+Per-worker breakdowns come back through ``worker_io_stats()`` as
+``store_worker_*`` lists.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core.gimv import GimvSpec
+from repro.faults import DEFAULT_RETRY, RetryPolicy, as_injector
+from repro.obs import as_recorder
+from repro.store.manifest import open_store
+from repro.store.residency import DiskBlockStore
+
+__all__ = ["SpmdDiskGroup", "SpmdPrefetchPipeline"]
+
+
+class _GroupStats:
+    """ResidencyStats facade over a worker group: reads aggregate live from
+    the per-worker stores; ``compute_s`` / ``blocks_skipped`` stay settable
+    because the executor owns those (compute is the mesh's single program,
+    not a per-worker quantity)."""
+
+    def __init__(self, group: "SpmdDiskGroup"):
+        self._group = group
+        self.compute_s = 0.0
+        self.blocks_skipped = 0
+
+    def _worker_stats(self):
+        return [s.stats for s in self._group.stores]
+
+    @property
+    def bytes_read(self) -> int:
+        return sum(s.bytes_read for s in self._worker_stats())
+
+    @property
+    def blocks_fetched(self) -> int:
+        # logical blocks: every worker fetches its rows of the same block
+        return max((s.blocks_fetched for s in self._worker_stats()), default=0)
+
+    @property
+    def io_s(self) -> float:
+        return sum(s.io_s for s in self._worker_stats())
+
+    @property
+    def wait_s(self) -> float:
+        return sum(s.wait_s for s in self._worker_stats())
+
+    @property
+    def overlap(self) -> float:
+        io_s = self.io_s
+        if io_s <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.wait_s / io_s)
+
+
+class SpmdDiskGroup:
+    """W per-worker shard-view stores presented as ONE DiskBlockStore-shaped
+    object, slices device_put with the mesh sharding."""
+
+    def __init__(self, stores: list[DiskBlockStore], mesh, axis_name: str):
+        if not stores:
+            raise ValueError("SpmdDiskGroup needs at least one worker store")
+        self.stores = stores
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.manifest = stores[0].manifest
+        self.striping = stores[0].striping
+        self.spec = stores[0].spec
+        self.obs = stores[0].obs
+        self.block_nnz = stores[0].block_nnz
+        self.e_cap = stores[0].e_cap
+        # whole-slice / whole-store quantities: the per-worker parts sum to
+        # exactly the single-host figures (workers partition the stripes).
+        self.slice_bytes = sum(s.slice_bytes for s in stores)
+        self.total_bytes = sum(s.total_bytes for s in stores)
+        self.budget_bytes = stores[0].budget_bytes     # PER-WORKER budget
+        self.stats = _GroupStats(self)
+
+    @classmethod
+    def build(cls, store, striping: str, spec: GimvSpec, mesh,
+              axis_name: str, *, budget_bytes: int | None = None, obs=None,
+              faults=None, verify: bool | None = None,
+              dense_gather_idx=None) -> "SpmdDiskGroup":
+        """One shard-view store per mesh device over a single shared store
+        directory (no bytes move).  ``budget_bytes`` is PER WORKER —
+        each host budgets its own double buffer.  A shared fault injector is
+        scoped per worker, so targeted faults hit exactly the worker they
+        name."""
+        manifest = open_store(store)
+        count = int(np.prod(mesh.devices.shape))
+        if manifest.b % count != 0:
+            raise ValueError(
+                f"mesh size {count} must divide b={manifest.b} so each "
+                "worker owns a whole stripe range")
+        recorder = as_recorder(obs)
+        injector = as_injector(faults, recorder)
+        stores = [
+            DiskBlockStore(manifest.worker_shard_view(w, count), striping,
+                           spec, budget_bytes=budget_bytes, obs=recorder,
+                           faults=injector, verify=verify, fault_scope=w,
+                           dense_gather_idx=dense_gather_idx)
+            for w in range(count)
+        ]
+        return cls(stores, mesh, axis_name)
+
+    @property
+    def peak_resident_bytes(self) -> int:
+        return max(s.peak_resident_bytes for s in self.stores)
+
+    def begin_iteration(self) -> None:
+        for s in self.stores:
+            s.begin_iteration()
+        self.stats.compute_s = 0.0
+        self.stats.blocks_skipped = 0
+
+    def make_pipeline(self, schedule, retry: RetryPolicy = DEFAULT_RETRY):
+        return SpmdPrefetchPipeline(self, schedule, retry)
+
+    def worker_io_stats(self) -> dict:
+        stats = [s.stats for s in self.stores]
+        return {
+            "store_worker_bytes_read": [float(s.bytes_read) for s in stats],
+            "store_worker_io_s": [float(s.io_s) for s in stats],
+            "store_worker_wait_s": [float(s.wait_s) for s in stats],
+            "store_worker_overlap": [float(s.overlap) for s in stats],
+        }
+
+
+class SpmdPrefetchPipeline:
+    """W per-worker PrefetchPipelines walked in lockstep: iteration *t*'s
+    exchange/assign tail overlaps every worker's disk leg of *t+1*, exactly
+    as single-host, but each worker only reads (and budgets) its own rows.
+
+    A worker whose prefetch thread breaks degrades ALONE — the other
+    workers keep double-buffering, and the group keeps yielding assembled
+    slices (that worker's rows just arrive synchronously)."""
+
+    def __init__(self, group: SpmdDiskGroup, schedule,
+                 retry: RetryPolicy = DEFAULT_RETRY):
+        self.group = group
+        self.schedule = list(schedule)
+        self.retry = retry
+        self._pipes = [s.make_pipeline(self.schedule, retry)
+                       for s in group.stores]
+        self._sharding = NamedSharding(group.mesh,
+                                       PartitionSpec(group.axis_name))
+
+    def _assemble(self, slices: list[dict]) -> dict:
+        sh = self._sharding
+        seg = np.concatenate([sl["seg"] for sl in slices], axis=0)
+        gat = np.concatenate([sl["gat"] for sl in slices], axis=0)
+        cnt = np.concatenate([sl["cnt"] for sl in slices], axis=0)
+        w = (None if slices[0]["w"] is None
+             else np.concatenate([sl["w"] for sl in slices], axis=0))
+        return {
+            "seg": jax.device_put(seg, sh),
+            "gat": jax.device_put(gat, sh),
+            "cnt": jax.device_put(cnt, sh),
+            "w": None if w is None else jax.device_put(w, sh),
+            "nbytes": sum(sl["nbytes"] for sl in slices),
+        }
+
+    def iteration(self):
+        """Yield (block, assembled slice) for ONE pass over the schedule."""
+        gens = [p.iteration() for p in self._pipes]
+        for _ in range(len(self.schedule)):
+            parts = [next(g) for g in gens]
+            k = parts[0][0]
+            yield k, self._assemble([sl for _k, sl in parts])
+
+    def close(self) -> None:
+        for p in self._pipes:
+            p.close()

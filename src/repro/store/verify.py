@@ -75,7 +75,12 @@ def verify_store(store) -> VerifyReport:
         report.skipped = True
         return report
 
-    for name in _WHOLE_ARRAYS:
+    whole = _WHOLE_ARRAYS + (("sparse_nnz", "dense_nnz")
+                             if manifest.hybrid is not None else ())
+    # Per-host shard manifests (worker_shard) only hold their own stripe
+    # files — audit exactly the owned workers so a shard verifies clean.
+    owned = list(manifest.owned_workers())
+    for name in whole:
         expected = manifest.checksums.get("arrays", {}).get(name)
         if expected is None:
             continue
@@ -86,8 +91,8 @@ def verify_store(store) -> VerifyReport:
         _check(report, f"{path} [{name}]",
                expected, fmt.checksum_array(np.asarray(manifest.array(name)), algo))
 
-    for striping in ("vertical", "horizontal"):
-        for w in range(manifest.b):
+    for striping in manifest.stripings():
+        for w in owned:
             sums = manifest.stripe_checksums(striping, w)
             if sums is None:
                 continue
@@ -108,7 +113,7 @@ def verify_store(store) -> VerifyReport:
 
     pidx_sums = manifest.checksums.get("pidx")
     if pidx_sums:
-        for w in range(manifest.b):
+        for w in owned:
             paths = {a: fmt.pidx_path(manifest.root, w, a)
                      for a in fmt.PIDX_ARRAYS}
             if any(not os.path.exists(p) for p in paths.values()):

@@ -165,7 +165,7 @@ def test_random_plan_counts_and_determinism():
     plan = FaultPlan.random(42, blocks=range(B), n_corrupt=1, n_transient=2,
                             n_slow=1, kill_at=3)
     assert plan.counts() == {"corrupt_fetch": 1, "transient_io": 2,
-                             "slow_fetch": 1, "kill": 1}
+                             "slow_fetch": 1, "break_prefetch": 0, "kill": 1}
     assert plan == FaultPlan.random(42, blocks=range(B), n_corrupt=1,
                                     n_transient=2, n_slow=1, kill_at=3)
     assert as_injector(None) is None

@@ -111,8 +111,9 @@ def test_disk_skips_empty_destination_blocks(tmp_path):
 
 def test_disk_horizontal_streams_the_gather(graph, store_dir):
     """Streamed horizontal gather (ROADMAP follow-up): per-source-block scan
-    from disk — exact for the selection semirings, allclose for plus_times
-    (the sequential combineAll fold reorders float adds)."""
+    from disk is bitwise the resident gather for EVERY semiring — the
+    per-block contributions fold through the same pairwise tree the resident
+    ``gathered_gimv`` uses, so even float plus_times is exact."""
     e_dev = PMVEngine(graph, N, b=B, strategy="horizontal")
     e_disk = PMVEngine(None, store=store_dir, residency="disk",
                        strategy="horizontal")
@@ -123,7 +124,7 @@ def test_disk_horizontal_streams_the_gather(graph, store_dir):
     e_disk2 = PMVEngine(None, store=store_dir, residency="disk",
                         strategy="horizontal")
     r1 = e_disk2.run(pagerank(N), max_iters=6, tol=0.0)
-    np.testing.assert_allclose(r0.v, r1.v, rtol=1e-5, atol=1e-7)
+    np.testing.assert_array_equal(r0.v, r1.v)   # plus_times: exact too
     assert r1.per_iter[-1]["gathered_elems"] == r0.per_iter[-1]["gathered_elems"]
 
 
@@ -192,7 +193,9 @@ def test_host_residency_keeps_stripes_on_host(graph, store_dir):
 
 
 def test_disk_unsupported_configurations_raise(graph, store_dir):
-    with pytest.raises(NotImplementedError, match="hybrid"):
+    # hybrid out of core needs the θ-split shards ingest_edges(theta=...)
+    # writes; a theta-less store names the re-ingest precisely.
+    with pytest.raises(ValueError, match="re-ingest"):
         PMVEngine(None, store=store_dir, residency="disk",
                   strategy="hybrid", theta=4.0).prepare(pagerank(N))
     with pytest.raises(ValueError, match="pallas"):
@@ -204,3 +207,65 @@ def test_disk_unsupported_configurations_raise(graph, store_dir):
     with pytest.raises(ValueError, match="budget"):
         DiskBlockStore(open_store(store_dir), "vertical", pagerank(N),
                        budget_bytes=8)
+
+
+@pytest.fixture(scope="module")
+def hybrid_store_dir(graph, tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("store_hyb") / "s")
+    ingest_edges(graph, N, B, root, chunk_edges=333, theta=4.0)
+    return root
+
+
+@pytest.mark.parametrize("name,mk", [
+    ("pagerank", lambda: pagerank(N)),
+    ("sssp", lambda: sssp(0)),
+])
+def test_disk_hybrid_bitwise(name, mk, graph, hybrid_store_dir):
+    """strategy='hybrid' under residency='disk' runs from the θ-split shards
+    and is bitwise the resident hybrid step (sparse compact exchange +
+    streamed dense gather, combined elementwise)."""
+    spec = mk()
+    r0 = PMVEngine(graph, N, b=B, strategy="hybrid", theta=4.0).run(
+        mk(), max_iters=6, tol=0.0)
+    eng = PMVEngine(None, store=hybrid_store_dir, residency="disk",
+                    strategy="hybrid", theta=4.0)
+    r1 = eng.run(spec, max_iters=6, tol=0.0)
+    np.testing.assert_array_equal(r0.v, r1.v)
+    rec = r1.per_iter[-1]
+    assert rec["store_bytes_read"] > 0
+    assert rec["gathered_elems"] > 0 and rec["exchanged_elems"] > 0
+    # both legs' I/O is accounted: fetched + skipped spans BOTH stripings
+    assert rec["store_blocks_fetched"] + rec["store_blocks_skipped"] == 2 * B
+
+
+def test_disk_hybrid_theta_must_match_store(hybrid_store_dir):
+    with pytest.raises(ValueError, match="does not match"):
+        PMVEngine(None, store=hybrid_store_dir, residency="disk",
+                  strategy="hybrid", theta=9.0).prepare(pagerank(N))
+
+
+def test_disk_launch_order_is_bitwise_irrelevant(graph, store_dir,
+                                                 hybrid_store_dir):
+    """Reversing the prefetch launch schedule cannot change the result: the
+    streamed folds key every contribution by block index and reduce through
+    the fixed pairwise tree, never in arrival order (regression for the
+    order-independent fold)."""
+    spec = pagerank(N)
+    base = PMVEngine(None, store=store_dir, residency="disk",
+                     strategy="horizontal").run(spec, max_iters=5, tol=0.0)
+    eng = PMVEngine(None, store=store_dir, residency="disk",
+                    strategy="horizontal")
+    ex = eng.prepare(spec)[5]["executor"]
+    ex.schedule = list(reversed(ex.schedule))
+    rev = eng.run(spec, max_iters=5, tol=0.0)
+    np.testing.assert_array_equal(base.v, rev.v)
+
+    base = PMVEngine(None, store=hybrid_store_dir, residency="disk",
+                     strategy="hybrid", theta=4.0).run(spec, max_iters=5, tol=0.0)
+    eng = PMVEngine(None, store=hybrid_store_dir, residency="disk",
+                    strategy="hybrid", theta=4.0)
+    ex = eng.prepare(spec)[5]["executor"]
+    ex.schedule = list(reversed(ex.schedule))
+    ex.dense_schedule = list(reversed(ex.dense_schedule))
+    rev = eng.run(spec, max_iters=5, tol=0.0)
+    np.testing.assert_array_equal(base.v, rev.v)
