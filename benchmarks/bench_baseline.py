@@ -1,0 +1,92 @@
+"""Calibration drift gate: diff a fresh BENCH_obs.json against a committed
+baseline.
+
+CI regenerates BENCH_obs.json every run (obs_smoke); this script compares the
+fresh per-kind calibration ratios (measured / predicted seconds) against the
+repo's committed baseline and fails when any shared kind drifted by more than
+``--max-drift`` (default 2x in either direction) — catching both a real
+performance regression (ratio up) and a silently broken prediction join
+(ratio collapsing toward 0 or exploding).
+
+The per-kind ``ratio_median`` is compared when both sides carry one (the
+aggregate ratio folds every first-launch compile wall into the measured sum,
+so it swings wildly run to run; the median launch is stable); the aggregate
+``ratio`` is the fallback.  Compare like with like: the fresh document must
+come from the same generator/workload as the baseline (CI regenerates via
+``fig_obs_overhead.py --smoke``, which also wrote the committed file).
+
+Kinds present on only one side are reported but do not fail the gate: the
+baseline ages across hardware, and a newly added kind must be able to land
+before the baseline is refreshed (run with ``--update`` to rewrite it).
+
+Usage:
+    python benchmarks/bench_baseline.py FRESH.json --baseline BENCH_obs.json
+    python benchmarks/bench_baseline.py FRESH.json --baseline BENCH_obs.json --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+
+def compare(fresh: dict, baseline: dict, max_drift: float) -> list[str]:
+    failures = []
+    f_cal = fresh.get("calibration", {})
+    b_cal = baseline.get("calibration", {})
+    shared = sorted(set(f_cal) & set(b_cal))
+    for kind in shared:
+        key = ("ratio_median"
+               if f_cal[kind].get("ratio_median") and
+               b_cal[kind].get("ratio_median") else "ratio")
+        fr, br = f_cal[kind].get(key), b_cal[kind].get(key)
+        if not fr or not br or fr <= 0 or br <= 0:
+            print(f"  {kind:<14} skipped (ratio unavailable)")
+            continue
+        drift = fr / br
+        flag = "FAIL" if drift > max_drift or drift < 1.0 / max_drift else "ok"
+        print(f"  {kind:<14} baseline {br:8.2f}x  fresh {fr:8.2f}x"
+              f"  drift {drift:6.2f}x  {flag}  [{key}]")
+        if flag == "FAIL":
+            failures.append(
+                f"{kind}: ratio drifted {drift:.2f}x "
+                f"(baseline {br:.2f}x -> fresh {fr:.2f}x, limit {max_drift}x)")
+    for kind in sorted(set(f_cal) - set(b_cal)):
+        print(f"  {kind:<14} new (not in baseline)")
+    for kind in sorted(set(b_cal) - set(f_cal)):
+        print(f"  {kind:<14} missing from fresh run")
+    if not shared:
+        failures.append("no calibration kinds shared with the baseline")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated BENCH_obs.json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline BENCH_obs.json")
+    ap.add_argument("--max-drift", type=float, default=2.0,
+                    help="max allowed fresh/baseline ratio factor (default 2)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh over the baseline instead of gating")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if args.update:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    print(f"calibration drift vs {args.baseline}"
+          f" (limit {args.max_drift}x either way):")
+    failures = compare(fresh, baseline, args.max_drift)
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

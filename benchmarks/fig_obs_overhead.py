@@ -12,14 +12,20 @@ Two measurements feed the JSON:
   launch span's wall time against the planner's cost predictions —
   ``launch.ell`` / ``launch.dense`` from the standalone block profiler,
   ``launch.disk_block`` + ``store.fetch`` (disk_io) from a disk-residency
-  solve.  The per-kind ``ratio`` is the constant a self-calibrating cost
-  model (ROADMAP item 5) would fold into SLOT_TIME_S / DISK_READ_BW.
+  solve, and ``spmd_io`` / ``spmd_overlap`` from a W=4 SPMD disk solve (run
+  in a subprocess so the emulated multi-device mesh exists; the same gate
+  applies with per-worker trace shards enabled).  The per-kind ``ratio`` is
+  the constant a self-calibrating cost model (ROADMAP item 5) would fold
+  into SLOT_TIME_S / DISK_READ_BW.
 
 Usage: PYTHONPATH=src:. python benchmarks/fig_obs_overhead.py [--smoke]
 Writes BENCH_obs.json in the working directory.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 import tempfile
 import time
@@ -48,6 +54,23 @@ def _median_wall(engine_kwargs, edges, n, spec, solves) -> float:
         eng.run(spec, max_iters=ITERS, tol=0.0)
         walls.append(time.perf_counter() - t0)
     return float(np.median(walls))
+
+
+SPMD_WORKERS = 4
+
+
+def _spmd_series(smoke: bool) -> dict:
+    """W=4 SPMD disk series from the subprocess child (the mesh's emulated
+    device count must be set before jax imports, so not importable here)."""
+    child = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "spmd_obs_child.py")
+    cmd = [sys.executable, child, "--workers", str(SPMD_WORKERS)]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"spmd child failed:\n{proc.stderr}")
+    return json.loads(proc.stdout)
 
 
 def main(smoke: bool = False) -> int:
@@ -87,14 +110,25 @@ def main(smoke: bool = False) -> int:
                   strategy="vertical", obs=rec_disk).run(
             spec, max_iters=2 if smoke else ITERS, tol=0.0)
 
+    # -- SPMD: same overhead gate with per-worker trace shards enabled ------
+    spmd = _spmd_series(smoke)
+    overhead["spmd"] = {k: spmd[k] for k in
+                        ("workers", "wall_plain_s", "wall_obs_off_s",
+                         "wall_obs_on_s", "off_ratio", "on_ratio")}
+    print(f"overhead[spmd W={spmd['workers']}]:"
+          f" off {spmd['off_ratio']:.3f}x  on {spmd['on_ratio']:.3f}x")
+
     doc = bench_obs_doc(
         {"profile_ell": rec_ell, "profile_dense": rec_dense, "disk": rec_disk},
         overhead=overhead,
         meta={"n": N, "b": B, "m_sparse": M_SPARSE, "m_dense": M_DENSE,
-              "smoke": smoke})
+              "smoke": smoke},
+        extra_launches=spmd["launches"],
+        fleet=spmd["fleet"])
     write_bench_obs("BENCH_obs.json", doc)
 
-    missing = {"ell", "dense", "disk_block", "disk_io"} - set(doc["calibration"])
+    missing = ({"ell", "dense", "disk_block", "disk_io", "spmd_io",
+                "spmd_overlap"} - set(doc["calibration"]))
     for kind, s in doc["calibration"].items():
         print(f"calibration[{kind}]: {s['launches']} launches"
               f"  ratio {s['ratio']:.1f}x"
@@ -102,9 +136,16 @@ def main(smoke: bool = False) -> int:
     if missing:
         print(f"FAIL: calibration kinds missing: {sorted(missing)}")
         return 1
-    # the disabled recorder must not cost more than measurement noise
+    if not spmd["bitwise"]:
+        print("FAIL: SPMD traced solve != untraced solve")
+        return 1
+    # the disabled recorder must not cost more than measurement noise —
+    # single-host and SPMD alike (child shards must stay free when off)
     if overhead["off_ratio"] > 1.15:
         print(f"FAIL: obs-off overhead {overhead['off_ratio']:.3f}x > 1.15x")
+        return 1
+    if spmd["off_ratio"] > 1.15:
+        print(f"FAIL: SPMD obs-off overhead {spmd['off_ratio']:.3f}x > 1.15x")
         return 1
     print("wrote BENCH_obs.json")
     return 0

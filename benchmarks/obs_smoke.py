@@ -7,18 +7,26 @@ trace against the schema + span-nesting invariants, and writes the
 artifacts the CI job uploads:
 
     OBS_smoke/trace.json         resident + disk spans (load in Perfetto)
+    OBS_smoke/fleet_trace.json   merged SPMD trace, one lane per worker
     OBS_smoke/metrics.jsonl      metrics dump (one JSON object per metric)
     OBS_smoke/BENCH_obs.json     predicted-vs-measured calibration residuals
+                                 (incl. the spmd_io/spmd_overlap kinds and
+                                 the fleet straggler report)
+    OBS_smoke/openmetrics.txt    one live scrape of a telemetry-enabled
+                                 PMVServer's /metrics endpoint
     OBS_smoke/parity.json        bitwise parity + span inventory report
 
-Exits non-zero on parity failure, schema violation, nesting violation, or
-missing calibration kinds (ell / dense / disk_block / disk_io).
+Exits non-zero on parity failure, schema violation, nesting violation,
+missing calibration kinds (ell / dense / disk_block / disk_io / spmd_io /
+spmd_overlap), a malformed merged SPMD trace, or a bad scrape.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
+import urllib.request
 
 import numpy as np
 
@@ -97,11 +105,62 @@ def main(out_root: str = "OBS_smoke") -> int:
         json.dump(doc, f)
     rec.write_metrics_jsonl(os.path.join(out_root, "metrics.jsonl"))
 
+    # -- SPMD: traced W=4 solve, merged per-worker-lane trace ---------------
+    child = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "spmd_obs_child.py")
+    spmd = None
+    try:
+        proc = subprocess.run(
+            [sys.executable, child, "--workers", "4", "--smoke"],
+            capture_output=True, text=True, timeout=1800)
+        if proc.returncode != 0:
+            raise RuntimeError(proc.stderr[-2000:])
+        spmd = json.loads(proc.stdout)
+        if not spmd["bitwise"]:
+            failures.append("spmd traced result != untraced result")
+        expect = ["main", "w0", "w1", "w2", "w3"]
+        if spmd["lanes"] != expect:
+            failures.append(f"spmd lanes {spmd['lanes']} != {expect}")
+        with open(os.path.join(out_root, "fleet_trace.json"), "w") as f:
+            json.dump(spmd["trace"], f)
+    except Exception as e:  # noqa: BLE001 - report, don't crash the smoke
+        failures.append(f"spmd series: {e}")
+
+    # -- live telemetry: serve a few queries, scrape /metrics ---------------
+    try:
+        from repro.obs.live import TelemetryConfig
+        from repro.serving import PMVServer, Query
+
+        srv = PMVServer(edges, n, b=B, strategy="vertical", buckets=(4,),
+                        obs=True,
+                        telemetry=TelemetryConfig(latency_target_s=60.0))
+        try:
+            srv.serve([Query("rwr", source=i, tol=1e-6, deadline_s=120.0)
+                       for i in range(3)])
+            with urllib.request.urlopen(srv.telemetry.url + "/metrics",
+                                        timeout=30) as resp:
+                scrape = resp.read().decode()
+            with open(os.path.join(out_root, "openmetrics.txt"), "w") as f:
+                f.write(scrape)
+            slo = srv.stats()["slo"]
+            if "pmv_serve_retired_total 3.0" not in scrape:
+                failures.append("openmetrics scrape missing retirements")
+            if not scrape.endswith("# EOF\n"):
+                failures.append("openmetrics scrape not terminated")
+            if slo["latency"]["total"]["events"] != 3:
+                failures.append(f"slo ledger mismatch: {slo['latency']}")
+        finally:
+            srv.close()
+    except Exception as e:  # noqa: BLE001
+        failures.append(f"telemetry scrape: {e}")
+
     bench = bench_obs_doc({"smoke": rec},
-                          meta={"n": n, "b": B, "m": M_EDGES, "iters": ITERS})
+                          meta={"n": n, "b": B, "m": M_EDGES, "iters": ITERS},
+                          extra_launches=spmd["launches"] if spmd else None,
+                          fleet=spmd["fleet"] if spmd else None)
     write_bench_obs(os.path.join(out_root, "BENCH_obs.json"), bench)
-    missing = ({"ell", "dense", "disk_block", "disk_io"}
-               - set(bench["calibration"]))
+    missing = ({"ell", "dense", "disk_block", "disk_io", "spmd_io",
+                "spmd_overlap"} - set(bench["calibration"]))
     if missing:
         failures.append(f"calibration kinds missing: {sorted(missing)}")
 
@@ -109,6 +168,10 @@ def main(out_root: str = "OBS_smoke") -> int:
     report = {
         "resident_bitwise": resident_bitwise,
         "disk_bitwise": disk_bitwise,
+        "spmd": ({"bitwise": spmd["bitwise"], "lanes": spmd["lanes"],
+                  "trace_events": spmd["trace_events"],
+                  "stragglers": spmd["fleet"]["straggler_workers"]}
+                 if spmd else None),
         "trace_events": n_events,
         "span_names": span_names,
         "calibration_kinds": sorted(bench["calibration"]),

@@ -1126,12 +1126,16 @@ class PMVEngine:
                 if "store_bytes_read" in rec:  # disk residency: per-iter I/O
                     obs.series("pmv.io_bytes").append(rec["store_bytes_read"])
                     obs.series("pmv.io_overlap").append(rec["store_overlap"])
-                    # SPMD disk: per-worker prefetch-wait vs overlap series
+                    # SPMD disk: per-worker disk / prefetch-wait / overlap
+                    # series (the fleet_report straggler feed)
                     for wk, (ws, ov) in enumerate(zip(
                             rec.get("store_worker_wait_s", ()),
                             rec.get("store_worker_overlap", ()))):
                         obs.series(f"pmv.io_wait_s.w{wk}").append(ws)
                         obs.series(f"pmv.io_overlap.w{wk}").append(ov)
+                    for wk, io_w in enumerate(
+                            rec.get("store_worker_io_s", ())):
+                        obs.series(f"pmv.io_s.w{wk}").append(io_w)
             v = v_new
             if rec.get("overflow", 0.0) > 0:
                 fb = self.fallback_overrides(meta["strategy"]) if _allow_fallback else None
@@ -1193,7 +1197,8 @@ class PMVEngine:
 
 
     _IO_TOTAL_KEYS = ("store_bytes_read", "store_blocks_fetched",
-                      "store_blocks_skipped", "store_io_s", "store_wait_s")
+                      "store_blocks_skipped", "store_io_s", "store_wait_s",
+                      "store_compute_s")
 
     @classmethod
     def _io_totals(cls, per_iter: list[dict]) -> dict:

@@ -10,7 +10,15 @@ pipeline.
   (BENCH_obs.json) and the ``explain(live=True)`` report section.
 - :mod:`repro.obs.profiler` — standalone per-block kernel launch timing
   (``launch.ell`` / ``launch.dense`` spans with plan predictions).
+- :mod:`repro.obs.fleet` — cross-worker trace merging (per-worker pid lanes
+  from ``Recorder.child`` shards) and the ``fleet_report`` straggler /
+  skew / overlap attribution over SPMD disk runs.
+- :mod:`repro.obs.live` — rolling-window instruments, the SLO burn-rate
+  tracker, and the OpenMetrics exporter behind ``PMVServer(telemetry=)``.
 """
+# recorder must import FIRST: repro.core.engine does `from repro.obs import
+# as_recorder`, and fleet/report close the cycle by importing repro.core —
+# by the time they run, the recorder names must already be bound here.
 from repro.obs.recorder import (
     NULL_RECORDER,
     Counter,
@@ -26,6 +34,7 @@ from repro.obs.report import (
     bench_obs_doc,
     calibration_summary,
     collect_launches,
+    format_calibration,
     format_live_report,
     write_bench_obs,
 )
@@ -35,6 +44,23 @@ from repro.obs.trace import (
     to_chrome_trace,
     validate_chrome_trace,
     write_chrome_trace,
+)
+from repro.obs.fleet import (
+    FleetReport,
+    fleet_report,
+    merge_trace_docs,
+    merge_traces,
+    write_fleet_report,
+)
+from repro.obs.live import (
+    LiveTelemetry,
+    SloTracker,
+    TelemetryConfig,
+    WindowedHistogram,
+    WindowedRate,
+    as_telemetry,
+    format_top,
+    openmetrics_text,
 )
 
 __all__ = [
@@ -57,7 +83,21 @@ __all__ = [
     "bench_obs_doc",
     "write_bench_obs",
     "format_live_report",
+    "format_calibration",
     "profile_block_launches",
+    "merge_traces",
+    "merge_trace_docs",
+    "fleet_report",
+    "FleetReport",
+    "write_fleet_report",
+    "LiveTelemetry",
+    "TelemetryConfig",
+    "SloTracker",
+    "WindowedHistogram",
+    "WindowedRate",
+    "as_telemetry",
+    "openmetrics_text",
+    "format_top",
 ]
 
 

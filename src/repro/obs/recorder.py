@@ -30,6 +30,7 @@ asserted by ``tests/test_obs.py``.
 from __future__ import annotations
 
 import json
+import random
 import threading
 import time
 
@@ -90,11 +91,15 @@ class Gauge:
 class Histogram:
     """Streaming distribution with a bounded value reservoir.
 
-    Keeps exact count/sum/min/max plus the first ``HISTOGRAM_RESERVOIR``
-    observations for percentile estimates (enough for per-query latency and
-    per-launch wall-time distributions at test/bench scale)."""
+    Keeps exact count/sum/min/max plus an Algorithm R reservoir of
+    ``HISTOGRAM_RESERVOIR`` observations: every observation — not just the
+    first R — has an R/count chance of being represented, so a long-running
+    server's p50/p99 track the live distribution instead of freezing on
+    warmup latencies.  The replacement draws come from a per-instrument PRNG
+    seeded on the metric name, so a fixed input stream reproduces the exact
+    same reservoir run-to-run."""
 
-    __slots__ = ("name", "count", "sum", "min", "max", "values")
+    __slots__ = ("name", "count", "sum", "min", "max", "values", "_rng")
 
     def __init__(self, name: str):
         self.name = name
@@ -103,6 +108,8 @@ class Histogram:
         self.min = None
         self.max = None
         self.values: list[float] = []
+        # str seeds take random.Random's deterministic (hash-free) path
+        self._rng = random.Random(name)
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -112,6 +119,12 @@ class Histogram:
         self.max = v if self.max is None else max(self.max, v)
         if len(self.values) < HISTOGRAM_RESERVOIR:
             self.values.append(v)
+        else:
+            # Algorithm R: observation i (1-based) replaces a reservoir slot
+            # with probability R/i, keeping the sample uniform over the stream
+            j = self._rng.randrange(self.count)
+            if j < HISTOGRAM_RESERVOIR:
+                self.values[j] = v
 
     def percentile(self, q: float) -> float | None:
         if not self.values:
@@ -278,17 +291,50 @@ _NULL_INSTRUMENT = _NullInstrument()
 
 class Recorder:
     """Collects spans + metrics for one pipeline run (thread-safe: the disk
-    prefetch worker records fetch spans under its own trace thread id)."""
+    prefetch worker records fetch spans under its own trace thread id).
+
+    A recorder can hand out named **child shards** (:meth:`child`): each
+    SPMD worker (and through it its prefetch thread) records spans into its
+    own shard while all shards share the parent's clock *and epoch* — one
+    monotonic anchor, so ``repro.obs.fleet.merge_traces`` can lay the shards
+    out as aligned per-worker process lanes of one Chrome trace.  Metrics
+    stay fleet-wide: children share the parent's :class:`MetricsRegistry`
+    (counters like ``store.prefetch_degraded`` count across the fleet)."""
 
     enabled = True
 
-    def __init__(self, *, clock=time.perf_counter):
+    def __init__(self, *, clock=time.perf_counter, label: str | None = None,
+                 _epoch: float | None = None,
+                 _metrics: MetricsRegistry | None = None):
         self._clock = clock
-        self.epoch = clock()
+        self.epoch = clock() if _epoch is None else _epoch
+        self.label = label
         self.events: list[dict] = []          # finished spans, completion order
-        self.metrics = MetricsRegistry()
+        self.metrics = MetricsRegistry() if _metrics is None else _metrics
         self._lock = threading.Lock()
         self._tids: dict[int, int] = {}       # thread ident -> dense trace tid
+        self.children: dict[str, "Recorder"] = {}
+
+    # -- child shards ---------------------------------------------------
+    def child(self, label: str) -> "Recorder":
+        """The child shard named ``label`` (created on first request).
+        Shares this recorder's clock, epoch, and metrics registry; keeps its
+        own span list and thread-id table (one trace lane per shard)."""
+        with self._lock:
+            ch = self.children.get(label)
+            if ch is None:
+                ch = Recorder(clock=self._clock, label=label,
+                              _epoch=self.epoch, _metrics=self.metrics)
+                self.children[label] = ch
+        return ch
+
+    def shards(self) -> list["Recorder"]:
+        """This recorder followed by its child shards, depth-first in label
+        order — the lane order ``merge_traces`` renders."""
+        out = [self]
+        for _label, ch in sorted(self.children.items()):
+            out.extend(ch.shards())
+        return out
 
     # -- spans ----------------------------------------------------------
     def span(self, name: str, attrs: dict | None = None) -> _Span:
@@ -366,9 +412,17 @@ class NullRecorder:
 
     enabled = False
     events: list = []          # immutable-by-convention shared empty list
+    children: dict = {}        # immutable-by-convention shared empty dict
+    label = None
 
     def __init__(self):
         self.metrics = MetricsRegistry()   # stays empty: instruments are null
+
+    def child(self, label: str) -> "NullRecorder":
+        return self
+
+    def shards(self) -> list:
+        return [self]
 
     def span(self, name: str, attrs: dict | None = None) -> _NullSpan:
         return _NULL_SPAN

@@ -36,29 +36,35 @@ __all__ = [
     "bench_obs_doc",
     "write_bench_obs",
     "format_live_report",
+    "format_calibration",
 ]
 
 
 def collect_launches(recorder) -> list[dict]:
-    """Launch-shaped spans with their predictions, completion order."""
+    """Launch-shaped spans with their predictions, completion order.  Walks
+    the recorder's child shards too: SPMD worker fetches land in per-worker
+    shards (repro.obs.fleet), and their disk_io residuals belong in the same
+    calibration feed."""
     out = []
-    for ev in recorder.events:
-        name = ev["name"]
-        attrs = ev.get("attrs") or {}
-        if name.startswith("launch."):
-            kind = name[len("launch."):]
-        elif name == "store.fetch":
-            kind = "disk_io"
-        else:
-            continue
-        out.append({
-            "kind": kind,
-            "measured_s": ev["dur"],
-            "predicted_s": attrs.get("predicted_s"),
-            "predicted_cost": attrs.get("predicted_cost"),
-            "bytes": attrs.get("bytes"),
-            "attrs": attrs,
-        })
+    shards = getattr(recorder, "shards", None)
+    for rec in (shards() if shards is not None else [recorder]):
+        for ev in rec.events:
+            name = ev["name"]
+            attrs = ev.get("attrs") or {}
+            if name.startswith("launch."):
+                kind = name[len("launch."):]
+            elif name == "store.fetch":
+                kind = "disk_io"
+            else:
+                continue
+            out.append({
+                "kind": kind,
+                "measured_s": ev["dur"],
+                "predicted_s": attrs.get("predicted_s"),
+                "predicted_cost": attrs.get("predicted_cost"),
+                "bytes": attrs.get("bytes"),
+                "attrs": attrs,
+            })
     return out
 
 
@@ -68,8 +74,10 @@ def _kind_summary(launches: list[dict]) -> dict:
     predicted = float(sum(l["predicted_s"] for l in with_pred))
     ratios = [l["measured_s"] / l["predicted_s"] for l in with_pred
               if l["measured_s"] > 0 and l["predicted_s"] > 0]
-    cost_slots = float(sum(l["predicted_cost"] or 0.0 for l in launches))
-    total_bytes = float(sum(l["bytes"] or 0.0 for l in launches))
+    # extra launch records (e.g. FleetReport.calibration_launches, possibly
+    # via a JSON round trip) carry only the core keys — tolerate absences
+    cost_slots = float(sum(l.get("predicted_cost") or 0.0 for l in launches))
+    total_bytes = float(sum(l.get("bytes") or 0.0 for l in launches))
     out = {
         "launches": len(launches),
         "measured_s": measured,
@@ -91,28 +99,37 @@ def _kind_summary(launches: list[dict]) -> dict:
     return out
 
 
-def calibration_summary(*recorders) -> dict:
+def calibration_summary(*recorders, extra: list[dict] | None = None) -> dict:
     """Per-kind predicted-vs-measured residuals across one or more
-    recorders (e.g. a resident profiling pass + a disk-residency run)."""
+    recorders (e.g. a resident profiling pass + a disk-residency run).
+    ``extra`` merges in launch-shaped records built outside span capture —
+    e.g. ``FleetReport.calibration_launches()``'s per-iteration ``spmd_io``
+    / ``spmd_overlap`` residuals."""
     by_kind: dict[str, list[dict]] = {}
     for rec in recorders:
         for launch in collect_launches(rec):
             by_kind.setdefault(launch["kind"], []).append(launch)
+    for launch in extra or ():
+        by_kind.setdefault(launch["kind"], []).append(launch)
     return {kind: _kind_summary(ls) for kind, ls in sorted(by_kind.items())}
 
 
 def bench_obs_doc(recorders: dict, *, overhead: dict | None = None,
-                  meta: dict | None = None) -> dict:
+                  meta: dict | None = None,
+                  extra_launches: list[dict] | None = None,
+                  fleet: dict | None = None) -> dict:
     """The BENCH_obs.json schema: model constants, per-kind calibration
-    residuals (merged across the labelled recorders), per-recorder metric
-    dumps, and the obs-overhead measurement when provided."""
+    residuals (merged across the labelled recorders plus any
+    ``extra_launches``), per-recorder metric dumps, the obs-overhead
+    measurement, and the SPMD fleet report when provided."""
     doc = {
         "model": {
             "slot_time_s": cost_model.SLOT_TIME_S,
             "mxu_slot_advantage": cost_model.MXU_SLOT_ADVANTAGE,
             "disk_read_bw": cost_model.DISK_READ_BW,
         },
-        "calibration": calibration_summary(*recorders.values()),
+        "calibration": calibration_summary(*recorders.values(),
+                                           extra=extra_launches),
         "metrics": {label: rec.metrics.to_dicts()
                     for label, rec in recorders.items()},
     }
@@ -120,6 +137,8 @@ def bench_obs_doc(recorders: dict, *, overhead: dict | None = None,
         doc["overhead"] = overhead
     if meta is not None:
         doc["meta"] = meta
+    if fleet is not None:
+        doc["fleet"] = fleet
     return doc
 
 
@@ -180,4 +199,37 @@ def format_live_report(recorder, *, plan=None) -> str:
             f" ({s['ratio']:.2f}x)")
     if len(lines) == 1:
         lines.append("  (no measured iterations recorded)")
+    return "\n".join(lines)
+
+
+def format_calibration(doc: dict) -> str:
+    """Human-readable table for a BENCH_obs.json document (the
+    ``repro obs report`` CLI): per-kind ratios, the overhead gate numbers,
+    and the fleet straggler digest when the doc carries one."""
+    lines = ["calibration (measured / predicted):"]
+    for kind, s in doc.get("calibration", {}).items():
+        ratio = f"{s['ratio']:8.2f}x" if s.get("ratio") is not None else "       -"
+        med = (f"  median {s['ratio_median']:8.2f}x"
+               if s.get("ratio_median") is not None else "")
+        lines.append(f"  {kind:<14} {s['launches']:5d} launches"
+                     f"  ratio {ratio}{med}")
+    if len(lines) == 1:
+        lines.append("  (none)")
+    ov = doc.get("overhead")
+    if ov:
+        lines.append(f"overhead: off {ov['off_ratio']:.3f}x"
+                     f"  on {ov['on_ratio']:.3f}x  (vs plain)")
+        spmd = ov.get("spmd")
+        if spmd:
+            lines.append(
+                f"overhead[spmd W={spmd.get('workers', '?')}]:"
+                f" off {spmd['off_ratio']:.3f}x  on {spmd['on_ratio']:.3f}x")
+    fleet = doc.get("fleet")
+    if fleet:
+        lines.append(
+            f"fleet: {fleet['workers']} workers,"
+            f" {len(fleet['iterations'])} iterations,"
+            f" skew median {fleet['skew']['median']:.2f}x"
+            f" worst {fleet['skew']['max']:.2f}x,"
+            f" stragglers {fleet['straggler_workers'] or 'none'}")
     return "\n".join(lines)

@@ -39,7 +39,7 @@ from repro.core import algorithms
 from repro.core.engine import PMVEngine, StepConfig, _squeeze0, placement_call
 from repro.core.gimv import GimvSpec
 from repro.faults import FetchDeadlineError, as_injector
-from repro.obs import as_recorder
+from repro.obs import as_recorder, as_telemetry
 from repro.serving.batcher import (
     DEFAULT_BUCKETS,
     RETIREMENT_REASONS,
@@ -259,6 +259,7 @@ class PMVServer:
         faults=None,
         io_retry=None,
         max_queue: int | None = None,
+        telemetry=None,
     ):
         self.store = None
         self.residency = residency
@@ -304,6 +305,15 @@ class PMVServer:
         # are shed immediately (reason='shed') instead of growing the backlog
         # without bound.  None = accept everything (the default).
         self.max_queue = max_queue
+        # live telemetry: rolling-window latency/throughput + SLO burn rates
+        # over the retirement ledger, optionally exported over HTTP
+        # (repro.obs.live).  Host-side bookkeeping only — cannot change a
+        # served result.  True -> defaults; TelemetryConfig / LiveTelemetry
+        # accepted; None/False -> off.
+        self.telemetry = as_telemetry(
+            telemetry, registry=self.obs.metrics if self.obs.enabled else None)
+        if self.telemetry is not None and self.telemetry.config.serve:
+            self.telemetry.start_server()
         self._batcher = QueryBatcher(buckets)
         self._families: dict[tuple, _FamilyState] = {}
         self._family_overrides: dict[tuple, dict] = {}  # overflow fallbacks
@@ -346,19 +356,24 @@ class PMVServer:
             self.obs.counter("serve.shed").add(1)
             return qid
         self._batcher.add(query)
+        if self.telemetry is not None:
+            self.telemetry.record_queue_depth(len(self._batcher))
         return qid
 
     def _retire_unserved(self, query: Query, reason: str,
                          error: str | None = None) -> None:
         """Record a result for a query whose column never (or no longer)
         iterates: shed at admission or lost to a failed batch."""
+        latency = time.perf_counter() - query.t_submit
         self._results[query.qid] = QueryResult(
             qid=query.qid, query=query, vector=None, iterations=0,
-            converged=False,
-            latency_s=time.perf_counter() - query.t_submit,
+            converged=False, latency_s=latency,
             reason=reason, error=error,
         )
         self._retirement_reasons[reason] += 1
+        if self.telemetry is not None:
+            self.telemetry.record_retirement(
+                reason, latency, had_deadline=query.deadline_s is not None)
 
     def drain(self) -> dict[int, QueryResult]:
         """Serve every queued query to convergence; returns {qid: result}."""
@@ -388,7 +403,15 @@ class PMVServer:
         out["retirement_reasons"] = dict(self._retirement_reasons)
         out["batch_occupancy"] = (
             self._occupancy_sum / out["batches"] if out["batches"] else 0.0)
+        if self.telemetry is not None:
+            out["slo"] = self.telemetry.slo.snapshot()
         return out
+
+    def close(self) -> None:
+        """Release resources held beyond the serve loop (today: the
+        telemetry HTTP exporter's daemon thread, if one was started)."""
+        if self.telemetry is not None:
+            self.telemetry.close()
 
     # ------------------------------------------------------------------
     def _family_state(self, key: tuple, sample: Query) -> _FamilyState:
@@ -505,8 +528,13 @@ class PMVServer:
                 v_new = obs.fence(v_new)
                 deltas = np.asarray(deltas)
                 sp.set("active", int(active.sum()))
-            self._stats["wall_s"] += time.perf_counter() - t0
+            iter_wall = time.perf_counter() - t0
+            self._stats["wall_s"] += iter_wall
             self._stats["iterations"] += 1
+            if self.telemetry is not None:
+                self.telemetry.record_iteration(iter_wall,
+                                                active=int(active.sum()))
+                self.telemetry.record_queue_depth(len(self._batcher))
             for k in ("gathered_elems", "exchanged_elems", "logical_elems"):
                 self._stats[k] += float(np.asarray(stats.get(k, 0.0)))
             if float(np.asarray(stats.get("overflow", 0.0))) > 0:
@@ -567,6 +595,10 @@ class PMVServer:
                 self._stats["retired"] += 1
                 wait = max(0.0, starts[q_i] - query.t_submit)
                 self._stats["queue_wait_s"] += wait
+                if self.telemetry is not None:
+                    self.telemetry.record_retirement(
+                        reason, latency, queue_wait_s=wait,
+                        had_deadline=query.deadline_s is not None)
                 if obs.enabled:
                     obs.counter("serve.retired").add(1)
                     obs.histogram("serve.query_latency_s").observe(latency)

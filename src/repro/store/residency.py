@@ -179,6 +179,9 @@ class DiskBlockStore:
                 f"buffer (2 x {self.slice_bytes} B block slices) — raise the "
                 "budget or increase b so block slices shrink")
         self.peak_resident_bytes = 0
+        # sticky: set by PrefetchPipeline._degrade so fleet attribution can
+        # distinguish a dead prefetch thread from a merely slow disk.
+        self.prefetch_degraded = False
         self.stats = ResidencyStats()
 
     def begin_iteration(self) -> None:
@@ -313,6 +316,7 @@ class PrefetchPipeline:
     def _degrade(self) -> None:
         if not self._sync:
             self._sync = True
+            self.store.prefetch_degraded = True
             self.obs.counter("store.prefetch_degraded").add(1)
 
     def _timed_fetch(self, k: int):
@@ -649,6 +653,7 @@ class DiskExecutor:
             "store_blocks_skipped": np.float32(s.blocks_skipped),
             "store_io_s": np.float32(s.io_s),
             "store_wait_s": np.float32(s.wait_s),
+            "store_compute_s": np.float32(s.compute_s),
             "store_overlap": np.float32(s.overlap),
         }
         # SPMD store groups additionally expose per-worker breakdowns
@@ -886,6 +891,7 @@ class HybridDiskExecutor(DiskExecutor):
                 ss.blocks_skipped + ds.blocks_skipped),
             "store_io_s": np.float32(io_s),
             "store_wait_s": np.float32(wait_s),
+            "store_compute_s": np.float32(ss.compute_s + ds.compute_s),
             "store_overlap": np.float32(
                 1.0 if io_s <= 0.0 else max(0.0, 1.0 - wait_s / io_s)),
         }
@@ -905,6 +911,14 @@ class HybridDiskExecutor(DiskExecutor):
                 "store_worker_overlap": [
                     1.0 if i <= 0.0 else max(0.0, 1.0 - w / i)
                     for w, i in zip(wwait, wio)],
+                "store_worker_blocks_fetched": [
+                    a + c for a, c in zip(
+                        sw["store_worker_blocks_fetched"],
+                        dw["store_worker_blocks_fetched"])],
+                "store_worker_prefetch_degraded": [
+                    max(a, c) for a, c in zip(
+                        sw["store_worker_prefetch_degraded"],
+                        dw["store_worker_prefetch_degraded"])],
             })
         else:
             out.update(sw or dw)

@@ -83,7 +83,8 @@ class SpmdDiskGroup:
     """W per-worker shard-view stores presented as ONE DiskBlockStore-shaped
     object, slices device_put with the mesh sharding."""
 
-    def __init__(self, stores: list[DiskBlockStore], mesh, axis_name: str):
+    def __init__(self, stores: list[DiskBlockStore], mesh, axis_name: str,
+                 *, obs=None):
         if not stores:
             raise ValueError("SpmdDiskGroup needs at least one worker store")
         self.stores = stores
@@ -92,7 +93,10 @@ class SpmdDiskGroup:
         self.manifest = stores[0].manifest
         self.striping = stores[0].striping
         self.spec = stores[0].spec
-        self.obs = stores[0].obs
+        # the group-level recorder is the PARENT shard: build() hands each
+        # worker store a child (per-worker trace lane), so stores[0].obs is
+        # the w0 shard, not the fleet root.
+        self.obs = stores[0].obs if obs is None else as_recorder(obs)
         self.block_nnz = stores[0].block_nnz
         self.e_cap = stores[0].e_cap
         # whole-slice / whole-store quantities: the per-worker parts sum to
@@ -120,14 +124,21 @@ class SpmdDiskGroup:
                 "worker owns a whole stripe range")
         recorder = as_recorder(obs)
         injector = as_injector(faults, recorder)
+        # per-worker child shards: each worker store (and its prefetch
+        # thread) records into its own lane, timestamped against the
+        # parent's clock anchor so repro.obs.fleet.merge_traces can lay the
+        # lanes on one timeline.  Children share the parent's metrics
+        # registry, so counters (store.prefetch_degraded, retry.*) still
+        # aggregate fleet-wide.
         stores = [
             DiskBlockStore(manifest.worker_shard_view(w, count), striping,
-                           spec, budget_bytes=budget_bytes, obs=recorder,
+                           spec, budget_bytes=budget_bytes,
+                           obs=recorder.child(f"w{w}"),
                            faults=injector, verify=verify, fault_scope=w,
                            dense_gather_idx=dense_gather_idx)
             for w in range(count)
         ]
-        return cls(stores, mesh, axis_name)
+        return cls(stores, mesh, axis_name, obs=recorder)
 
     @property
     def peak_resident_bytes(self) -> int:
@@ -149,6 +160,15 @@ class SpmdDiskGroup:
             "store_worker_io_s": [float(s.io_s) for s in stats],
             "store_worker_wait_s": [float(s.wait_s) for s in stats],
             "store_worker_overlap": [float(s.overlap) for s in stats],
+            # per-worker physical fetches + the sticky degraded flag: the
+            # group-level max-fold (``_GroupStats.blocks_fetched``) hides
+            # which worker fell behind; fleet_report needs both to tell a
+            # slow disk from a dead prefetch thread.
+            "store_worker_blocks_fetched": [
+                float(s.blocks_fetched) for s in stats],
+            "store_worker_prefetch_degraded": [
+                float(bool(getattr(st, "prefetch_degraded", False)))
+                for st in self.stores],
         }
 
 

@@ -1,0 +1,470 @@
+"""repro.obs.fleet + repro.obs.live: cross-worker trace merging, straggler
+attribution, rolling-window/SLO telemetry, and the `repro obs` CLI.
+
+The SPMD end-to-end cases (W=4 merged trace, injected-straggler attribution)
+live in test_spmd_residency.py — they need the emulated multi-device mesh.
+Here: the unit contracts those cases rely on, with synthetic records and
+fake clocks so every window/burn assertion is deterministic.
+"""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.cli import main as cli_main
+from repro.core import PMVEngine, pagerank
+from repro.graph import rmat
+from repro.obs import (
+    Histogram,
+    LiveTelemetry,
+    Recorder,
+    SloTracker,
+    TelemetryConfig,
+    WindowedHistogram,
+    WindowedRate,
+    as_telemetry,
+    check_span_nesting,
+    fleet_report,
+    format_calibration,
+    format_top,
+    merge_trace_docs,
+    merge_traces,
+    openmetrics_text,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
+from repro.obs.recorder import HISTOGRAM_RESERVOIR, NULL_RECORDER
+from repro.serving import PMVServer, Query
+
+pytestmark = pytest.mark.filterwarnings("error")
+
+
+# -- Histogram reservoir: Algorithm R ----------------------------------------
+
+def test_histogram_reservoir_keeps_late_stream_mass():
+    """A full reservoir must keep admitting: after RESERVOIR early 1.0s and
+    RESERVOIR late 100.0s, the sample must hold ~half late values (the old
+    append-only reservoir held ZERO — p99 stuck at the early regime)."""
+    h = Histogram("lat")
+    for _ in range(HISTOGRAM_RESERVOIR):
+        h.observe(1.0)
+    for _ in range(HISTOGRAM_RESERVOIR):
+        h.observe(100.0)
+    late = sum(1 for v in h.values if v == 100.0) / len(h.values)
+    assert 0.35 < late < 0.65, late
+    assert h.percentile(99) == 100.0
+    assert h.count == 2 * HISTOGRAM_RESERVOIR
+    assert h.min == 1.0 and h.max == 100.0
+
+
+def test_histogram_reservoir_is_deterministic():
+    def fill(name):
+        h = Histogram(name)
+        for i in range(3 * HISTOGRAM_RESERVOIR):
+            h.observe(float(i))
+        return h.values
+
+    assert fill("a") == fill("a")          # seeded by name: reproducible
+    assert fill("a") != fill("b")          # distinct streams decorrelate
+
+
+def test_histogram_under_reservoir_is_exact():
+    h = Histogram("x")
+    for i in range(100):
+        h.observe(float(i))
+    assert sorted(h.values) == [float(i) for i in range(100)]
+    assert h.percentile(50) == pytest.approx(49.5, abs=1.0)
+
+
+# -- Recorder child shards ---------------------------------------------------
+
+def test_child_shards_share_clock_and_metrics():
+    r = Recorder()
+    w0, w1 = r.child("w0"), r.child("w1")
+    assert r.child("w0") is w0              # idempotent per label
+    assert w0.epoch == r.epoch              # shared anchor: aligned lanes
+    assert w0.metrics is r.metrics          # fleet-wide counters
+    w0.counter("store.prefetch_degraded").add(1)
+    assert r.metrics.get("store.prefetch_degraded") is not None
+    assert r.shards() == [r, w0, w1]        # parent first, children by label
+    assert NULL_RECORDER.child("w0") is NULL_RECORDER
+    assert NULL_RECORDER.shards() == [NULL_RECORDER]
+
+
+def test_merge_traces_one_lane_per_shard():
+    r = Recorder()
+    with r.span("main.work"):
+        pass
+    for w in range(3):
+        ch = r.child(f"w{w}")
+        with ch.span("store.fetch"):
+            with ch.span("inner"):
+                pass
+    doc = merge_traces(r)
+    validate_chrome_trace(doc)
+    check_span_nesting(doc)
+    lanes = {ev["pid"]: ev["args"]["name"] for ev in doc["traceEvents"]
+             if ev.get("ph") == "M" and ev["name"] == "process_name"}
+    assert sorted(lanes.values()) == ["main", "w0", "w1", "w2"]
+    by_pid = {}
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") == "X":
+            by_pid.setdefault(lanes[ev["pid"]], []).append(ev["name"])
+    assert by_pid["main"] == ["main.work"]
+    assert sorted(by_pid["w1"]) == ["inner", "store.fetch"]
+
+
+def test_merge_trace_docs_renumbers_disjoint_lanes(tmp_path):
+    docs = []
+    for host in range(2):
+        r = Recorder()
+        with r.span("solve"):
+            pass
+        with r.child("w0").span("store.fetch"):
+            pass
+        docs.append(merge_traces(r))
+    merged = merge_trace_docs(docs, labels=["hostA", "hostB"])
+    validate_chrome_trace(merged)
+    check_span_nesting(merged)
+    lanes = {ev["pid"]: ev["args"]["name"] for ev in merged["traceEvents"]
+             if ev.get("ph") == "M" and ev["name"] == "process_name"}
+    assert sorted(lanes.values()) == [
+        "hostA/main", "hostA/w0", "hostB/main", "hostB/w0"]
+    assert len(lanes) == 4                  # pids disjoint after renumbering
+    with pytest.raises(ValueError, match="labels"):
+        merge_trace_docs(docs, labels=["only-one"])
+
+
+# -- fleet_report straggler attribution --------------------------------------
+
+def _iter_rec(it, io, wait=None, degraded=None, wall=0.5, compute=0.1):
+    w = len(io)
+    return {
+        "iteration": it, "wall_s": wall, "store_compute_s": compute,
+        "store_bytes_read": 4e6, "store_overlap": 0.8,
+        "store_worker_io_s": io,
+        "store_worker_wait_s": wait or [0.0] * w,
+        "store_worker_bytes_read": [1e6] * w,
+        "store_worker_blocks_fetched": [8.0] * w,
+        "store_worker_prefetch_degraded": degraded or [0.0] * w,
+    }
+
+
+def test_fleet_report_flags_only_the_slow_worker():
+    rows = [_iter_rec(0, [0.01, 0.01, 0.3, 0.01]),
+            _iter_rec(1, [0.01, 0.012, 0.011, 0.009])]
+    rep = fleet_report(rows)
+    assert rep.workers == 4
+    assert rep.straggler_workers == [2]
+    (s,) = rep.stragglers
+    assert s["iteration"] == 0 and s["cause"] == "slow_fetch"
+    assert rep.skew["max"] == pytest.approx(30.0)
+    assert "STRAGGLER" in rep.format()
+
+
+def test_fleet_report_diagnoses_dead_prefetch_thread():
+    rows = [_iter_rec(0, [0.01, 0.25, 0.01, 0.01],
+                      degraded=[0.0, 1.0, 0.0, 0.0])]
+    rep = fleet_report(rows)
+    assert rep.straggler_workers == [1]
+    assert rep.stragglers[0]["cause"] == "prefetch_degraded"
+    assert rep.per_worker[1]["prefetch_degraded"] is True
+    assert "prefetch thread dead" in rep.format()
+
+
+def test_fleet_report_absolute_floor_suppresses_noise():
+    """3x ratio on microsecond fetches is NOT a straggler (min_excess_s)."""
+    rep = fleet_report([_iter_rec(0, [1e-5, 1e-5, 3e-5, 1e-5])])
+    assert rep.straggler_workers == []
+
+
+def test_fleet_report_calibration_launches_join_cost_model():
+    rep = fleet_report([_iter_rec(0, [0.01, 0.01, 0.01, 0.01])])
+    launches = rep.calibration_launches()
+    kinds = sorted(l["kind"] for l in launches)
+    assert kinds == ["spmd_io", "spmd_overlap"]
+    io = next(l for l in launches if l["kind"] == "spmd_io")
+    assert io["measured_s"] == pytest.approx(0.01)
+    assert io["predicted_s"] > 0
+    assert rep.overlap["measured_mean"] == pytest.approx(0.8)
+    doc = {"calibration": {}, "fleet": rep.to_dict(),
+           "overhead": {"off_ratio": 1.01, "on_ratio": 1.05,
+                        "spmd": {"workers": 4, "off_ratio": 1.02,
+                                 "on_ratio": 1.08}}}
+    text = format_calibration(doc)
+    assert "fleet: 4 workers" in text and "spmd" in text
+
+
+def test_fleet_report_single_host_fallback():
+    rep = fleet_report([{"iteration": 0, "wall_s": 0.2, "store_io_s": 0.05,
+                         "store_wait_s": 0.01, "store_bytes_read": 1e6,
+                         "store_blocks_fetched": 8.0, "store_overlap": 0.9,
+                         "store_compute_s": 0.1}])
+    assert rep.workers == 1
+    assert rep.straggler_workers == []
+
+
+# -- rolling windows ---------------------------------------------------------
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 1000.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_windowed_histogram_forgets_old_samples():
+    clk = _FakeClock()
+    h = WindowedHistogram("lat", window_s=60.0, clock=clk)
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    clk.t += 30
+    h.observe(100.0)
+    s = h.snapshot()
+    assert s["count"] == 4 and s["p99"] == 100.0
+    clk.t += 45                      # the first three fall out of the window
+    s = h.snapshot()
+    assert s["count"] == 1 and s["p50"] == 100.0
+    assert s["total_count"] == 4     # cumulative survives the window
+    clk.t += 120
+    s = h.snapshot()
+    assert s["count"] == 0 and s["p99"] is None and s["rate_per_s"] == 0.0
+
+
+def test_windowed_rate():
+    clk = _FakeClock()
+    r = WindowedRate("retired", window_s=10.0, clock=clk)
+    for _ in range(20):
+        r.add()
+    assert r.snapshot()["rate_per_s"] == pytest.approx(2.0)
+    clk.t += 11
+    assert r.snapshot()["rate_per_s"] == 0.0
+    assert r.snapshot()["total_count"] == 20
+
+
+# -- SLO burn rate -----------------------------------------------------------
+
+def test_slo_burn_rate_math():
+    clk = _FakeClock()
+    slo = SloTracker(latency_target_s=0.1, latency_objective=0.99,
+                     deadline_objective=0.9, windows=(60.0,), clock=clk)
+    for _ in range(95):
+        slo.record("completed", 0.05)
+    for _ in range(3):
+        slo.record("completed", 0.5)             # target miss: latency-bad
+    slo.record("deadline_exceeded", 0.2, had_deadline=True)
+    slo.record("completed", 0.05, had_deadline=True)
+    s = slo.snapshot()
+    lat = s["latency"]
+    # 4 latency-bad of 100 -> 4% errors against a 1% budget: burn 4x
+    assert lat["total"]["error_rate"] == pytest.approx(0.04)
+    assert lat["total"]["burn_rate"] == pytest.approx(4.0)
+    assert lat["windows"]["60s"]["burn_rate"] == pytest.approx(4.0)
+    dl = s["deadline"]
+    # 1 bad of 2 deadline-carrying -> 50% against a 10% budget: burn 5x
+    assert dl["total"]["events"] == 2
+    assert dl["total"]["burn_rate"] == pytest.approx(5.0)
+    clk.t += 61                                  # window empties, totals stay
+    s = slo.snapshot()
+    assert s["latency"]["windows"]["60s"]["events"] == 0
+    assert s["latency"]["total"]["error_rate"] == pytest.approx(0.04)
+
+
+def test_slo_without_target_counts_only_failures():
+    slo = SloTracker(windows=(60.0,))
+    slo.record("completed", 99.0)                # no target: slow-but-done ok
+    slo.record("shed", 0.0)
+    assert slo.snapshot()["latency"]["total"]["bad"] == 1
+
+
+# -- OpenMetrics exposition --------------------------------------------------
+
+def test_openmetrics_text_shape():
+    clk = _FakeClock()
+    live = LiveTelemetry(TelemetryConfig(latency_target_s=0.1, serve=False),
+                         clock=clk)
+    live.record_retirement("completed", 0.05, queue_wait_s=0.01)
+    live.record_retirement("shed", 0.0)
+    live.record_iteration(0.02, active=3)
+    live.record_queue_depth(7)
+    r = Recorder()
+    r.counter("serve.retired").add(2)
+    r.histogram("serve.query_latency_s").observe(0.05)
+    live.registry = r.metrics
+    text = live.openmetrics()
+    assert text.endswith("# EOF\n")
+    assert "# TYPE pmv_serve_retired_total counter" in text
+    assert "pmv_serve_retired_total 2.0" in text       # registry counter
+    assert 'pmv_serve_query_latency_seconds{window="60s",quantile="0.99"}' in text
+    assert 'pmv_slo_burn_rate{objective="latency",window="total"}' in text
+    assert "pmv_serve_queue_depth 7.0" in text
+    assert "pmv_serve_active_columns 3.0" in text
+    # every sample line parses: name{labels} value
+    for line in text.splitlines():
+        if line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        assert name and (value == "NaN" or float(value) is not None), line
+    assert format_top(live.snapshot())                 # renders
+
+
+def test_as_telemetry_knob():
+    assert as_telemetry(None) is None
+    assert as_telemetry(False) is None
+    t = as_telemetry(True)
+    assert isinstance(t, LiveTelemetry) and t.config.serve is True
+    cfg = TelemetryConfig(serve=False, latency_target_s=0.5)
+    t2 = as_telemetry(cfg)
+    assert t2.slo.latency_target_s == 0.5
+    assert as_telemetry(t2) is t2
+    with pytest.raises(TypeError):
+        as_telemetry(object())
+
+
+# -- the HTTP exporter + PMVServer integration -------------------------------
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        return resp.read().decode(), resp.headers.get("Content-Type", "")
+
+
+def test_live_telemetry_http_endpoints():
+    live = LiveTelemetry(TelemetryConfig(serve=False))
+    live.record_retirement("completed", 0.05)
+    url = live.start_server()
+    try:
+        assert url == live.start_server()              # idempotent
+        body, ctype = _get(url + "/metrics")
+        assert "version=0.0.4" in ctype
+        assert body.endswith("# EOF\n")
+        body, ctype = _get(url + "/metrics.json")
+        assert ctype.startswith("application/json")
+        snap = json.loads(body)
+        assert snap["retired"]["total_count"] == 1
+        body, _ = _get(url + "/healthz")
+        assert body == "ok\n"
+    finally:
+        live.close()
+    assert live.url is None
+
+
+def test_server_telemetry_slo_over_retirement_ledger():
+    n, b = 256, 4
+    edges = rmat(8, 1500, seed=3)
+    srv = PMVServer(edges, n, b=b, strategy="vertical", buckets=(4,),
+                    max_queue=2, obs=True,
+                    telemetry=TelemetryConfig(latency_target_s=60.0,
+                                              serve=False))
+    try:
+        queries = [Query("rwr", source=i, tol=1e-6, deadline_s=120.0)
+                   for i in range(3)]
+        qids = [srv.submit(q) for q in queries]        # third is shed
+        res = srv.drain()
+        reasons = sorted(res[q].reason for q in qids)
+        assert reasons == ["completed", "completed", "shed"]
+        stats = srv.stats()
+        slo = stats["slo"]
+        assert slo["latency"]["total"]["events"] == 3
+        assert slo["latency"]["total"]["bad"] == 1     # the shed query
+        assert slo["deadline"]["total"]["events"] == 3
+        assert slo["deadline"]["total"]["bad"] == 1
+        snap = srv.telemetry.snapshot()
+        assert snap["retired"]["total_count"] == 3
+        assert snap["latency"]["count"] == 3
+        assert snap["iteration_wall"]["count"] > 0
+        text = openmetrics_text(live=srv.telemetry, registry=srv.obs.metrics)
+        assert "pmv_serve_retired_total" in text
+    finally:
+        srv.close()
+
+
+def test_server_telemetry_http_scrape_during_serving():
+    n, b = 256, 4
+    edges = rmat(8, 1500, seed=4)
+    srv = PMVServer(edges, n, b=b, strategy="vertical", buckets=(4,),
+                    telemetry=True)
+    try:
+        url = srv.telemetry.url
+        assert url is not None                          # serve=True default
+        srv.serve([Query("rwr", source=0, tol=1e-6)])
+        body, _ = _get(url + "/metrics")
+        assert "pmv_serve_retired_total 1.0" in body
+    finally:
+        srv.close()
+
+
+def test_server_telemetry_off_by_default():
+    n, b = 128, 4
+    edges = rmat(7, 600, seed=5)
+    srv = PMVServer(edges, n, b=b, strategy="vertical", buckets=(4,))
+    assert srv.telemetry is None
+    srv.serve([Query("rwr", source=0, tol=1e-6)])
+    assert "slo" not in srv.stats()
+    srv.close()                                        # no-op, must not raise
+
+
+# -- the `repro obs` CLI -----------------------------------------------------
+
+def test_cli_obs_merge_and_report(tmp_path, capsys):
+    paths = []
+    for host in range(2):
+        r = Recorder()
+        with r.child("w0").span("store.fetch"):
+            pass
+        p = tmp_path / f"host{host}.json"
+        p.write_text(json.dumps(merge_traces(r)))
+        paths.append(str(p))
+    out = str(tmp_path / "merged.json")
+    rc = cli_main(["obs", "merge", out, *paths, "--labels", "hostA", "hostB"])
+    assert rc == 0
+    with open(out) as f:
+        merged = json.load(f)
+    validate_chrome_trace(merged)
+    assert "2 lanes" in capsys.readouterr().out or merged["traceEvents"]
+
+    bench = tmp_path / "BENCH_obs.json"
+    rep = fleet_report([_iter_rec(0, [0.01, 0.01, 0.3, 0.01])])
+    bench.write_text(json.dumps({
+        "calibration": {"spmd_io": {"launches": 1, "measured_s": 0.3,
+                                    "predicted_s": 0.1, "ratio": 3.0,
+                                    "ratio_median": 3.0}},
+        "fleet": rep.to_dict()}))
+    assert cli_main(["obs", "report", str(bench)]) == 0
+    out_text = capsys.readouterr().out
+    assert "spmd_io" in out_text and "stragglers [2]" in out_text
+
+
+def test_cli_obs_top(capsys):
+    live = LiveTelemetry(TelemetryConfig(serve=False))
+    live.record_retirement("completed", 0.042)
+    url = live.start_server()
+    try:
+        assert cli_main(["obs", "top", url, "--count", "1"]) == 0
+        out = capsys.readouterr().out
+        assert "pmv serve" in out and "latency" in out
+    finally:
+        live.close()
+
+
+# -- bitwise: engine solve unchanged by child-shard tracing ------------------
+
+def test_single_host_disk_solve_bitwise_with_obs(tmp_path):
+    from repro.store import ingest_edges
+
+    n, b = 200, 4
+    edges = rmat(8, 1200, seed=9)[: 1200] % n
+    man = ingest_edges(edges, n, b, str(tmp_path / "s"))
+    spec = pagerank(n)
+    off = PMVEngine.from_store(man, residency="disk", strategy="vertical")
+    on = PMVEngine.from_store(man, residency="disk", strategy="vertical",
+                              obs=True)
+    r_off = off.run(spec, max_iters=3, tol=0.0)
+    r_on = on.run(spec, max_iters=3, tol=0.0)
+    assert np.array_equal(r_off.v, r_on.v)
+    rep = fleet_report(r_on)
+    assert rep.workers == 1                   # single-host fold
+    doc = merge_traces(on.obs)
+    validate_chrome_trace(doc)
+    check_span_nesting(doc)

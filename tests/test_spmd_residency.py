@@ -188,6 +188,98 @@ def test_spmd_disk_degraded_worker_still_bitwise():
     assert "DEGRADED_OK" in _run(_DEGRADED, timeout=600)
 
 
+# -- fleet tracing: per-worker lanes in one merged Chrome trace --------------
+_TRACED = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import re
+import tempfile
+import numpy as np
+import jax
+from repro.core import PMVEngine, pagerank
+from repro.obs import (check_span_nesting, fleet_report, merge_traces,
+                       validate_chrome_trace)
+from repro.store import ingest_edges
+
+n, b, W = 240, 8, 4
+rng = np.random.default_rng(11)
+edges = rng.integers(0, n, size=(3000, 2)).astype(np.int64)
+with tempfile.TemporaryDirectory() as d:
+    man = ingest_edges(edges, n, b, d + "/s")
+    spec = pagerank(n)
+    mesh = jax.make_mesh((W,), ("workers",))
+    off = PMVEngine.from_store(man, residency="disk", strategy="vertical",
+                               mesh=mesh).run(spec, max_iters=4, tol=0.0)
+    eng = PMVEngine.from_store(man, residency="disk", strategy="vertical",
+                               mesh=mesh, obs=True)
+    r = eng.run(spec, max_iters=4, tol=0.0)
+    assert np.array_equal(off.v, r.v), "tracing changed the solve"
+    doc = merge_traces(eng.obs)
+    validate_chrome_trace(doc)
+    check_span_nesting(doc)
+    lanes = {ev["pid"]: ev["args"]["name"] for ev in doc["traceEvents"]
+             if ev.get("ph") == "M" and ev["name"] == "process_name"}
+    worker_lanes = sorted(v for v in lanes.values() if re.fullmatch(r"w\d+", v))
+    assert worker_lanes == [f"w{i}" for i in range(W)], lanes
+    assert "main" in lanes.values()
+    # every worker lane carries its own fetch spans, and ONLY worker lanes do
+    fetch_pids = {ev["pid"] for ev in doc["traceEvents"]
+                  if ev.get("ph") == "X" and ev["name"] == "store.fetch"}
+    assert fetch_pids == {pid for pid, lab in lanes.items()
+                          if re.fullmatch(r"w\d+", lab)}, (fetch_pids, lanes)
+    rep = fleet_report(r)
+    assert rep.workers == W
+    assert len(rep.iterations) == r.iterations
+    print("TRACED_OK")
+'''
+
+
+def test_spmd_disk_merged_trace_one_lane_per_worker():
+    assert "TRACED_OK" in _run(_TRACED, timeout=600)
+
+
+# -- straggler attribution: an injected slow disk on ONE worker --------------
+_STRAGGLER = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+import numpy as np
+import jax
+from repro.core import PMVEngine, pagerank
+from repro.faults import FaultPlan, SlowFetch
+from repro.obs import fleet_report
+from repro.store import ingest_edges
+
+n, b, W = 240, 8, 4
+rng = np.random.default_rng(5)
+edges = rng.integers(0, n, size=(3000, 2)).astype(np.int64)
+with tempfile.TemporaryDirectory() as d:
+    man = ingest_edges(edges, n, b, d + "/s")
+    spec = pagerank(n)
+    mesh = jax.make_mesh((W,), ("workers",))
+    clean = PMVEngine.from_store(man, residency="disk", strategy="vertical",
+                                 mesh=mesh).run(spec, max_iters=4, tol=0.0)
+    plan = FaultPlan(events=(SlowFetch(block=1, delay_s=0.3, worker=2),),
+                     seed=0)
+    eng = PMVEngine.from_store(man, residency="disk", strategy="vertical",
+                               mesh=mesh, faults=plan, obs=True)
+    r = eng.run(spec, max_iters=4, tol=0.0)
+    assert np.array_equal(clean.v, r.v), "slow fetch changed the result"
+    rep = fleet_report(r)
+    assert rep.straggler_workers == [2], rep.stragglers
+    assert all(s["cause"] == "slow_fetch" for s in rep.stragglers)
+    assert rep.skew["max"] > 2.0, rep.skew
+    kinds = {l["kind"] for l in rep.calibration_launches()}
+    assert kinds >= {"spmd_io", "spmd_overlap"}, kinds
+    assert rep.format()   # renders without error
+    print("STRAGGLER_OK")
+'''
+
+
+def test_spmd_disk_straggler_attributed_to_injected_worker():
+    assert "STRAGGLER_OK" in _run(_STRAGGLER, timeout=600)
+
+
 # -- physical shard round trip ----------------------------------------------
 def _tree_bytes(root: str) -> dict:
     out = {}
